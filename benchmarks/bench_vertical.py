@@ -1,0 +1,57 @@
+"""Fig 10/11: SEM-SpMM with a 32-column dense matrix too big for "memory",
+varying how many columns fit; plus the overhead breakdown.
+
+Paper claims: >= 25% of IM with 1 column in memory, > 50% with > 4, ~80%
+with all 32; the dominant overhead is lost data locality from vertical
+partitioning (Vert-part), then sparse-matrix streaming (SpM-EM)."""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+from typing import Dict, List
+
+from repro.apps.common import IMOperator, SEMOperator
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.io.storage import DenseStore, TileStore
+from repro.core.formats import to_chunked
+from repro.sparse.generate import rmat
+
+from benchmarks.common import run_and_save, timeit
+
+
+def bench() -> List[Dict]:
+    g = rmat(16, 16, seed=17)          # 65k vertices, ~1M edges
+    p = 32
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((g.n_cols, p)).astype(np.float32)
+
+    im = IMOperator.from_coo(g)
+    t_im = timeit(lambda: im.dot(x))
+
+    ct = to_chunked(g, T=4096, C=1024)
+    store = TileStore.write(tempfile.mktemp(prefix="vert_spm_"), ct)
+    sem = SEMSpMM(store, SEMConfig())
+    x_store = DenseStore(tempfile.mktemp(prefix="vert_x_"), g.n_cols, p)
+    x_store.write_rows(0, x)
+    rows = []
+    for cols_fit in (1, 2, 4, 8, 16, 32):
+        out_store = DenseStore(tempfile.mktemp(prefix="vert_o_"),
+                               g.n_rows, p)
+        t = timeit(lambda: sem.multiply_external(
+            x_store, out_store, cols_in_memory=cols_fit), repeat=1)
+        np.testing.assert_allclose(out_store.to_array(), im.dot(x),
+                                   rtol=2e-3, atol=2e-3)
+        rows.append({"cols_in_memory": cols_fit,
+                     "t_sem_ms": t * 1e3, "t_im_ms": t_im * 1e3,
+                     "frac_of_im": t_im / t if t else 0.0,
+                     "passes": -(-p // cols_fit)})
+    return rows
+
+
+def main() -> List[Dict]:
+    return run_and_save("fig10_vertical", bench)
+
+
+if __name__ == "__main__":
+    main()

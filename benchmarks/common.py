@@ -1,0 +1,56 @@
+"""Shared benchmark infrastructure.
+
+Container-scale protocol (DESIGN.md §7): graphs are scaled to 1M-4M edges,
+wall-times are indicative (1 CPU core), and the paper's *claims' shapes*
+(ratios, crossovers, byte counts) are the validated quantities.  Byte-count
+benchmarks (Fig 2 / Fig 8 / Table 2 volumes) are machine-independent and
+exact.  Each bench writes results/bench/<name>.json and prints a CSV.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "bench")
+
+
+def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def save(name: str, rows: List[Dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def print_csv(name: str, rows: List[Dict]) -> None:
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    cols = list(rows[0].keys())
+    print(f"# {name}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+
+
+def run_and_save(name: str, fn: Callable[[], List[Dict]]) -> List[Dict]:
+    rows = fn()
+    save(name, rows)
+    print_csv(name, rows)
+    return rows

@@ -1,0 +1,57 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig12]
+
+Writes results/bench/<name>.json per bench and prints CSVs.  Asserts inside
+each bench validate the paper's claims (byte formulas, balance bounds,
+convergence) — a failed claim fails the run."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("fig2_format_size", "benchmarks.bench_format_size"),
+    ("fig5_sem_vs_im", "benchmarks.bench_sem_vs_im"),
+    ("fig6_sbm", "benchmarks.bench_sbm"),
+    ("fig7_vs_baseline", "benchmarks.bench_vs_baseline"),
+    ("fig8_memory", "benchmarks.bench_memory"),
+    ("fig10_vertical", "benchmarks.bench_vertical"),
+    ("fig12_opt_ablation", "benchmarks.bench_opt_ablation"),
+    ("fig13_io_opts", "benchmarks.bench_io_opts"),
+    ("table2_convert", "benchmarks.bench_convert"),
+    ("fig14_16_apps", "benchmarks.bench_apps"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of name prefixes to run")
+    args = ap.parse_args(argv)
+    prefixes = args.only.split(",") if args.only else None
+
+    failures = []
+    for name, module in BENCHES:
+        if prefixes and not any(name.startswith(p) for p in prefixes):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"[bench] {name}: ok ({time.time() - t0:.1f}s)\n")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+            print(f"[bench] {name}: FAILED {e}\n")
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    print("all benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""Shared linear-operator abstraction for the applications.
+
+Every app consumes ``A @ X`` through :class:`Operator`, which is backed by
+either the in-memory chunked path (IM) or the semi-external executor (SEM) —
+the paper's IM-SpMM / SEM-SpMM pair behind one interface.
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import COO, ChunkedTiles, to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.core.spmm import spmm_chunked
+from repro.io.storage import TileStore
+
+
+class Operator:
+    """A (n_rows x n_cols) sparse operator with `.dot(X)`."""
+
+    def __init__(self, n_rows: int, n_cols: int):
+        self.n_rows, self.n_cols = n_rows, n_cols
+
+    def dot(self, x: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def io_bytes_read(self) -> int:
+        return 0
+
+
+class IMOperator(Operator):
+    """In-memory chunked SpMM (IM-SpMM)."""
+
+    def __init__(self, ct: ChunkedTiles):
+        super().__init__(ct.n_rows, ct.n_cols)
+        self.ct = ct
+
+    @classmethod
+    def from_coo(cls, coo: COO, T: int = 4096, C: int = 1024) -> "IMOperator":
+        return cls(to_chunked(coo, T=T, C=C))
+
+    def dot(self, x: np.ndarray) -> np.ndarray:
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[:, None]
+        out = np.asarray(spmm_chunked(self.ct, jnp.asarray(x, jnp.float32)))
+        return out[:, 0] if squeeze else out
+
+
+class SEMOperator(Operator):
+    """Semi-external SpMM streaming from a TileStore."""
+
+    def __init__(self, store: TileStore, config: Optional[SEMConfig] = None):
+        h = store.header
+        super().__init__(h["n_rows"], h["n_cols"])
+        self.sem = SEMSpMM(store, config)
+
+    @classmethod
+    def from_coo(cls, coo: COO, path: Optional[str] = None, T: int = 4096,
+                 C: int = 1024, config: Optional[SEMConfig] = None
+                 ) -> "SEMOperator":
+        ct = to_chunked(coo, T=T, C=C)
+        if path is None:
+            path = tempfile.mktemp(prefix="semspmm_")
+        return cls(TileStore.write(path, ct), config)
+
+    def dot(self, x: np.ndarray) -> np.ndarray:
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[:, None]
+        out = self.sem.multiply(x)
+        return out[:, 0] if squeeze else out
+
+    @property
+    def io_bytes_read(self) -> int:
+        return self.sem.io_stats.bytes_read

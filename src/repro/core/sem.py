@@ -1,0 +1,129 @@
+"""The semi-external-memory SpMM executor (the paper's core system).
+
+Data placement policy (paper §3.1/§3.6):
+* the sparse matrix always lives on the slow tier and is *streamed*;
+* the input dense matrix — or as many of its columns as fit the memory
+  budget — lives in fast memory (``IO_in = ncp/M' * [E - (M - M')]`` is
+  minimized by spending memory on dense columns, not on caching the sparse
+  matrix, because E > M);
+* the output is buffered per tile-row block and written at most once.
+
+``SEMSpMM.multiply`` handles all three regimes:
+1. X fits in memory, output fits in memory  -> one streaming pass, in-memory out.
+2. X fits, output streamed                  -> one pass, write-once out blocks.
+3. X wider than budget                      -> vertical partitioning: one
+   streaming pass of the sparse matrix per column slice (paper §3.3/§5.3).
+
+``mode="im"`` keeps the sparse matrix in memory (IM-SpMM) — the paper's
+own overhead-quantification baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import ChunkedTiles
+from repro.io.storage import DenseStore, IOStats, TileStore
+
+
+@dataclasses.dataclass
+class SEMConfig:
+    memory_budget_bytes: int = 1 << 30
+    chunk_batch: int = 256        # chunks per I/O (large sequential reads)
+    prefetch: int = 2             # async prefetch depth
+    use_async: bool = True        # paper's async I/O + polling
+    use_pallas: bool = False      # interpret-mode Pallas kernel (slow on CPU)
+
+
+@partial(jax.jit, static_argnames=("T", "semiring"), donate_argnums=(5,))
+def _batch_step(meta, row_l, col_l, vals, x_pad, out_blocks, T: int,
+                semiring: str = "plus_times"):
+    """Apply one batch of chunks: out_blocks (n_tile_rows, T, p) += A_batch @ X."""
+    x_blocks = x_pad.reshape(-1, T, x_pad.shape[1])
+
+    def step(out, chunk):
+        m, r, c, v = chunk
+        gathered = jnp.take(x_blocks[m[1]], c, axis=0)
+        contrib = v[:, None] * gathered
+        blk = jnp.zeros((T, x_pad.shape[1]), x_pad.dtype).at[r].add(contrib)
+        return out.at[m[0]].add(blk), None
+
+    out_blocks, _ = jax.lax.scan(step, out_blocks, (meta, row_l, col_l, vals))
+    return out_blocks
+
+
+class SEMSpMM:
+    """Semi-external-memory SpMM over a :class:`TileStore`."""
+
+    def __init__(self, store: TileStore, config: Optional[SEMConfig] = None,
+                 mode: str = "sem"):
+        assert mode in ("sem", "im")
+        self.store = store
+        self.cfg = config or SEMConfig()
+        self.mode = mode
+        h = store.header
+        self.n_rows, self.n_cols, self.T = h["n_rows"], h["n_cols"], h["T"]
+        self.n_tile_rows = -(-self.n_rows // self.T)
+        self.padded_cols = (-(-self.n_cols // self.T)) * self.T
+        self._cached = None
+        if mode == "im":  # IM-SpMM: sparse matrix resident in memory
+            self._cached = list(store.stream(self.cfg.chunk_batch,
+                                             use_async=False))
+
+    # -- regime 1/2: X in memory ------------------------------------------
+    def multiply(self, x: np.ndarray) -> np.ndarray:
+        """A @ X with X (n, p) in memory; returns in-memory result."""
+        p = x.shape[1]
+        x_pad = jnp.zeros((self.padded_cols, p), jnp.float32)
+        x_pad = x_pad.at[: x.shape[0]].set(jnp.asarray(x, jnp.float32))
+        out = jnp.zeros((self.n_tile_rows, self.T, p), jnp.float32)
+        batches = (self._cached if self._cached is not None else
+                   self.store.stream(self.cfg.chunk_batch,
+                                     prefetch=self.cfg.prefetch,
+                                     use_async=self.cfg.use_async))
+        if self.cfg.use_pallas:
+            from repro.kernels.ops import spmm_pallas_batch
+            for meta, rows, cols, vals in batches:
+                out = spmm_pallas_batch(meta, rows, cols, vals, x_pad, out,
+                                        self.T)
+        else:
+            for meta, rows, cols, vals in batches:
+                out = _batch_step(jnp.asarray(meta), jnp.asarray(rows),
+                                  jnp.asarray(cols), jnp.asarray(vals),
+                                  x_pad, out, self.T)
+        return np.asarray(out.reshape(-1, p)[: self.n_rows])
+
+    # -- regime 3: vertical partitioning ------------------------------------
+    def columns_that_fit(self, p_total: int) -> int:
+        """How many dense columns fit the memory budget (input slice +
+        output slice + one chunk batch of buffers), min 1 (paper: minimum
+        memory requirement is O(n) — one column)."""
+        per_col = 4 * (self.n_rows + self.padded_cols)  # in + out column
+        overhead = self.store.header["record"] * self.cfg.chunk_batch * (
+            self.cfg.prefetch + 1)
+        fit = (self.cfg.memory_budget_bytes - overhead) // per_col
+        return int(max(1, min(p_total, fit)))
+
+    def multiply_external(self, x_store: DenseStore, out_store: DenseStore,
+                          cols_in_memory: Optional[int] = None) -> IOStats:
+        """A @ X with X on the slow tier: vertical partitioning.  Each slice
+        triggers one full streaming pass over the sparse matrix (paper
+        §3.6: passes = ceil(p / p_fit))."""
+        p_total = x_store.n_cols
+        p_fit = cols_in_memory or self.columns_that_fit(p_total)
+        for c0 in range(0, p_total, p_fit):
+            c1 = min(c0 + p_fit, p_total)
+            x_slice = x_store.read_cols(c0, c1)     # slow tier -> memory
+            out_slice = self.multiply(x_slice)       # stream sparse matrix
+            out_store.write_cols(c0, out_slice)      # write-once
+        out_store.flush()
+        return out_store.stats
+
+    @property
+    def io_stats(self) -> IOStats:
+        return self.store.stats

@@ -1,0 +1,58 @@
+"""Generalized SpMM over semirings.
+
+The paper notes PageRank-style graph algorithms are "generalized sparse
+matrix multiplication" [4].  A semiring supplies (multiply, add, zero);
+``plus_times`` is ordinary SpMM, ``or_and`` gives BFS frontiers, ``min_plus``
+gives shortest-path relaxation, ``max_times`` gives widest-path/belief-style
+updates.  The jnp implementations below are the oracle path; the Pallas
+kernels specialize plus_times (the MXU only does plus-times — other semirings
+run on the VPU gather path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    mul: Callable
+    add_segment: Callable  # (data, segment_ids, num_segments) -> reduced
+    zero: float
+
+    def is_plus_times(self) -> bool:
+        return self.name == "plus_times"
+
+
+def _segment_sum(data, seg, n):
+    return jnp.zeros((n,) + data.shape[1:], data.dtype).at[seg].add(data)
+
+
+def _make_segment_max(zero):
+    def seg_max(data, seg, n):
+        init = jnp.full((n,) + data.shape[1:], zero, data.dtype)
+        return init.at[seg].max(data)
+    return seg_max
+
+
+def _make_segment_min(zero):
+    def seg_min(data, seg, n):
+        init = jnp.full((n,) + data.shape[1:], zero, data.dtype)
+        return init.at[seg].min(data)
+    return seg_min
+
+
+# Each reducer inits at the ring's additive identity, so empty rows come out
+# as the identity in every execution path.
+PLUS_TIMES = Semiring("plus_times", lambda a, x: a * x, _segment_sum, 0.0)
+OR_AND = Semiring("or_and", lambda a, x: jnp.logical_and(a != 0, x != 0)
+                  .astype(x.dtype), _make_segment_max(0.0), 0.0)
+MIN_PLUS = Semiring("min_plus", lambda a, x: a + x,
+                    _make_segment_min(jnp.inf), jnp.inf)
+MAX_TIMES = Semiring("max_times", lambda a, x: a * x,
+                     _make_segment_max(-jnp.inf), -jnp.inf)
+
+SEMIRINGS = {s.name: s for s in (PLUS_TIMES, OR_AND, MIN_PLUS, MAX_TIMES)}

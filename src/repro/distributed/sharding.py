@@ -1,0 +1,229 @@
+"""Logical-axis sharding rules and the `shard` constraint helper.
+
+Models annotate activations with *logical* names (``"act_btd"`` etc.); the
+active :class:`ShardingCtx` maps them to PartitionSpecs over the production
+mesh ``(pod, data, model)`` (or ``(data, model)`` single-pod).  Smoke tests
+run with no context -> every annotation is a no-op, so the same model code
+runs on 1 CPU device and on 512 devices.
+
+Axis plan (DESIGN.md §5):
+* ``pod`` x ``data`` — batch / gradient reduction (hierarchical: RS inside
+  pod over ``data``, AR across ``pod``).
+* ``model`` — TP: attention heads, MLP hidden, MoE experts (EP), vocab.
+* FSDP (ZeRO-3-style) parameter sharding on ``data`` for >= 7B dense archs;
+  GSPMD inserts the per-layer all-gathers inside the remat'd scan body.
+* Uneven dims (e.g. 40 heads over 16 model shards, vocab 122753) rely on
+  GSPMD padding — documented, and flagged in §Perf where wasteful.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: jax.sharding.Mesh
+    batch_axes: tuple            # ("pod", "data") or ("data",)
+    model_axis: str = "model"
+    fsdp: bool = False           # shard params on the data axis too
+    seq_shard_decode: bool = False  # long-context: shard KV cache sequence
+    seq_parallel: bool = False   # shard layer-boundary activations on seq
+    kv_axis: str = "heads"       # "heads" | "hd" | "none": KV model placement
+    attn_q_axis: str = "heads"   # "heads" | "hd" | "seq" | "none".  "seq"
+                                 # shards the QUERY sequence on the model
+                                 # axis (ring-attention-style work split)
+                                 # for train/prefill when heads don't
+                                 # divide: KV replicates, scores stay
+                                 # local, attention flops shard by q rows.
+    expert_tp2: bool = False     # serve-time: shard expert F dim on "data"
+                                 # (EP x TP2 - no weight all-gather per step)
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return "data" if self.fsdp else None
+
+    def spec(self, name: str) -> P:
+        b, m, f = self.batch_axes, self.model_axis, self.fsdp_axis
+        table = {
+            # activations
+            "act_btd": P(b, None, None),
+            "act_btd_sp": P(b, m, None),   # sequence-parallel layer boundary
+            "act_btf": P(b, None, m),          # mlp hidden
+            "act_bthd": {"heads": P(b, None, m, None),
+                         "hd": P(b, None, None, m),
+                         "seq": P(b, m, None, None),
+                         "none": P(b, None, None, None)}[self.attn_q_axis],
+            "act_bhts": P(b, m, None, None),   # attention scores
+            "logits": P(b, None, m),           # (B, L, vocab)
+            "tokens": P(b, None),
+            # kv cache (B, S, kv_heads, hd): model axis on heads when they
+            # divide it, else on head_dim, else replicated (see kv_axis)
+            "kv_cache": P(b, "data" if self.seq_shard_decode else None,
+                          m if self.kv_axis == "heads" else None,
+                          m if self.kv_axis == "hd" else None),
+            "ssm_state": P(b, m, None, None),  # (B, H, dh, N)
+            # params
+            "p_embed": P(m, f),                # (vocab, d)
+            "p_norm": P(None),
+            "p_attn_qkv": {"heads": P(f, m, None),
+                           "hd": P(f, None, m),
+                           "seq": P(f, None, None),
+                           "none": P(f, None, None)}[self.attn_q_axis],
+            "p_attn_o": {"heads": P(m, None, f),
+                         "hd": P(None, m, f),
+                         "seq": P(None, None, f),
+                         "none": P(None, None, f)}[self.attn_q_axis],
+            "p_mlp_in": P(f, m),               # (d, ff)
+            "p_mlp_out": P(m, f),              # (ff, d)
+            "p_router": P(f, None),            # (d, experts)
+            "p_expert_in": (P(m, None, "data") if self.expert_tp2
+                            else P(m, f, None)),    # (E, d, ff)
+            "p_expert_out": (P(m, "data", None) if self.expert_tp2
+                             else P(m, None, f)),   # (E, ff, d)
+            "p_ssm_in": P(f, m),               # (d, inner_proj)
+            "p_ssm_out": P(m, f),              # (inner, d)
+            "p_ssm_small": P(m),               # per-head A, D, dt_bias
+            "p_conv": P(None, m),              # (k, inner)
+            # moe dispatch buffers (E, cap, d): experts on model, capacity
+            # rows on the batch axes (otherwise every data-axis device
+            # recomputes the full capacity -> |data|x redundant expert
+            # flops, observed 16x on olmoe train_4k)
+            "moe_buf": P(m, b, None),
+        }
+        return table[name]
+
+
+def get_ctx() -> Optional[ShardingCtx]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardingCtx]):
+    prev = get_ctx()
+    _state.ctx = ctx
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def shard(x: jax.Array, name: str) -> jax.Array:
+    """Apply the logical constraint if a sharding context is active."""
+    ctx = get_ctx()
+    if ctx is None:
+        return x
+    spec = ctx.spec(name)
+    # Trim the spec to the array rank (stacked-layer leading dims etc. are
+    # handled by callers passing the right logical name).
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def gather_fsdp(tree: dict, names: dict) -> dict:
+    """Explicitly all-gather FSDP-sharded weights at layer entry.
+
+    Without this hint GSPMD may keep weights f-sharded through the einsum
+    and reshard the *activations* instead ("involuntary full
+    rematerialization" — replicating a (B, L, D) tensor per layer, observed
+    +4x temp memory and +4x collective bytes on yi-9b train).  Constraining
+    each per-layer weight slice to its spec *minus the fsdp axis* forces the
+    cheap weights all-gather and keeps activations batch-sharded.
+
+    ``names`` maps leaf key -> logical spec name; keys absent from ``names``
+    pass through untouched.  No-op outside a sharding context or when fsdp
+    is off."""
+    ctx = get_ctx()
+    if ctx is None or not ctx.fsdp:
+        return tree
+    import dataclasses as _dc
+    gctx = _dc.replace(ctx, fsdp=False)
+
+    def one(key, leaf):
+        logical = names.get(key)
+        if logical is None or not hasattr(leaf, "ndim"):
+            return leaf
+        spec = gctx.spec(logical)
+        spec = sanitize_spec(leaf.shape, spec, ctx.mesh)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(ctx.mesh, spec))
+
+    return {k: (one(k, v) if not isinstance(v, dict)
+                else {k2: one(k2, v2) for k2, v2 in v.items()})
+            for k, v in tree.items()}
+
+
+ATTN_LOGICAL = {"wq": "p_attn_qkv", "wk": "p_attn_qkv", "wv": "p_attn_qkv",
+                "wo": "p_attn_o"}
+MLP_LOGICAL = {"w_in": "p_mlp_in", "w_gate": "p_mlp_in", "w_out": "p_mlp_out"}
+MOE_LOGICAL = {"router": "p_router", "w_gate": "p_expert_in",
+               "w_in": "p_expert_in", "w_out": "p_expert_out"}
+SSM_LOGICAL = {"w_in": "p_ssm_in", "w_out": "p_ssm_out", "conv_w": "p_conv"}
+
+
+def shard_seq(x: jax.Array) -> jax.Array:
+    """Sequence-parallel constraint at layer boundaries: shard (B, L, D) on
+    L over the model axis when the context enables it and L divides the
+    axis (train/prefill only; decode has L == 1).  This is what keeps the
+    remat'd scan carry — the dominant training activation footprint —
+    sharded 1/|model| per device."""
+    ctx = get_ctx()
+    if ctx is None or not ctx.seq_parallel:
+        return x
+    n_model = ctx.mesh.shape[ctx.model_axis]
+    if x.ndim < 2 or x.shape[1] % n_model != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, ctx.spec("act_btd_sp")))
+
+
+def named_sharding(name: str) -> Optional[NamedSharding]:
+    ctx = get_ctx()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, ctx.spec(name))
+
+
+def sanitize_spec(shape, spec: P, mesh: jax.sharding.Mesh) -> P:
+    """Drop partitioning on dims the mesh extent does not evenly divide.
+
+    jit *input* shardings require even divisibility (intermediates may be
+    padded by GSPMD, inputs may not).  A dropped axis means that tensor is
+    replicated along it — e.g. 36 attention heads on a 16-way model axis
+    (minicpm) or 4 KV heads (yi-9b) fall back to replication, recorded in
+    DESIGN.md §5 as the uneven-dim policy."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        out.append(entry if dim % extent == 0 else None)
+    return P(*out)
+
+
+def param_sharding_tree(pdef_tree, ctx: ShardingCtx) -> dict:
+    """Map a PDef tree (see models.params) to NamedShardings.  Stacked-layer
+    leading axes (PDef.stacked) get a None prefix on the spec.  Specs are
+    sanitized against the actual shapes (uneven dims -> replicated)."""
+    import jax.tree_util as jtu
+    from repro.models.params import PDef
+
+    def one(d: "PDef"):
+        spec = ctx.spec(d.logical) if d.logical else P()
+        spec = P(*((None,) * d.stacked + tuple(spec)))
+        return NamedSharding(ctx.mesh, sanitize_spec(d.shape, spec, ctx.mesh))
+
+    return jtu.tree_map(one, pdef_tree,
+                        is_leaf=lambda x: isinstance(x, PDef))

@@ -1,0 +1,69 @@
+"""jit'd wrappers and per-tile dispatch for the SpMM Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import ChunkedTiles
+from repro.kernels.sem_spmm import spmm_tiles
+
+LANE = 128  # TPU lane width; interpret mode accepts any p, the TPU target
+SUBLANE = 8  # wants p padded to a lane multiple.
+
+
+def _pad_p(x: jax.Array, multiple: int) -> jax.Array:
+    p = x.shape[1]
+    pad = (-p) % multiple
+    return x if pad == 0 else jnp.pad(x, ((0, 0), (0, pad)))
+
+
+def pick_variant(ct: ChunkedTiles) -> str:
+    """Per-matrix execution-path dispatch (the SCSR/COO hybrid analogue).
+
+    Napkin math (v5e-class numbers): the MXU path spends ``2*C*T*p`` MACs per
+    chunk at ~1e5 MAC/cycle -> ``2*C*T*p / 1e5`` cycles.  The gather path
+    walks ``C`` dynamic rows; per-element dynamic gather/scatter sustains
+    ~16 elem/cycle on the VPU -> ``C*p / 16`` cycles.  Crossover:
+    ``2*T / 1e5 = 1/16``  =>  ``T ~ 3000``.  So the densify/MXU path wins for
+    small tiles and the gather path for the paper's 16K tiles.  Threshold set
+    at 2048 (hardware-aligned); re-measured structurally in §Perf."""
+    return "mxu" if ct.T <= 2048 else "gather"
+
+
+def spmm_pallas(ct: ChunkedTiles, x: jax.Array, variant: str | None = None,
+                interpret: bool = True) -> jax.Array:
+    """out = A @ X via the Pallas kernel; A as ChunkedTiles, X (n, p)."""
+    variant = variant or pick_variant(ct)
+    p = x.shape[1]
+    x_pad = jnp.zeros((ct.padded_cols, p), x.dtype).at[: x.shape[0]].set(x)
+    x_pad = _pad_p(x_pad, SUBLANE)
+    out = spmm_tiles(jnp.asarray(ct.meta), jnp.asarray(ct.row_local),
+                     jnp.asarray(ct.col_local), jnp.asarray(ct.vals, x.dtype),
+                     x_pad, T=ct.T, n_tile_rows=ct.n_tile_rows,
+                     variant=variant, interpret=interpret)
+    return out[: ct.n_rows, :p]
+
+
+def spmm_pallas_batch(meta: np.ndarray, rows: np.ndarray, cols: np.ndarray,
+                      vals: np.ndarray, x_pad: jax.Array, out_blocks: jax.Array,
+                      T: int, variant: str = "gather") -> jax.Array:
+    """SEM-streaming step: apply one chunk batch read from the slow tier and
+    accumulate into ``out_blocks`` (n_tile_rows, T, p).
+
+    A batch may start mid-tile-row, so first-flags are recomputed within the
+    batch and only tile rows present in the batch are merged back.
+    """
+    n_tile_rows, _, p = out_blocks.shape
+    meta = meta.copy()
+    meta[0, 2] = 1
+    meta[1:, 2] = (meta[1:, 0] != meta[:-1, 0]).astype(meta.dtype)
+    present = np.zeros(n_tile_rows, dtype=bool)
+    present[meta[:, 0]] = True
+
+    res = spmm_tiles(jnp.asarray(meta), jnp.asarray(rows), jnp.asarray(cols),
+                     jnp.asarray(vals, x_pad.dtype), x_pad, T=T,
+                     n_tile_rows=n_tile_rows, variant=variant)
+    res = res.reshape(n_tile_rows, T, p)
+    mask = jnp.asarray(present)[:, None, None]
+    return out_blocks + jnp.where(mask, res, 0.0)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the SpMM Pallas kernels.
+
+Operates on the same ChunkedTiles arrays the kernels consume, with no Pallas
+machinery — a direct transcription of the math: for each chunk ``g`` in tile
+``(meta[g,0], meta[g,1])``, scatter ``vals[g] * X[tile_col*T + col_local[g]]``
+into output rows ``tile_row*T + row_local[g]``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmm_ref(meta: np.ndarray, row_local: np.ndarray, col_local: np.ndarray,
+             vals: np.ndarray, x_pad: np.ndarray, T: int) -> np.ndarray:
+    """Oracle: flat scatter-add over all chunk entries.
+
+    x_pad: (n_tile_cols * T, p); returns (n_tile_rows * T, p) where
+    n_tile_rows = meta[:, 0].max() + 1.
+    """
+    meta = np.asarray(meta)
+    n_tile_rows = int(meta[:, 0].max()) + 1
+    rows_g = (meta[:, 0:1] * T + np.asarray(row_local)).reshape(-1)
+    cols_g = (meta[:, 1:2] * T + np.asarray(col_local)).reshape(-1)
+    v = np.asarray(vals).reshape(-1)
+    x = np.asarray(x_pad, np.float64)
+    out = np.zeros((n_tile_rows * T, x.shape[1]), np.float64)
+    np.add.at(out, rows_g, v[:, None].astype(np.float64) * x[cols_g])
+    return out
+
+
+def spmm_ref_jnp(meta, row_local, col_local, vals, x_pad, T: int,
+                 n_tile_rows: int):
+    """jnp variant (same dtype as inputs) for jit-compatible comparisons."""
+    rows_g = (meta[:, 0:1] * T + row_local).reshape(-1)
+    cols_g = (meta[:, 1:2] * T + col_local).reshape(-1)
+    v = vals.reshape(-1)
+    p = x_pad.shape[1]
+    out = jnp.zeros((n_tile_rows * T, p), x_pad.dtype)
+    return out.at[rows_g].add(v[:, None] * jnp.take(x_pad, cols_g, axis=0))

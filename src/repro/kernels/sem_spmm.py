@@ -1,0 +1,121 @@
+"""Pallas TPU kernels for tiled SpMM (the paper's compute hot-spot).
+
+Two variants, mirroring the paper's SCSR-vs-COO per-tile hybrid (§3.2) —
+there the *storage* format adapts to tile statistics; here the *execution*
+path does:
+
+* :func:`spmm_gather_kernel` — the sparse path.  Per grid step, one chunk of
+  ``C`` non-zeros is resident in VMEM together with one ``(T, p)`` block of X
+  and one ``(T, p)`` output block.  Gather rows of the X block by column
+  index, scale by values, scatter-add by row index.  This is the SCSR
+  analogue: work is O(nnz * p).
+* :func:`spmm_mxu_kernel` — the dense path.  The chunk is first *densified*
+  into the (T, T) tile via a one-hot scatter matmul, then multiplied with the
+  X block on the MXU: ``out += (E_rᵀ · diag(v) · E_c) @ X`` computed as two
+  matmuls ``E_rᵀ @ (v ⊙ (E_c @ X))``.  Work is O(C * T * p) regardless of
+  sparsity — profitable when tiles are dense enough that MXU throughput
+  (~256x the VPU's FLOP rate) beats the gather path's memory-bound walk.
+  This inverts the paper's "register blocking is wasteful for graphs" claim
+  on TPU; see DESIGN.md §2 and the crossover measurement in §Perf.
+
+Both use the same grid: one step per chunk, chunks sorted by (tile_row,
+tile_col).  The output BlockSpec is indexed by tile_row only, so Pallas keeps
+the output block in VMEM across every chunk of a tile row and writes it to
+HBM exactly once when the tile row changes — the paper's write-once,
+merged-write discipline, enforced by the pipeline structure.  The scalar-
+prefetched ``meta`` array is the static schedule that replaces the paper's
+dynamic task queue (DESIGN.md §2: LPT-balanced at build time).
+
+Lowering notes (TPU target): the gather (``jnp.take``) and scatter
+(``.at[].add``) on VMEM blocks lower to per-sublane dynamic gathers; on
+older TPU generations where arbitrary in-VMEM scatter is unsupported, the
+MXU variant is the fallback for every tile.  Kernels are validated in
+interpret mode on CPU (this container) against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+def _gather_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref):
+    g = pl.program_id(0)
+
+    @pl.when(meta_ref[g, 2] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cols = cols_ref[0]                                # (C,) int32
+    rows = rows_ref[0]
+    vals = vals_ref[0]
+    gathered = jnp.take(x_ref[...], cols, axis=0)     # (C, p) VMEM gather
+    contrib = vals[:, None] * gathered
+    out_ref[...] = out_ref[...].at[rows].add(contrib)  # VMEM scatter-add
+
+
+def _mxu_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref, *,
+              T: int):
+    g = pl.program_id(0)
+
+    @pl.when(meta_ref[g, 2] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cols = cols_ref[0]
+    rows = rows_ref[0]
+    vals = vals_ref[0]
+    C = cols.shape[0]
+    # One-hot gather on the MXU: (C, T) @ (T, p). Padding lanes have val 0.
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (C, T), 1)
+    e_c = (cols[:, None] == iota_t).astype(x_ref.dtype)
+    gathered = jnp.dot(e_c, x_ref[...],
+                       preferred_element_type=jnp.float32)
+    scaled = vals[:, None] * gathered
+    # One-hot scatter on the MXU: (T, C) @ (C, p).
+    e_r = (rows[:, None] == iota_t).astype(x_ref.dtype)
+    out_ref[...] = out_ref[...] + jnp.dot(
+        e_r.T, scaled, preferred_element_type=jnp.float32
+    ).astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+def _grid_spec(n_chunks: int, C: int, T: int, p: int):
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1, C), lambda g, m: (g, 0)),   # rows
+            pl.BlockSpec((1, C), lambda g, m: (g, 0)),   # cols
+            pl.BlockSpec((1, C), lambda g, m: (g, 0)),   # vals
+            pl.BlockSpec((T, p), lambda g, m: (m[g, 1], 0)),  # X block
+        ],
+        out_specs=pl.BlockSpec((T, p), lambda g, m: (m[g, 0], 0)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("T", "n_tile_rows", "variant",
+                                             "interpret"))
+def spmm_tiles(meta, row_local, col_local, vals, x_pad, *, T: int,
+               n_tile_rows: int, variant: str = "gather",
+               interpret: bool = True):
+    """Run the chunked SpMM kernel.  ``x_pad`` is (n_tile_cols * T, p) with
+    p padded to the lane width by the caller; returns (n_tile_rows * T, p)."""
+    n_chunks, C = row_local.shape
+    p = x_pad.shape[1]
+    body = (_gather_body if variant == "gather"
+            else functools.partial(_mxu_body, T=T))
+    return pl.pallas_call(
+        body,
+        grid_spec=_grid_spec(n_chunks, C, T, p),
+        out_shape=jax.ShapeDtypeStruct((n_tile_rows * T, p), x_pad.dtype),
+        interpret=interpret,
+    )(meta, row_local, col_local, vals, x_pad)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked recurrence.
+
+The §Roofline tables show mamba2/zamba2 training memory-bound: the jnp SSD
+path materializes 4-5 (B, H, Q, Q) f32 tensors per chunk per layer in HBM
+(segsum, decay matrix, masked scores, weighted scores).  This kernel keeps
+the whole (Q, Q) intra-chunk working set in VMEM — one grid step per
+(batch, head) runs the chunk loop with the (dh, N) state in registers/VMEM
+scratch and writes only the (L, dh) output once (the paper's write-once
+discipline; the chunk loop is the paper's tile streaming).
+
+Inputs (per (b, h) grid step):
+  x  (L, dh)   dt (L,)   a = dt*A (L,)   B/C (L, N, shared over heads)
+Output:
+  y (L, dh);  final state (dh, N).
+
+Validated in interpret mode against ``repro.models.ssm.ssd_chunked``
+(tests/test_ssd_kernel.py), which is itself property-tested against the
+sequential recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_body(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, s_ref, *,
+              Q: int):
+    L, dh = x_ref.shape
+    N = b_ref.shape[1]
+    nc = L // Q
+    D = d_ref[0]
+
+    def chunk(j, state):
+        sl = pl.ds(j * Q, Q)
+        xq = x_ref[sl, :].astype(jnp.float32)           # (Q, dh)
+        dtq = dt_ref[sl].astype(jnp.float32)            # (Q,)
+        aq = a_ref[sl].astype(jnp.float32)
+        bq = b_ref[sl, :].astype(jnp.float32)           # (Q, N)
+        cq = c_ref[sl, :].astype(jnp.float32)
+
+        cum = jnp.cumsum(aq)                            # (Q,)
+        # decay matrix L[i, j] = exp(sum_{k=j+1..i} a_k), i >= j
+        diff = cum[:, None] - cum[None, :]
+        ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+        lmat = jnp.where(ii >= jj, jnp.exp(diff), 0.0)  # (Q, Q) in VMEM
+        scores = jnp.dot(cq, bq.T,
+                         preferred_element_type=jnp.float32)  # (Q, Q)
+        w = scores * lmat
+        y_diag = jnp.dot(w, dtq[:, None] * xq,
+                         preferred_element_type=jnp.float32)  # (Q, dh)
+        decay_in = jnp.exp(cum)                         # (Q,)
+        y_state = decay_in[:, None] * jnp.dot(
+            cq, state.T, preferred_element_type=jnp.float32)  # (Q, dh)
+        y = y_diag + y_state + D * xq
+        y_ref[sl, :] = y.astype(y_ref.dtype)
+
+        total = cum[Q - 1]
+        decay_out = jnp.exp(total - cum)                # (Q,)
+        upd = jnp.dot(((decay_out * dtq)[:, None] * xq).T, bq,
+                      preferred_element_type=jnp.float32)  # (dh, N)
+        return jnp.exp(total) * state + upd
+
+    state0 = jnp.zeros((dh, N), jnp.float32)
+    state = jax.lax.fori_loop(0, nc, chunk, state0)
+    s_ref[...] = state
+
+
+@functools.partial(jax.jit, static_argnames=("Q", "interpret"))
+def ssd_chunked_tpu(x, dt, A, Bm, Cm, D, *, Q: int = 128,
+                    interpret: bool = True):
+    """x: (B, L, H, dh); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N); D: (H,).
+    Returns (y (B, L, H, dh), final_state (B, H, dh, N)).  L % Q == 0."""
+    B, L, H, dh = x.shape
+    N = Bm.shape[-1]
+    assert L % Q == 0, (L, Q)
+    a = dt * A[None, None, :]                            # (B, L, H)
+    xt = x.transpose(0, 2, 1, 3)                         # (B, H, L, dh)
+    dtt = dt.transpose(0, 2, 1)                          # (B, H, L)
+    at = a.transpose(0, 2, 1)
+
+    y, s = pl.pallas_call(
+        functools.partial(_ssd_body, Q=Q),
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((None, None, L, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, L), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, None, L), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, L, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((None, L, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, L, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, dh, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, L, dh), x.dtype),
+            jax.ShapeDtypeStruct((B, H, dh, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt, dtt, at, Bm, Cm, D)
+    return y.transpose(0, 2, 1, 3), s

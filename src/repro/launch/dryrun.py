@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines, before any jax-importing import: jax locks the
+# device count at first init.  512 placeholder CPU devices host the
+# production meshes (16,16) and (2,16,16).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the right step function (train_step / prefill
+forward / decode_step), attaches the cell's sharding policy to abstract
+inputs (ShapeDtypeStruct — no allocation), lowers, compiles, and records:
+
+* ``memory_analysis`` — proves the cell fits per-device HBM;
+* ``cost_analysis``   — per-device HLO FLOPs / bytes for §Roofline;
+* collective bytes by op type, parsed from the compiled HLO text
+  (cost_analysis does not expose them);
+* the sharding policy knobs, so §Perf iterations are reproducible.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+  ... --policy no_seq_parallel,no_fsdp   # §Perf ablation knobs
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, SHAPES, ArchConfig, ShapeCell, get_config
+from repro.distributed.sharding import use_sharding, param_sharding_tree
+from repro.launch import hlo_analysis
+from repro.launch.mesh import (cache_shardings, input_shardings, make_ctx,
+                               make_production_mesh)
+from repro.models import model_api
+from repro.models.params import PDef
+from repro.train.optimizer import AdamWConfig, adamw_update, opt_state_shapes
+from repro.train.optimizer import OptState
+
+# TPU v5e hardware constants (per chip) — §Roofline.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (per-device collective bytes / this)
+
+
+# ---------------------------------------------------------------------------
+# Abstract state builders
+# ---------------------------------------------------------------------------
+def _with_sharding(tree, shardings):
+    return jax.tree.map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+        tree, shardings)
+
+
+def abstract_state(cfg: ArchConfig, cell: ShapeCell, ctx, *,
+                   param_dtype=jnp.bfloat16):
+    """(params, opt/cache, batch) ShapeDtypeStructs with shardings."""
+    pd = model_api.pdefs(cfg)
+    p_shapes = model_api.param_shapes(cfg, dtype=param_dtype)
+    p_shard = param_sharding_tree(pd, ctx)
+    params = _with_sharding(p_shapes, p_shard)
+
+    batch = _with_sharding(model_api.batch_shapes(cfg, cell),
+                           {k: v for k, v in
+                            input_shardings(ctx, cfg, cell).items()})
+
+    if cell.kind == "train":
+        f32 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_shapes)
+        opt = OptState(
+            step=jax.ShapeDtypeStruct(
+                (), jnp.int32,
+                sharding=jax.sharding.NamedSharding(
+                    ctx.mesh, jax.sharding.PartitionSpec())),
+            mu=_with_sharding(f32, p_shard),
+            nu=_with_sharding(f32, p_shard))
+        return params, opt, batch
+    if cell.kind == "decode":
+        cache = _with_sharding(
+            model_api.cache_shapes(cfg, cell.global_batch, cell.seq_len),
+            cache_shardings(ctx, cfg, cell))
+        return params, cache, batch
+    return params, None, batch
+
+
+# ---------------------------------------------------------------------------
+# Step functions per cell kind
+# ---------------------------------------------------------------------------
+def build_step(cfg: ArchConfig, cell: ShapeCell, opt_cfg: AdamWConfig,
+               knobs=frozenset()):
+    if cell.kind == "train":
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model_api.loss_fn(p, cfg, batch), has_aux=True
+            )(params)
+            new_p, new_o, om = adamw_update(opt_cfg, params, grads, opt_state)
+            return new_p, new_o, dict(metrics, **om)
+        return train_step, (0, 1)
+    if cell.kind == "prefill":
+        # Serving prefill emits only the final position's logits (the
+        # decode seed); "full_logits" restores the naive variant for the
+        # §Perf ablation.
+        last_only = "full_logits" not in knobs
+
+        def prefill_step(params, batch):
+            logits, _ = model_api.forward(params, cfg, batch, remat=False,
+                                          logits_last_only=last_only)
+            return logits
+        return prefill_step, ()
+    def serve_step(params, cache, batch):
+        return model_api.decode_step(params, cfg, cache, batch["tokens"],
+                                     batch["pos"])
+    return serve_step, (1,)
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape: str, mesh_kind: str, *,
+             policy: Optional[str] = None, out_dir: str = "results/dryrun",
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    ok, why = cfg.supports(shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+               "status": "skipped", "reason": why}
+        _write(rec, out_dir, arch, shape, mesh_kind, policy)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    knobs = set((policy or "").split(",")) - {""}
+    ctx = make_ctx(mesh, cfg, cell,
+                   fsdp=False if "no_fsdp" in knobs else None,
+                   seq_parallel=False if "no_seq_parallel" in knobs else None)
+
+    opt_cfg = AdamWConfig()
+    step_fn, donate = build_step(cfg, cell, opt_cfg, frozenset(knobs))
+    params, aux_state, batch = abstract_state(cfg, cell, ctx)
+    args = ((params, aux_state, batch) if aux_state is not None
+            else (params, batch))
+
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "policy": sorted(knobs), "kind": cell.kind,
+           "n_devices": mesh.devices.size}
+    try:
+        with mesh, use_sharding(ctx):
+            lowered = jax.jit(step_fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        # Trip-count-corrected costs (cost_analysis counts scan bodies once;
+        # see hlo_analysis module docstring).
+        an = hlo_analysis.analyze(hlo)
+        coll = dict(an["collective_bytes"])
+        coll.update({f"n_{k}": v for k, v in an["collective_ops"].items()})
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops_per_device=an["flops"],
+            bytes_per_device=an["bytes"],
+            raw_cost_analysis={"flops": float(cost.get("flops", 0.0)),
+                               "bytes": float(cost.get("bytes accessed", 0.0))},
+            collective_bytes=coll,
+            memory={k: int(getattr(mem, k))
+                    for k in ("argument_size_in_bytes",
+                              "output_size_in_bytes",
+                              "temp_size_in_bytes",
+                              "generated_code_size_in_bytes")
+                    if hasattr(mem, k)},
+            model_flops=model_flops(cfg, cell),
+            hlo_ops=len(hlo.splitlines()),
+        )
+        rec["terms"] = roofline_terms(rec)
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to record
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    _write(rec, out_dir, arch, shape, mesh_kind, policy)
+    if verbose:
+        s = rec["status"]
+        extra = ""
+        if s == "ok":
+            t = rec["terms"]
+            extra = (f" compute={t['compute_s']:.2e}s memory={t['memory_s']:.2e}s"
+                     f" coll={t['collective_s']:.2e}s dom={t['dominant']}")
+        elif s == "error":
+            extra = " " + rec["error"][:160]
+        print(f"[dryrun] {arch} x {shape} x {mesh_kind}: {s}{extra}",
+              flush=True)
+    return rec
+
+
+def model_flops(cfg: ArchConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode, one
+    token), with N = active params (MoE: top-k slice)."""
+    n = model_api.n_active_params(cfg)
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch
+
+
+def roofline_terms(rec: dict) -> dict:
+    """The three roofline terms in seconds (per-device quantities over
+    per-chip peaks — compiled artifacts are the per-device SPMD program)."""
+    coll = rec["collective_bytes"]
+    cbytes = sum(v for k, v in coll.items() if k in hlo_analysis.COLLECTIVES)
+    terms = {
+        "compute_s": rec["flops_per_device"] / PEAK_FLOPS,
+        "memory_s": rec["bytes_per_device"] / HBM_BW,
+        "collective_s": cbytes / ICI_BW,
+    }
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    terms["dominant"] = dominant.replace("_s", "")
+    total_flops = rec["flops_per_device"] * rec["n_devices"]
+    terms["useful_flop_ratio"] = (rec["model_flops"] / total_flops
+                                  if total_flops else 0.0)
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    ideal = rec["model_flops"] / (rec["n_devices"] * PEAK_FLOPS)
+    terms["roofline_fraction"] = ideal / bound if bound > 0 else 0.0
+    return terms
+
+
+def _write(rec: dict, out_dir: str, arch: str, shape: str, mesh: str,
+           policy: Optional[str]) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape}__{mesh}"
+    if policy:
+        tag += "__" + policy.replace(",", "+")
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--policy", default=None,
+                    help="comma list: no_fsdp,no_seq_parallel")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = ([(a, s) for a in ARCH_IDS for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, policy=args.policy, out_dir=args.out)
+            failures += rec["status"] == "error"
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

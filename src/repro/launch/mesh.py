@@ -1,0 +1,147 @@
+"""Production mesh construction + per-cell sharding assignment.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — smoke tests see 1 CPU device;
+only ``dryrun.py`` (which sets XLA_FLAGS before any import) sees 512.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import ShardingCtx, sanitize_spec
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_ctx(mesh: Mesh, cfg: ArchConfig, cell: ShapeCell, *,
+             fsdp: Optional[bool] = None,
+             seq_parallel: Optional[bool] = None) -> ShardingCtx:
+    """Sharding policy for one (arch x shape) cell.
+
+    * FSDP on the ``data`` axis for training of >= ~2B-param archs (the
+      dense-majors); TP-only for serving.
+    * Sequence parallelism for train/prefill when the sequence divides the
+      model axis (activation carry sharded on seq between layers).
+    * ``long_500k`` (B=1): batch axes cannot shard — the KV/state trees
+      shard on ``model`` only, batch replicated (noted in §Roofline).
+    """
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if fsdp is None:
+        fsdp = cell.kind == "train"
+    if seq_parallel is None:
+        seq_parallel = cell.kind in ("train", "prefill")
+    n_model = mesh.shape["model"]
+    if cfg.n_kv_heads and cfg.n_kv_heads % n_model == 0:
+        kv_axis = "heads"
+    elif cfg.n_heads and cfg.hd % n_model == 0:
+        kv_axis = "hd"
+    else:
+        kv_axis = "none"
+    if cfg.n_heads and cfg.n_heads % n_model == 0:
+        attn_q_axis = "heads"
+    elif cfg.n_heads and cell.kind in ("train", "prefill"):
+        # Heads don't divide the axis: shard the query sequence instead
+        # (KV replicated per layer, scores local — no per-chunk psums).
+        attn_q_axis = "seq"
+        kv_axis = "none"
+    elif cfg.n_heads and cfg.hd % n_model == 0:
+        attn_q_axis = "hd"
+    else:
+        attn_q_axis = "none"
+    # Serving a large MoE: expert weights can't be replicated per data row
+    # (llama4: 109B total params > HBM x 16).  Shard the expert hidden dim
+    # over "data" (EP x TP2): no per-step weight all-gather, only small
+    # activation psums.
+    expert_tp2 = (cfg.family == "moe" and cell.kind != "train")
+    return ShardingCtx(mesh=mesh, batch_axes=batch_axes, model_axis="model",
+                       fsdp=fsdp, seq_parallel=seq_parallel, kv_axis=kv_axis,
+                       attn_q_axis=attn_q_axis, expert_tp2=expert_tp2)
+
+
+def _batch_divisible(cell: ShapeCell, mesh: Mesh) -> bool:
+    n_batch = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_batch *= mesh.shape[a]
+    return cell.global_batch % n_batch == 0
+
+
+def input_shardings(ctx: ShardingCtx, cfg: ArchConfig, cell: ShapeCell
+                    ) -> Dict[str, NamedSharding]:
+    """NamedShardings for every entry of model_api.batch_shapes."""
+    mesh = ctx.mesh
+    b = ctx.batch_axes if _batch_divisible(cell, mesh) else None
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    if cell.kind == "decode":
+        return {"tokens": ns(b, None), "pos": NamedSharding(mesh, P())}
+    out = {"tokens": ns(b, None)}
+    if cell.kind == "train":
+        out["labels"] = ns(b, None)
+    if cfg.family == "vlm":
+        out["patches"] = ns(b, None, None)
+    if cfg.is_encdec:
+        out["frames"] = ns(b, None, None)
+    return out
+
+
+def cache_shardings(ctx: ShardingCtx, cfg: ArchConfig, cell: ShapeCell
+                    ) -> dict:
+    """NamedShardings for the decode cache tree (model_api.cache_shapes).
+
+    KV heads / SSM heads shard on ``model``; batch on the batch axes when
+    divisible (long_500k B=1 -> replicated batch, model-only sharding)."""
+    mesh = ctx.mesh
+    m = ctx.model_axis
+    b = ctx.batch_axes if _batch_divisible(cell, mesh) else None
+    from repro.models import model_api
+    shapes = model_api.cache_shapes(cfg, cell.global_batch, cell.seq_len)
+
+    def make(tree):
+        """Sanitize each spec against the actual cache leaf shape."""
+        return jax.tree.map(
+            lambda s, sds: NamedSharding(
+                mesh, sanitize_spec(sds.shape, s, mesh)),
+            tree, shapes, is_leaf=lambda x: isinstance(x, P))
+
+    def ns(*spec):
+        return P(*spec)
+
+    # KV cache model-axis placement: shard KV heads when they divide the
+    # axis; otherwise shard head_dim (Megatron-style sub-head split) so the
+    # dominant decode operand is never replicated (llama4: kv=8 < 16 but
+    # hd=128 = 8 x 16).
+    kv_ok = cfg.n_kv_heads % mesh.shape[m] == 0 if cfg.n_kv_heads else False
+    hd_ok = cfg.hd % mesh.shape[m] == 0 if cfg.n_heads else False
+    kv = m if kv_ok else None
+    hd = m if (not kv_ok and hd_ok) else None
+    if cfg.is_encdec:
+        return make({"self_k": ns(None, b, None, kv, hd),
+                "self_v": ns(None, b, None, kv, hd),
+                "cross_k": ns(None, b, None, kv, hd),
+                "cross_v": ns(None, b, None, kv, hd)})
+    if cfg.family == "ssm":
+        return make({"conv": ns(None, b, None, m),
+                     "state": ns(None, b, m, None, None)})
+    if cfg.family == "hybrid":
+        tree = {"attn_k": ns(None, b, None, kv, hd),
+                "attn_v": ns(None, b, None, kv, hd),
+                "super_conv": ns(None, None, b, None, m),
+                "super_state": ns(None, None, b, m, None, None)}
+        n_super = cfg.n_layers // cfg.attn_every
+        if cfg.n_layers - n_super * cfg.attn_every:
+            tree["tail_conv"] = ns(None, b, None, m)
+            tree["tail_state"] = ns(None, b, m, None, None)
+        return make(tree)
+    return make({"k": ns(None, b, None, kv, hd),
+                 "v": ns(None, b, None, kv, hd)})

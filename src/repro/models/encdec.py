@@ -1,0 +1,176 @@
+"""Whisper-style encoder-decoder.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, frames, d_model).  Encoder:
+bidirectional attention over frames.  Decoder: causal self-attention +
+cross-attention to encoder output, GELU MLPs.  RoPE stands in for Whisper's
+learned positional embeddings (frontend-stub deviation, noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_seq
+from repro.models import layers as ll
+from repro.models.params import PDef
+
+
+def _attn_pdefs(cfg: ArchConfig, nl: int) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": PDef((nl, D, H, hd), "p_attn_qkv", stacked=1),
+        "wk": PDef((nl, D, KV, hd), "p_attn_qkv", stacked=1),
+        "wv": PDef((nl, D, KV, hd), "p_attn_qkv", stacked=1),
+        "wo": PDef((nl, H, hd, D), "p_attn_o", stacked=1,
+                   scale=1.0 / np.sqrt(H * hd)),
+    }
+
+
+def _mlp_pdefs(cfg: ArchConfig, nl: int) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {"w_in": PDef((nl, D, F), "p_mlp_in", stacked=1),
+            "w_out": PDef((nl, F, D), "p_mlp_out", stacked=1)}
+
+
+def encdec_pdefs(cfg: ArchConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_padded
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    return {
+        "embed": PDef((V, D), "p_embed", scale=0.02),
+        "unembed": PDef((V, D), "p_embed", scale=1.0 / np.sqrt(D)),
+        "final_norm": PDef((D,), "p_norm", init="zeros"),
+        "enc_final_norm": PDef((D,), "p_norm", init="zeros"),
+        "encoder": {
+            "ln1": PDef((ne, D), "p_norm", init="zeros", stacked=1),
+            "ln2": PDef((ne, D), "p_norm", init="zeros", stacked=1),
+            "attn": _attn_pdefs(cfg, ne),
+            "mlp": _mlp_pdefs(cfg, ne),
+        },
+        "decoder": {
+            "ln1": PDef((nd, D), "p_norm", init="zeros", stacked=1),
+            "ln2": PDef((nd, D), "p_norm", init="zeros", stacked=1),
+            "ln3": PDef((nd, D), "p_norm", init="zeros", stacked=1),
+            "self_attn": _attn_pdefs(cfg, nd),
+            "cross_attn": _attn_pdefs(cfg, nd),
+            "mlp": _mlp_pdefs(cfg, nd),
+        },
+    }
+
+
+def encode(params: dict, cfg: ArchConfig, frames: jax.Array,
+           remat: bool = True) -> jax.Array:
+    """frames: (B, F, D) stub embeddings -> encoder memory (B, F, D)."""
+    x = frames
+    Lf = x.shape[1]
+    positions = jnp.arange(Lf)
+
+    def body(x, lp):
+        from repro.distributed.sharding import (ATTN_LOGICAL, MLP_LOGICAL,
+                                                gather_fsdp)
+        lp = dict(lp, attn=gather_fsdp(lp["attn"], ATTN_LOGICAL),
+                  mlp=gather_fsdp(lp["mlp"], MLP_LOGICAL))
+        h = ll.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        y, _ = ll.attention(lp["attn"], h, n_heads=cfg.n_heads,
+                            n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                            rope_theta=cfg.rope_theta, positions=positions,
+                            causal=False,
+                            kv_chunk=min(1024, Lf))
+        x = x + y
+        h = ll.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        return x + ll.gelu_mlp(lp["mlp"], h), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return ll.rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _decoder_layer(cfg, lp, x, positions, memory, self_cache=None,
+                   cross_cache=None, cache_pos=None, kv_chunk=1024):
+    from repro.distributed.sharding import (ATTN_LOGICAL, MLP_LOGICAL,
+                                            gather_fsdp)
+    lp = dict(lp,
+              self_attn=gather_fsdp(lp["self_attn"], ATTN_LOGICAL),
+              cross_attn=gather_fsdp(lp["cross_attn"], ATTN_LOGICAL),
+              mlp=gather_fsdp(lp["mlp"], MLP_LOGICAL))
+    h = ll.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    y, new_self = ll.attention(lp["self_attn"], h, n_heads=cfg.n_heads,
+                               n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                               rope_theta=cfg.rope_theta, positions=positions,
+                               cache=self_cache, cache_pos=cache_pos,
+                               kv_chunk=kv_chunk)
+    x = x + y
+    h = ll.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    y, _ = ll.attention(lp["cross_attn"], h, n_heads=cfg.n_heads,
+                        n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                        rope_theta=cfg.rope_theta, positions=positions,
+                        cache=cross_cache, xkv=memory, use_rope=False,
+                        causal=False, cross_cached=cross_cache is not None,
+                        kv_chunk=1024)
+    x = x + y
+    h = ll.rmsnorm(x, lp["ln3"], cfg.norm_eps)
+    return x + ll.gelu_mlp(lp["mlp"], h), new_self
+
+
+def encdec_forward(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                   frames: jax.Array, remat: bool = True,
+                   last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced training / prefill forward."""
+    memory = encode(params, cfg, frames, remat=remat)
+    x = ll.embed(params["embed"], tokens)
+    L = x.shape[1]
+    positions = jnp.arange(L)
+    kv_chunk = 1024 if L >= 1024 else L
+
+    def body(x, lp):
+        x, _ = _decoder_layer(cfg, lp, x, positions, memory,
+                              kv_chunk=kv_chunk)
+        return shard_seq(x), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["decoder"])
+    x = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return ll.unembed(params["unembed"], x), jnp.zeros((), jnp.float32)
+
+
+def encdec_precompute_cross(params: dict, cfg: ArchConfig,
+                            memory: jax.Array) -> dict:
+    """Project encoder memory to per-layer cross K/V once per request."""
+    def one(lp):
+        k = jnp.einsum("btd,dhk->bthk", memory, lp["wk"])
+        v = jnp.einsum("btd,dhk->bthk", memory, lp["wv"])
+        return k, v
+    ks, vs = jax.vmap(one)(params["decoder"]["cross_attn"])
+    return {"cross_k": ks, "cross_v": vs}
+
+
+def encdec_decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                       tokens: jax.Array, pos: jax.Array
+                       ) -> Tuple[jax.Array, dict]:
+    """cache: self_k/self_v (nd, B, S, KV, hd) + cross_k/cross_v
+    (nd, B, F, KV, hd) precomputed."""
+    x = ll.embed(params["embed"], tokens)
+    positions = pos + jnp.arange(1)
+
+    def body(x, xs):
+        lp, sk, sv, ck, cv = xs
+        x, new_self = _decoder_layer(
+            cfg, lp, x, positions, memory=None,
+            self_cache={"k": sk, "v": sv},
+            cross_cache={"k": ck, "v": cv}, cache_pos=pos,
+            kv_chunk=min(2048, sk.shape[1]))
+        return x, (new_self["k"], new_self["v"])
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["decoder"],
+                                         cache["self_k"], cache["self_v"],
+                                         cache["cross_k"], cache["cross_v"]))
+    x = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(params["unembed"], x)
+    return logits, {"self_k": ks, "self_v": vs, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

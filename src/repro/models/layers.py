@@ -1,0 +1,233 @@
+"""Transformer building blocks: RMSNorm, RoPE, flash-style attention (GQA,
+sliding window, softcap), gated MLPs.
+
+Attention is computed in the online-softmax (flash) form with a lax.scan over
+KV chunks, so the full (Lq, S) score matrix is never materialized — required
+for the 32k prefill cells, and the jnp analogue of a Pallas flash kernel
+(the scan step is the kernel body; the scan is the grid).  GQA keeps KV heads
+un-replicated by folding the group dim into the einsums.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+NEG_INF = -1e30
+
+# Attention implementation toggle: "jnp" (lax.scan online-softmax, the
+# portable default) or "pallas" (kernels/flash_attention.py — interpret
+# mode on CPU, compiled on TPU).  The Pallas path handles the no-cache
+# train/prefill case (full causal/bidirectional, optional softcap); other
+# cases (KV cache, sliding window, padded lengths) fall back to jnp.
+_FLASH_IMPL = "jnp"
+
+
+def set_flash_impl(impl: str) -> str:
+    global _FLASH_IMPL
+    assert impl in ("jnp", "pallas"), impl
+    prev = _FLASH_IMPL
+    _FLASH_IMPL = impl
+    return prev
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, H, hd); positions: (L,)."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (L, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_positions: jax.Array, s_valid: int | jax.Array,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, Lq, H, hd); k, v: (B, S, KV, hd) with H = KV * G.
+    q_positions: (Lq,) absolute positions; s_valid: number of valid cache
+    slots (keys at position >= s_valid are masked — decode with a
+    partially-filled cache).
+    """
+    B, Lq, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if (_FLASH_IMPL == "pallas" and Lq > 1 and Lq == S
+            and (isinstance(window, int) and window == 0)
+            and (isinstance(s_valid, int) and s_valid == S)
+            and Lq % 128 == 0):
+        from repro.kernels.flash_attention import flash_attention_tpu
+        return flash_attention_tpu(q, k, v, causal=causal, softcap=softcap,
+                                   Bq=min(256, Lq), Bk=min(256, S))
+    if Lq == 1:
+        # Decode: one query against the whole cache.  A chunked scan here
+        # makes XLA relayout + fp32-convert the entire KV cache per layer
+        # (loop-invariant code motion hoists the per-chunk convert out of
+        # the loop), costing ~4x the cache size in HBM traffic.  The direct
+        # form reads the cache once; the (B, KV, G, 1, S) score tensor is
+        # small.
+        # bf16 operands + f32 accumulation (preferred_element_type): the
+        # cache is read once in its storage dtype — no f32 round-trip.
+        qg = q.reshape(B, 1, KV, G, hd).astype(k.dtype)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                       preferred_element_type=jnp.float32)
+        s = s * (1.0 / math.sqrt(hd))
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = jnp.arange(S)
+        valid = kpos[None, :] < s_valid
+        if causal:
+            valid = valid & (q_positions[:, None] >= kpos[None, :])
+        if not (isinstance(window, int) and window == 0):
+            valid = valid & ((window <= 0)
+                             | (q_positions[:, None] - kpos[None, :] < window))
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, 1, H, hd).astype(q.dtype)
+    ck = min(kv_chunk, S)
+    n_chunks = -(-S // ck)
+    pad = n_chunks * ck - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = q.reshape(B, Lq, KV, G, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, ck, KV, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, ck, KV, hd), 1, 0)
+    chunk_starts = jnp.arange(n_chunks) * ck
+
+    def step(carry, inp):
+        acc, m, l = carry
+        kb, vb, c0 = inp
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(kb.dtype), kb,
+                       preferred_element_type=jnp.float32)
+        s = s * scale
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = c0 + jnp.arange(ck)
+        valid = kpos[None, :] < s_valid                      # (1, ck)
+        if causal:
+            valid = valid & (q_positions[:, None] >= kpos[None, :])
+        if not (isinstance(window, int) and window == 0):
+            # dynamic window (0 = global) keeps alternating-layer scans
+            # homogeneous: the window is a traced per-layer scalar.
+            valid = valid & ((window <= 0)
+                             | (q_positions[:, None] - kpos[None, :] < window))
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, KV, G, Lq, hd), jnp.float32)
+    m0 = jnp.full((B, KV, G, Lq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Lq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  (kc, vc, chunk_starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Lq, H, hd)  # (B,KV,G,Lq,hd)->
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projection + rope + cache + flash)
+# ---------------------------------------------------------------------------
+def attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int, hd: int,
+              rope_theta: float, positions: jax.Array,
+              cache: Optional[dict] = None, cache_pos: Optional[jax.Array] = None,
+              causal: bool = True, window: int = 0, softcap: float = 0.0,
+              kv_chunk: int = 1024,
+              xkv: Optional[jax.Array] = None, use_rope: bool = True,
+              cross_cached: bool = False
+              ) -> Tuple[jax.Array, Optional[dict]]:
+    """GQA attention with optional KV cache (decode) and cross-attention
+    (xkv supplies the key/value sequence, or ``cross_cached=True`` marks the
+    cache as holding already-projected encoder memory)."""
+    B, Lq, D = x.shape
+    src = x if xkv is None else xkv
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"]).astype(x.dtype)
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+    q = shard(q, "act_bthd")
+
+    if cache is not None and xkv is None and not cross_cached:
+        # self-attention decode: append this step's k/v at cache_pos
+        k_new = jnp.einsum("btd,dhk->bthk", src, p["wk"]).astype(x.dtype)
+        if use_rope:
+            k_new = rope(k_new, positions, rope_theta)
+        v_new = jnp.einsum("btd,dhk->bthk", src, p["wv"]).astype(x.dtype)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, cache_pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, cache_pos, 0, 0))
+        cache = {"k": k, "v": v}
+        s_valid = cache_pos + Lq
+    elif cache is not None:
+        # cross-attention decode: encoder memory already projected & cached
+        k, v = cache["k"], cache["v"]
+        s_valid = k.shape[1]
+    else:
+        k = jnp.einsum("btd,dhk->bthk", src, p["wk"]).astype(x.dtype)
+        if use_rope:
+            k_pos = positions if xkv is None else jnp.arange(src.shape[1])
+            k = rope(k, k_pos, rope_theta)
+        v = jnp.einsum("btd,dhk->bthk", src, p["wv"]).astype(x.dtype)
+        s_valid = k.shape[1]
+    k = shard(k, "kv_cache")
+    v = shard(v, "kv_cache")
+
+    out = flash_attention(q, k, v, q_positions=positions, s_valid=s_valid,
+                          causal=causal and xkv is None and not cross_cached,
+                          window=window, softcap=softcap, kv_chunk=kv_chunk)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"]).astype(x.dtype)
+    return shard(y, "act_btd"), cache
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("btd,df->btf", x, p["w_gate"]))
+    h = h * jnp.einsum("btd,df->btf", x, p["w_in"])
+    h = shard(h.astype(x.dtype), "act_btf")
+    return shard(jnp.einsum("btf,fd->btd", h, p["w_out"]).astype(x.dtype),
+                 "act_btd")
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("btd,df->btf", x, p["w_in"]))
+    h = shard(h.astype(x.dtype), "act_btf")
+    return shard(jnp.einsum("btf,fd->btd", h, p["w_out"]).astype(x.dtype),
+                 "act_btd")
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return shard(jnp.take(table, tokens, axis=0), "act_btd")
+
+
+def unembed(table: jax.Array, x: jax.Array,
+            logit_softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("btd,vd->btv", x, table).astype(jnp.float32)
+    if logit_softcap > 0.0:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    return shard(logits, "logits")

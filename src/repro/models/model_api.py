@@ -1,0 +1,234 @@
+"""Unified model API over all assigned architecture families.
+
+One entry point per lifecycle stage, uniform across families:
+
+* :func:`pdefs` / :func:`init_params` / :func:`param_shapes` — parameter
+  tree (declarative ``PDef``), materialized or abstract (for the dry-run).
+* :func:`forward` — full-sequence forward (train / prefill); batch is a dict
+  with ``tokens`` plus the modality-stub extras (``patches`` for vlm,
+  ``frames`` for audio).
+* :func:`loss_fn` — next-token cross-entropy (+ MoE aux loss).
+* :func:`cache_shapes` / :func:`init_cache` — decode-state tree per family.
+* :func:`decode_step` — one-token serve step against the cache.
+* :func:`input_specs` — ShapeDtypeStruct stand-ins for every model input of
+  an (arch x shape) cell: the dry-run contract (no allocation).
+
+The shape cells (``train_4k`` …) lower either ``train_step`` (kind="train"),
+``forward`` (kind="prefill"), or ``decode_step`` (kind="decode") — see
+``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+from repro.models.params import PDef, materialize, shape_tree
+from repro.models.ssm import mamba_dims
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def pdefs(cfg: ArchConfig) -> dict:
+    if cfg.is_encdec:
+        return ed.encdec_pdefs(cfg)
+    return tf.decoder_pdefs(cfg)
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array, dtype=jnp.float32):
+    params = materialize(rng, pdefs(cfg))
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(dtype), params)
+    return params
+
+
+def param_shapes(cfg: ArchConfig, dtype=jnp.float32):
+    """Abstract parameter tree for AOT lowering (dry-run)."""
+    tree = shape_tree(pdefs(cfg))
+    if dtype != jnp.float32:
+        tree = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree)
+    return tree
+
+
+def n_params(cfg: ArchConfig) -> int:
+    from repro.models.params import n_params as _n
+    return _n(pdefs(cfg))
+
+
+def n_active_params(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: top_k of n_experts)."""
+    total = n_params(cfg)
+    if cfg.family != "moe" or cfg.n_experts == 0:
+        return total
+    expert = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_layers  # gate+in+out
+    all_experts = expert * cfg.n_experts
+    active = expert * cfg.top_k
+    return total - all_experts + active
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            remat: bool = True, logits_last_only: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, L, V), aux_loss scalar).  For vlm, the logits
+    cover only the text positions (patch prefix stripped).
+
+    ``logits_last_only`` (serving prefill): slice the hidden state to the
+    final position BEFORE the unembedding matmul, so the (B, L, vocab)
+    logits tensor is never materialized — at 32k x 200k-vocab that tensor
+    alone is ~2.6 GB/device in f32."""
+    if cfg.is_encdec:
+        return ed.encdec_forward(params, cfg, batch["tokens"],
+                                 batch["frames"], remat=remat,
+                                 last_only=logits_last_only)
+    if cfg.family == "ssm":
+        return tf.ssm_forward(params, cfg, batch["tokens"], remat=remat,
+                              last_only=logits_last_only)
+    if cfg.family == "hybrid":
+        return tf.hybrid_forward(params, cfg, batch["tokens"], remat=remat,
+                                 last_only=logits_last_only)
+    patches = batch.get("patches")
+    logits, aux = tf.dense_forward(params, cfg, batch["tokens"],
+                                   patches=patches, remat=remat,
+                                   last_only=logits_last_only)
+    if (cfg.family == "vlm" and patches is not None
+            and not logits_last_only):
+        logits = logits[:, patches.shape[1]:]
+    return logits, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            remat: bool = True, aux_weight: float = 0.01
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE over ``labels`` (already shifted by the data pipeline)."""
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        # mask padded vocab columns out of the partition function
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    loss = ce + aux_weight * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+def cache_shapes(cfg: ArchConfig, B: int, S: int,
+                 dtype=jnp.bfloat16) -> dict:
+    """Abstract decode-state tree (ShapeDtypeStructs)."""
+    nl, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+
+    def sds(shape, dt=dtype):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    if cfg.is_encdec:
+        F = cfg.enc_frames
+        return {"self_k": sds((nl, B, S, KV, hd)),
+                "self_v": sds((nl, B, S, KV, hd)),
+                "cross_k": sds((nl, B, F, KV, hd)),
+                "cross_v": sds((nl, B, F, KV, hd))}
+    if cfg.family == "ssm":
+        d_inner, H, conv_dim = mamba_dims(cfg.d_model, cfg.ssm_expand,
+                                          cfg.ssm_head_dim, cfg.ssm_state)
+        return {"conv": sds((nl, B, cfg.ssm_conv - 1, conv_dim)),
+                "state": sds((nl, B, H, cfg.ssm_head_dim, cfg.ssm_state),
+                             jnp.float32)}
+    if cfg.family == "hybrid":
+        n_super = nl // cfg.attn_every
+        per = cfg.attn_every
+        tail = nl - n_super * per
+        d_inner, H, conv_dim = mamba_dims(cfg.d_model, cfg.ssm_expand,
+                                          cfg.ssm_head_dim, cfg.ssm_state)
+        tree = {
+            "attn_k": sds((n_super, B, S, KV, hd)),
+            "attn_v": sds((n_super, B, S, KV, hd)),
+            "super_conv": sds((n_super, per, B, cfg.ssm_conv - 1, conv_dim)),
+            "super_state": sds((n_super, per, B, H, cfg.ssm_head_dim,
+                                cfg.ssm_state), jnp.float32),
+        }
+        if tail:
+            tree["tail_conv"] = sds((tail, B, cfg.ssm_conv - 1, conv_dim))
+            tree["tail_state"] = sds((tail, B, H, cfg.ssm_head_dim,
+                                      cfg.ssm_state), jnp.float32)
+        return tree
+    # dense / moe / vlm
+    return {"k": sds((nl, B, S, KV, hd)), "v": sds((nl, B, S, KV, hd))}
+
+
+def init_cache(cfg: ArchConfig, B: int, S: int, dtype=jnp.bfloat16) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, B, S, dtype))
+
+
+def decode_step(params, cfg: ArchConfig, cache: dict, tokens: jax.Array,
+                pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """One serve step: tokens (B, 1), pos scalar int32 -> (logits (B, 1, V),
+    new cache)."""
+    if cfg.is_encdec:
+        return ed.encdec_decode_step(params, cfg, cache, tokens, pos)
+    if cfg.family == "ssm":
+        return tf.ssm_decode_step(params, cfg, cache, tokens, pos)
+    if cfg.family == "hybrid":
+        return tf.hybrid_decode_step(params, cfg, cache, tokens, pos)
+    return tf.dense_decode_step(params, cfg, cache, tokens, pos)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (the dry-run contract)
+# ---------------------------------------------------------------------------
+def batch_shapes(cfg: ArchConfig, cell: ShapeCell,
+                 act_dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one cell, as ShapeDtypeStructs (weak-type-correct,
+    shardable, no allocation).  kind="train": tokens+labels (+stub extras);
+    "prefill": tokens (+extras); "decode": tokens (B, 1) + pos."""
+    B, L = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    if cell.kind == "decode":
+        return {"tokens": tok((B, 1)),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+    spec: Dict[str, jax.ShapeDtypeStruct] = {"tokens": tok((B, L))}
+    if cell.kind == "train":
+        spec["labels"] = tok((B, L))
+    if cfg.family == "vlm":
+        spec["patches"] = jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model),
+                                               act_dtype)
+    if cfg.is_encdec:
+        spec["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model),
+                                              act_dtype)
+    return spec
+
+
+def make_batch(cfg: ArchConfig, cell: ShapeCell, rng: np.random.Generator,
+               act_dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Materialize a random batch matching :func:`batch_shapes` (smoke tests
+    and the end-to-end examples)."""
+    out = {}
+    for k, s in batch_shapes(cfg, cell, act_dtype).items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab if k in ("tokens", "labels") else 1
+            out[k] = jnp.asarray(
+                rng.integers(0, max(hi, 1), size=s.shape, dtype=np.int64),
+                jnp.int32)
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(s.shape).astype(np.float32), s.dtype)
+    return out

@@ -1,0 +1,61 @@
+"""Declarative parameter trees.
+
+A model's parameters are declared once as a tree of :class:`PDef` (shape +
+init + logical sharding name + stacked-layer prefix count).  From that single
+source we derive: materialized params (`materialize`), abstract shapes for
+the dry-run (`shape_tree`), and NamedShardings
+(`distributed.sharding.param_sharding_tree`) — no drift between them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    shape: Tuple[int, ...]
+    logical: Optional[str] = None   # sharding.ShardingCtx.spec key
+    init: str = "normal"            # normal | zeros | ones
+    scale: Optional[float] = None   # default: 1/sqrt(fan_in)
+    dtype: jnp.dtype = jnp.float32
+    stacked: int = 0                # leading stacked-layer axes (for scan)
+
+
+def _is_pdef(x):
+    return isinstance(x, PDef)
+
+
+def shape_tree(tree):
+    return jtu.tree_map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+                        tree, is_leaf=_is_pdef)
+
+
+def n_params(tree) -> int:
+    leaves = jtu.tree_leaves(tree, is_leaf=_is_pdef)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def materialize(rng: jax.Array, tree):
+    """Create real params.  Keys derive from the flattened path, so param
+    values are stable under tree extension."""
+    leaves, treedef = jtu.tree_flatten_with_path(tree, is_leaf=_is_pdef)
+
+    def one(path, d: PDef):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        key = jax.random.fold_in(rng, hash(jtu.keystr(path)) % (2 ** 31))
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        scale = d.scale if d.scale is not None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(key, d.shape, jnp.float32) * scale
+                ).astype(d.dtype)
+
+    vals = [one(path, d) for path, d in leaves]
+    return jtu.tree_unflatten(treedef, vals)

@@ -1,0 +1,176 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is cut into
+Q-length chunks; within a chunk the recurrence is computed in its dual
+quadratic (attention-like) form on the MXU, and a lax.scan carries the
+(B, H, dh, N) state across chunks.  The chunk streaming mirrors the paper's
+tile streaming: a fixed-size fast-memory working set swept over a long
+operand.  Decode is the O(1) recurrent step.
+
+State-space recurrence (per head h, discretized):
+    s_t = exp(dt_t * A) * s_{t-1} + dt_t * B_t x_t^T      (s: (dh, N))
+    y_t = s_t C_t + D * x_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+# SSD implementation toggle: "jnp" (lax.scan over chunks, portable) or
+# "pallas" (kernels/ssd_chunk.py — keeps the (Q, Q) intra-chunk working
+# set in VMEM; interpret mode on CPU).  Pallas path covers the no-cache
+# train/prefill case; decode and carried-state prefill fall back to jnp.
+_SSD_IMPL = "jnp"
+
+
+def set_ssd_impl(impl: str) -> str:
+    global _SSD_IMPL
+    assert impl in ("jnp", "pallas"), impl
+    prev = _SSD_IMPL
+    _SSD_IMPL = impl
+    return prev
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{k=j+1..i} a[k] for i >= j else -inf.  a: (..., Q)."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]        # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, D: jax.Array, *, chunk: int = 256,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, L, H, dh); dt: (B, L, H); A: (H,) negative; Bm/Cm: (B, L, N);
+    D: (H,).  Returns (y (B, L, H, dh), final_state (B, H, dh, N))."""
+    Bb, L, H, dh = x.shape
+    N = Bm.shape[-1]
+    if _SSD_IMPL == "pallas" and init_state is None and L % 128 == 0:
+        from repro.kernels.ssd_chunk import ssd_chunked_tpu
+        Qk = min(max(chunk, 128), 256)
+        while L % Qk:
+            Qk //= 2
+        return ssd_chunked_tpu(x, dt, A, Bm, Cm, D, Q=max(Qk, 128)
+                               if L % max(Qk, 128) == 0 else L)
+    Q = min(chunk, L)
+    nc = -(-L // Q)
+    pad = nc * Q - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    # (nc, B, Q, ...) for scan
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(Bb, nc, Q, *t.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = map(to_chunks, (x, dt, Bm, Cm))
+    a = dtc * A[None, None, None, :]                     # (nc, B, Q, H)
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((Bb, H, dh, N), jnp.float32))
+
+    def step(s, inp):
+        xq, dtq, bq, cq, aq = inp                        # (B,Q,H,dh) etc.
+        aq = aq.astype(jnp.float32)
+        lmat = jnp.exp(_segsum(jnp.moveaxis(aq, 1, -1)))  # (B, H, Q, Q)
+        scores = jnp.einsum("bin,bjn->bij", cq.astype(jnp.float32),
+                            bq.astype(jnp.float32))       # (B, Q, Q)
+        w = scores[:, None] * lmat                        # (B, H, i, j)
+        y_diag = jnp.einsum("bhij,bjh,bjhd->bihd", w,
+                            dtq.astype(jnp.float32),
+                            xq.astype(jnp.float32))
+        # contribution of the carried-in state
+        cum_a = jnp.cumsum(aq, axis=1)                    # (B, Q, H)
+        decay_in = jnp.exp(cum_a)                         # (B, Q, H)
+        y_state = jnp.einsum("bqh,bhdn,bqn->bqhd", decay_in, s,
+                             cq.astype(jnp.float32))
+        y = y_diag + y_state
+        # state update: s' = exp(sum a) s + sum_j exp(sum_{k>j} a) dt_j B_j x_j^T
+        total = cum_a[:, -1]                              # (B, H)
+        decay_out = jnp.exp(total[:, None] - cum_a)       # (B, Q, H)
+        ds = jnp.einsum("bqh,bqh,bqhd,bqn->bhdn", decay_out,
+                        dtq.astype(jnp.float32), xq.astype(jnp.float32),
+                        bq.astype(jnp.float32))
+        s_new = jnp.exp(total)[..., None, None] * s + ds
+        return s_new, y
+
+    s_final, yc = jax.lax.scan(step, s0, (xc, dtc, Bc, Cc, a))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bb, nc * Q, H, dh)[:, :L]
+    y = y + D[None, None, :, None] * x[:, :L].astype(jnp.float32)
+    return y.astype(x.dtype), s_final
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                    Cm: jax.Array, D: jax.Array, state: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrent step.  x: (B, H, dh); dt: (B, H); Bm/Cm: (B, N);
+    state: (B, H, dh, N)."""
+    decay = jnp.exp(dt * A[None, :]).astype(jnp.float32)  # (B, H)
+    upd = jnp.einsum("bh,bhd,bn->bhdn", dt.astype(jnp.float32),
+                     x.astype(jnp.float32), Bm.astype(jnp.float32))
+    state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhdn,bn->bhd", state, Cm.astype(jnp.float32))
+    y = y + D[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block (projections + conv + SSD + gate)
+# ---------------------------------------------------------------------------
+def mamba_dims(d_model: int, expand: int, head_dim: int, state: int):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    conv_dim = d_inner + 2 * state
+    return d_inner, H, conv_dim
+
+
+def mamba_block(p: dict, x: jax.Array, *, head_dim: int, state: int,
+                expand: int = 2, conv_k: int = 4, chunk: int = 256,
+                cache: Optional[dict] = None
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, L, D).  cache (decode): {"conv": (B, k-1, conv_dim),
+    "state": (B, H, dh, N)}; L must be 1 in decode."""
+    B, L, D = x.shape
+    d_inner, H, conv_dim = mamba_dims(D, expand, head_dim, state)
+
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["w_in"]).astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, L, H)
+
+    if cache is None:
+        # causal depthwise conv over the sequence
+        pad_x = jnp.pad(xbc, ((0, 0), (conv_k - 1, 0), (0, 0)))
+        windows = jnp.stack([pad_x[:, i:i + L] for i in range(conv_k)], 2)
+        xbc = jnp.einsum("btkc,kc->btc", windows, p["conv_w"])
+        new_cache = None
+    else:
+        hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, k, c)
+        xbc = jnp.einsum("bkc,kc->bc", hist, p["conv_w"])[:, None, :]
+        new_cache = {"conv": hist[:, 1:]}
+    xbc = jax.nn.silu(xbc)
+
+    x_ssm, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    x_ssm = x_ssm.reshape(B, L, H, head_dim)
+    x_ssm = shard(x_ssm, "act_bthd")
+    A = -jnp.exp(p["A_log"])                              # (H,)
+
+    if cache is None:
+        y, _ = ssd_chunked(x_ssm, dt, A, Bm, Cm, p["D"], chunk=chunk)
+    else:
+        y, s = ssd_decode_step(x_ssm[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                               p["D"], cache["state"])
+        new_cache["state"] = s
+        y = y[:, None]
+    y = y.reshape(B, L, d_inner)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y.astype(x.dtype), p["w_out"])
+    return shard(out, "act_btd"), new_cache

@@ -1,0 +1,358 @@
+"""Decoder-only model families: dense, MoE, VLM (stub frontend), pure-SSM
+and the Zamba-style hybrid.
+
+One parameter-definition function and one forward function per family,
+all scan-over-layers (stacked params) so the lowered HLO is O(1) in depth.
+The layer body is remat'd (jax.checkpoint) for training shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import (ATTN_LOGICAL, MLP_LOGICAL,
+                                        MOE_LOGICAL, SSM_LOGICAL,
+                                        gather_fsdp, shard, shard_seq)
+from repro.models import layers as ll
+from repro.models.moe import moe_block
+from repro.models.params import PDef
+from repro.models.ssm import mamba_block, mamba_dims
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+def _attn_pdefs(cfg: ArchConfig, nl: int) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": PDef((nl, D, H, hd), "p_attn_qkv", stacked=1),
+        "wk": PDef((nl, D, KV, hd), "p_attn_qkv", stacked=1),
+        "wv": PDef((nl, D, KV, hd), "p_attn_qkv", stacked=1),
+        "wo": PDef((nl, H, hd, D), "p_attn_o", stacked=1,
+                   scale=1.0 / np.sqrt(H * hd)),
+    }
+
+
+def _mlp_pdefs(cfg: ArchConfig, nl: int, d_ff: int, gated: bool = True) -> dict:
+    D = cfg.d_model
+    p = {
+        "w_in": PDef((nl, D, d_ff), "p_mlp_in", stacked=1),
+        "w_out": PDef((nl, d_ff, D), "p_mlp_out", stacked=1),
+    }
+    if gated:
+        p["w_gate"] = PDef((nl, D, d_ff), "p_mlp_in", stacked=1)
+    return p
+
+
+def _moe_pdefs(cfg: ArchConfig, nl: int) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    return {
+        "router": PDef((nl, D, E), "p_router", stacked=1),
+        "w_gate": PDef((nl, E, D, F), "p_expert_in", stacked=2),
+        "w_in": PDef((nl, E, D, F), "p_expert_in", stacked=2),
+        "w_out": PDef((nl, E, F, D), "p_expert_out", stacked=2),
+    }
+
+
+def _mamba_pdefs(cfg: ArchConfig, stack: Tuple[int, ...]) -> dict:
+    D = cfg.d_model
+    d_inner, H, conv_dim = mamba_dims(D, cfg.ssm_expand, cfg.ssm_head_dim,
+                                      cfg.ssm_state)
+    proj = 2 * d_inner + 2 * cfg.ssm_state + H
+    ns = len(stack)
+    return {
+        "ln": PDef(stack + (D,), "p_norm", init="zeros", stacked=ns),
+        "w_in": PDef(stack + (D, proj), "p_ssm_in", stacked=ns),
+        "w_out": PDef(stack + (d_inner, D), "p_ssm_out", stacked=ns),
+        "conv_w": PDef(stack + (cfg.ssm_conv, conv_dim), "p_conv",
+                       stacked=ns, scale=0.5),
+        "dt_bias": PDef(stack + (H,), "p_ssm_small", init="zeros", stacked=ns),
+        "A_log": PDef(stack + (H,), "p_ssm_small", init="zeros", stacked=ns),
+        "D": PDef(stack + (H,), "p_ssm_small", init="ones", stacked=ns),
+    }
+
+
+def decoder_pdefs(cfg: ArchConfig) -> dict:
+    D, V, nl = cfg.d_model, cfg.vocab_padded, cfg.n_layers
+    p: dict = {
+        "embed": PDef((V, D), "p_embed", scale=0.02),
+        "unembed": PDef((V, D), "p_embed", scale=1.0 / np.sqrt(D)),
+        "final_norm": PDef((D,), "p_norm", init="zeros"),
+    }
+    if cfg.family == "vlm":
+        p["patch_proj"] = PDef((D, D), None)  # stub-frontend adapter
+    if cfg.family == "ssm":
+        p["layers"] = _mamba_pdefs(cfg, (nl,))
+        return p
+    if cfg.family == "hybrid":
+        n_super = nl // cfg.attn_every
+        per = cfg.attn_every
+        tail = nl - n_super * per
+        p["shared_attn"] = {
+            "ln1": PDef((D,), "p_norm", init="zeros"),
+            "attn": {k: PDef(v.shape[1:], v.logical, scale=v.scale)
+                     for k, v in _attn_pdefs(cfg, 1).items()},
+            "ln2": PDef((D,), "p_norm", init="zeros"),
+            "mlp": {k: PDef(v.shape[1:], v.logical, scale=v.scale)
+                    for k, v in _mlp_pdefs(cfg, 1, cfg.d_ff).items()},
+        }
+        p["mamba_super"] = _mamba_pdefs(cfg, (n_super, per))
+        if tail:
+            p["mamba_tail"] = _mamba_pdefs(cfg, (tail,))
+        return p
+    # dense / moe / vlm transformer stack
+    lay = {
+        "ln1": PDef((nl, D), "p_norm", init="zeros", stacked=1),
+        "ln2": PDef((nl, D), "p_norm", init="zeros", stacked=1),
+        "attn": _attn_pdefs(cfg, nl),
+    }
+    if cfg.family == "moe":
+        lay["moe"] = _moe_pdefs(cfg, nl)
+        if cfg.shared_expert_d_ff:
+            lay["mlp"] = _mlp_pdefs(cfg, nl, cfg.shared_expert_d_ff)
+    else:
+        lay["mlp"] = _mlp_pdefs(cfg, nl, cfg.d_ff)
+    if cfg.alternate_local_global:
+        # per-layer sliding window (0 = global), static data not trained
+        pass
+    p["layers"] = lay
+    return p
+
+
+def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """Per-layer window sizes: gemma2 alternates local(window)/global."""
+    if cfg.alternate_local_global:
+        w = [cfg.window if i % 2 == 0 else 0 for i in range(cfg.n_layers)]
+    else:
+        w = [cfg.window] * cfg.n_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def _attn_mlp_layer(cfg: ArchConfig, lp: dict, x, positions, window,
+                    cache=None, cache_pos=None, kv_chunk=1024):
+    lp = dict(lp, attn=gather_fsdp(lp["attn"], ATTN_LOGICAL))
+    if "mlp" in lp:
+        lp["mlp"] = gather_fsdp(lp["mlp"], MLP_LOGICAL)
+    if "moe" in lp:
+        lp["moe"] = gather_fsdp(lp["moe"], MOE_LOGICAL)
+    h = ll.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    y, new_cache = ll.attention(
+        lp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+        rope_theta=cfg.rope_theta, positions=positions, cache=cache,
+        cache_pos=cache_pos, window=window, softcap=cfg.attn_softcap,
+        kv_chunk=kv_chunk)
+    x = x + y
+    h = ll.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        y, aux = moe_block(lp["moe"], h, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k)
+        if cfg.shared_expert_d_ff:
+            y = y + ll.swiglu(lp["mlp"], h)
+    else:
+        y = ll.swiglu(lp["mlp"], h)
+    return x + y, aux, new_cache
+
+
+def dense_forward(params: dict, cfg: ArchConfig, tokens: jax.Array, *,
+                  patches: Optional[jax.Array] = None,
+                  remat: bool = True,
+                  last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train / prefill) for dense / moe / vlm.
+    Returns (logits, aux_loss)."""
+    x = ll.embed(params["embed"], tokens)
+    if cfg.family == "vlm":
+        pe = jnp.einsum("bpd,de->bpe", patches, params["patch_proj"])
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    L = x.shape[1]
+    positions = jnp.arange(L)
+    windows = layer_windows(cfg)
+    kv_chunk = 1024 if L >= 1024 else L
+
+    def body(x, xs):
+        lp, window = xs
+        x, aux, _ = _attn_mlp_layer(cfg, lp, x, positions, window,
+                                    kv_chunk=kv_chunk)
+        return shard_seq(x), aux
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, auxs = jax.lax.scan(body_fn, x, (params["layers"], windows))
+    x = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        # serving prefill: only the final position's logits are needed —
+        # slicing BEFORE the unembed matmul avoids materializing the
+        # (B, L, vocab) tensor (4k-512k x vocab floats).
+        x = x[:, -1:]
+    logits = ll.unembed(params["unembed"], x, cfg.logit_softcap)
+    return logits, auxs.mean()
+
+
+def dense_decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                      tokens: jax.Array, pos: jax.Array
+                      ) -> Tuple[jax.Array, dict]:
+    """One decode step.  cache: {"k","v"}: (nl, B, S, KV, hd); tokens (B, 1);
+    pos: scalar int32 (uniform across batch)."""
+    x = ll.embed(params["embed"], tokens)
+    positions = pos + jnp.arange(1)
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        lp, window, ck, cv = xs
+        x, _, new_cache = _attn_mlp_layer(
+            cfg, lp, x, positions, window,
+            cache={"k": ck, "v": cv}, cache_pos=pos,
+            kv_chunk=min(2048, ck.shape[1]))
+        return x, (new_cache["k"], new_cache["v"])
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], windows,
+                                         cache["k"], cache["v"]))
+    x = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(params["unembed"], x, cfg.logit_softcap)
+    return logits, {"k": ks, "v": vs}
+
+
+# -- pure SSM ---------------------------------------------------------------
+def ssm_forward(params: dict, cfg: ArchConfig, tokens: jax.Array, *,
+                remat: bool = True,
+                last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    x = ll.embed(params["embed"], tokens)
+
+    def body(x, lp):
+        lp = gather_fsdp(lp, SSM_LOGICAL)
+        h = ll.rmsnorm(x, lp["ln"], cfg.norm_eps)
+        y, _ = mamba_block(lp, h, head_dim=cfg.ssm_head_dim,
+                           state=cfg.ssm_state, expand=cfg.ssm_expand,
+                           conv_k=cfg.ssm_conv)
+        return shard_seq(x + y), jnp.zeros((), jnp.float32)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return ll.unembed(params["unembed"], x), jnp.zeros((), jnp.float32)
+
+
+def ssm_decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                    tokens: jax.Array, pos: jax.Array
+                    ) -> Tuple[jax.Array, dict]:
+    x = ll.embed(params["embed"], tokens)
+
+    def body(x, xs):
+        lp, conv, state = xs
+        h = ll.rmsnorm(x, lp["ln"], cfg.norm_eps)
+        y, nc = mamba_block(lp, h, head_dim=cfg.ssm_head_dim,
+                            state=cfg.ssm_state, expand=cfg.ssm_expand,
+                            conv_k=cfg.ssm_conv,
+                            cache={"conv": conv, "state": state})
+        return x + y, (nc["conv"], nc["state"])
+
+    x, (convs, states) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["state"]))
+    x = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return ll.unembed(params["unembed"], x), {"conv": convs, "state": states}
+
+
+# -- hybrid (zamba2) ----------------------------------------------------------
+def _shared_attn_apply(cfg, sp, x, positions, cache=None, cache_pos=None,
+                       kv_chunk=1024):
+    h = ll.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    y, new_cache = ll.attention(
+        sp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+        rope_theta=cfg.rope_theta, positions=positions, cache=cache,
+        cache_pos=cache_pos, kv_chunk=kv_chunk)
+    x = x + y
+    h = ll.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+    return x + ll.swiglu(sp["mlp"], h), new_cache
+
+
+def _mamba_apply(cfg, lp, x, cache=None):
+    lp = gather_fsdp(lp, SSM_LOGICAL)
+    h = ll.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    y, nc = mamba_block(lp, h, head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+                        expand=cfg.ssm_expand, conv_k=cfg.ssm_conv,
+                        cache=cache)
+    return x + y, nc
+
+
+def hybrid_forward(params: dict, cfg: ArchConfig, tokens: jax.Array, *,
+                   remat: bool = True,
+                   last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    x = ll.embed(params["embed"], tokens)
+    L = x.shape[1]
+    positions = jnp.arange(L)
+    kv_chunk = 1024 if L >= 1024 else L
+    sp = params["shared_attn"]
+
+    def super_body(x, mp):
+        x, _ = _shared_attn_apply(cfg, sp, x, positions, kv_chunk=kv_chunk)
+
+        def inner(x2, lp):
+            x2, _ = _mamba_apply(cfg, lp, x2)
+            return x2, None
+
+        x, _ = jax.lax.scan(inner, x, mp)
+        return shard_seq(x), None
+
+    body_fn = jax.checkpoint(super_body) if remat else super_body
+    x, _ = jax.lax.scan(body_fn, x, params["mamba_super"])
+    if "mamba_tail" in params:
+        def tail(x2, lp):
+            x2, _ = _mamba_apply(cfg, lp, x2)
+            return x2, None
+        x, _ = jax.lax.scan(tail, x, params["mamba_tail"])
+    x = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return ll.unembed(params["unembed"], x), jnp.zeros((), jnp.float32)
+
+
+def hybrid_decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                       tokens: jax.Array, pos: jax.Array
+                       ) -> Tuple[jax.Array, dict]:
+    x = ll.embed(params["embed"], tokens)
+    positions = pos + jnp.arange(1)
+    sp = params["shared_attn"]
+
+    def super_body(x, xs):
+        mp, ck, cv, conv, state = xs
+        x, ac = _shared_attn_apply(cfg, sp, x, positions,
+                                   cache={"k": ck, "v": cv}, cache_pos=pos,
+                                   kv_chunk=min(2048, ck.shape[1]))
+
+        def inner(x2, ys):
+            lp, cv_, st_ = ys
+            x2, nc = _mamba_apply(cfg, lp, x2,
+                                  cache={"conv": cv_, "state": st_})
+            return x2, (nc["conv"], nc["state"])
+
+        x, (convs, states) = jax.lax.scan(inner, x, (mp, conv, state))
+        return x, (ac["k"], ac["v"], convs, states)
+
+    x, (ks, vs, convs, states) = jax.lax.scan(
+        super_body, x,
+        (params["mamba_super"], cache["attn_k"], cache["attn_v"],
+         cache["super_conv"], cache["super_state"]))
+    new_cache = {"attn_k": ks, "attn_v": vs, "super_conv": convs,
+                 "super_state": states}
+    if "mamba_tail" in params:
+        def tail(x2, ys):
+            lp, cv_, st_ = ys
+            x2, nc = _mamba_apply(cfg, lp, x2,
+                                  cache={"conv": cv_, "state": st_})
+            return x2, (nc["conv"], nc["state"])
+        x, (tc, tst) = jax.lax.scan(
+            tail, x, (params["mamba_tail"], cache["tail_conv"],
+                      cache["tail_state"]))
+        new_cache["tail_conv"] = tc
+        new_cache["tail_state"] = tst
+    x = ll.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return ll.unembed(params["unembed"], x), new_cache

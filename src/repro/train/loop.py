@@ -1,0 +1,161 @@
+"""The training loop: jit'd train step, checkpoint/restart, straggler watch.
+
+``Trainer`` drives any assigned architecture end-to-end:
+
+* the step is one jit'd function (loss -> grad -> clip -> AdamW), donated
+  state, optional sharding context (single-device smoke and 512-chip dry-run
+  share this code);
+* checkpoints every ``ckpt_every`` steps through ``io.checkpoint`` (two-phase
+  commit); on construction it restores the newest sealed checkpoint and
+  replays the data stream to the exact position;
+* non-finite-loss rollback: ``patience`` consecutive bad steps trigger a
+  restore from the last sealed checkpoint (silent-corruption regime of
+  ``distributed.fault``);
+* per-step wall time feeds the ``StragglerDetector``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.fault import StragglerDetector
+from repro.io import checkpoint as ckpt
+from repro.models import model_api
+from repro.train.data import DataConfig, TokenStream
+from repro.train.optimizer import (AdamWConfig, OptState, adamw_update,
+                                   init_opt_state)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    remat: bool = True
+    nan_patience: int = 3
+    param_dtype: str = "float32"
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
+                    remat: bool = True, donate: bool = True):
+    """Build the jit'd (params, opt, batch) -> (params, opt, metrics) step."""
+
+    def step(params, opt_state: OptState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model_api.loss_fn(p, cfg, batch, remat=remat),
+            has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+class Trainer:
+    def __init__(self, arch_cfg: ArchConfig, train_cfg: TrainConfig,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 data_cfg: Optional[DataConfig] = None):
+        self.cfg = arch_cfg
+        self.tc = train_cfg
+        self.oc = opt_cfg or AdamWConfig(total_steps=train_cfg.steps)
+        self.dc = data_cfg or DataConfig(vocab=arch_cfg.vocab, seq_len=128,
+                                         global_batch=4, seed=train_cfg.seed)
+        self.data = TokenStream(self.dc)
+        self.detector = StragglerDetector()
+        self.step_fn = make_train_step(arch_cfg, self.oc,
+                                       remat=train_cfg.remat)
+        self.rng = np.random.default_rng(train_cfg.seed)
+
+        dtype = getattr(jnp, train_cfg.param_dtype)
+        self.params = model_api.init_params(
+            arch_cfg, jax.random.key(train_cfg.seed), dtype=dtype)
+        self.opt_state = init_opt_state(self.params)
+        self.step = 0
+        self._bad_steps = 0
+        self.metrics_log: list = []
+        self._maybe_restore()
+
+    # -- checkpoint/restart --------------------------------------------------
+    def _maybe_restore(self) -> bool:
+        if not self.tc.ckpt_dir:
+            return False
+        path = ckpt.latest_complete(self.tc.ckpt_dir)
+        if path is None:
+            return False
+        state, manifest = ckpt.restore(
+            path, {"params": self.params, "opt": self.opt_state})
+        self.params = jax.tree.map(jnp.asarray, state["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, state["opt"])
+        self.step = int(manifest["step"])
+        self.data.load_state_dict(manifest["extra"]["data_state"])
+        return True
+
+    def _save(self) -> None:
+        if not self.tc.ckpt_dir:
+            return
+        ckpt.save(self.tc.ckpt_dir, self.step,
+                  {"params": self.params, "opt": self.opt_state},
+                  extra={"data_state": self.data.state_dict()})
+        ckpt.prune(self.tc.ckpt_dir, self.tc.ckpt_keep)
+
+    # -- the loop --------------------------------------------------------------
+    def _batch_for(self, raw: Dict[str, np.ndarray]) -> Dict[str, jax.Array]:
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.asarray(self.rng.standard_normal(
+                (batch["tokens"].shape[0], self.cfg.n_patches,
+                 self.cfg.d_model)).astype(np.float32))
+        if self.cfg.is_encdec:
+            batch["frames"] = jnp.asarray(self.rng.standard_normal(
+                (batch["tokens"].shape[0], self.cfg.enc_frames,
+                 self.cfg.d_model)).astype(np.float32))
+        return batch
+
+    def run(self, steps: Optional[int] = None) -> Dict[str, float]:
+        target = self.step + (steps if steps is not None else self.tc.steps)
+        last: Dict[str, float] = {}
+        while self.step < target:
+            raw = next(self.data)
+            batch = self._batch_for(raw)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            status = self.detector.observe(dt)
+
+            if not np.isfinite(loss):
+                self._bad_steps += 1
+                if self._bad_steps >= self.tc.nan_patience:
+                    restored = self._maybe_restore()
+                    self._bad_steps = 0
+                    if not restored:
+                        raise FloatingPointError(
+                            f"non-finite loss at step {self.step}, "
+                            "no checkpoint to roll back to")
+                    continue
+            else:
+                self._bad_steps = 0
+
+            self.step += 1
+            last = {k: float(v) for k, v in metrics.items()}
+            last.update(step_time=dt, straggler=status["straggler"])
+            self.metrics_log.append({"step": self.step, **last})
+            if self.tc.ckpt_dir and self.step % self.tc.ckpt_every == 0:
+                self._save()
+        if self.tc.ckpt_dir:
+            self._save()
+        return last

@@ -1,0 +1,184 @@
+"""Distribution-layer tests.
+
+Multi-device collective tests run in a SUBPROCESS with
+``--xla_force_host_platform_device_count=8`` so the main pytest process
+keeps its single CPU device (smoke tests must see 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.distributed.fault import (Heartbeat, MeshPlan, StragglerConfig,
+                                     StragglerDetector, elastic_plan,
+                                     rebalance_hint)
+from repro.io import checkpoint as ckpt
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Collectives (8 fake devices)
+# ---------------------------------------------------------------------------
+def test_hierarchical_psum_matches_global_mean():
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.collectives import hierarchical_psum
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "b": jnp.ones((5,)) * 2}
+        # replicated input: hierarchical mean over pod+data == identity here;
+        # use shard_map manually to sum distinct per-device values instead.
+        out = hierarchical_psum(tree, mesh)
+        np.testing.assert_allclose(np.asarray(out["a"]),
+                                   np.asarray(tree["a"]), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(out["b"]),
+                                   np.asarray(tree["b"]), rtol=1e-6)
+        print("OK")
+    """)
+
+
+def test_compressed_pod_psum_error_feedback():
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.collectives import (compressed_pod_psum,
+                                                   init_error_state)
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        g = {"w": jnp.asarray(np.random.default_rng(0)
+                              .standard_normal((64,)), jnp.float32)}
+        err = init_error_state(g, mesh)
+        out, err2 = compressed_pod_psum(g, mesh, err)
+        # replicated input -> mean == input, up to int8 quantization error
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(g["w"]), atol=0.05)
+        # error feedback state captured the residual
+        assert float(jnp.abs(err2["w"]).sum()) >= 0
+        print("OK")
+    """)
+
+
+def test_collectives_visible_in_hlo():
+    """The roofline parser must see the explicit collective schedule."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.distributed.collectives import hierarchical_psum
+        from repro.launch import hlo_analysis
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        tree = {"a": jnp.ones((128,))}
+        hlo = jax.jit(lambda t: hierarchical_psum(t, mesh)).lower(tree)\\
+                 .compile().as_text()
+        r = hlo_analysis.analyze(hlo)
+        ops = r["collective_ops"]
+        assert ops["all-reduce"] >= 1 or ops["reduce-scatter"] >= 1, ops
+        assert ops["all-gather"] >= 1, ops
+        print(sorted((k, v) for k, v in ops.items() if v))
+    """)
+    assert "all-gather" in out
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance (host-side logic, no devices needed)
+# ---------------------------------------------------------------------------
+def test_straggler_detector_flags_slow_steps():
+    det = StragglerDetector(StragglerConfig(warmup_steps=5, patience=2,
+                                            z_threshold=3.0))
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        det.observe(1.0 + rng.normal(0, 0.01))
+    s1 = det.observe(5.0)
+    assert s1["z"] > 3.0 and s1["straggler"] == 0.0
+    s2 = det.observe(5.0)
+    assert s2["straggler"] == 1.0
+
+
+def test_straggler_one_hiccup_does_not_poison():
+    det = StragglerDetector(StragglerConfig(warmup_steps=5, patience=3))
+    for _ in range(20):
+        det.observe(1.0)
+    det.observe(50.0)  # single hiccup
+    s = det.observe(1.0)
+    assert s["straggler"] == 0.0 and abs(s["ewma"] - 1.0) < 0.1
+
+
+def test_rebalance_hint_preserves_global_batch():
+    out = rebalance_hint([1.0, 1.0, 2.0, 4.0], [8, 8, 8, 8])
+    assert sum(out) == 32
+    assert out[3] < out[0]  # slowest host gets least work
+
+
+def test_elastic_plan_shrinks_mesh():
+    full = elastic_plan(512)
+    assert full.shape == (2, 16, 16)
+    one_pod = elastic_plan(300)   # one full pod survives
+    assert one_pod.shape == (16, 16)
+    degraded = elastic_plan(250)  # partial pod: 15 data rows -> 8 (pow2)
+    assert degraded.shape == (8, 16)
+    assert degraded.n_devices <= 250
+
+
+def test_heartbeat_detects_dead_host():
+    clock = {"t": 0.0}
+    hb = Heartbeat(4, timeout_s=10.0, now_fn=lambda: clock["t"])
+    clock["t"] = 5.0
+    hb.beat(0); hb.beat(1); hb.beat(2)
+    clock["t"] = 12.0  # host 3 last seen at t=0 (init) -> 12 > 10 timeout
+    assert hb.dead_hosts() == [3]
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint two-phase commit
+# ---------------------------------------------------------------------------
+def test_partial_checkpoint_ignored(tmp_path):
+    """A crash between payload and manifest leaves no restorable state."""
+    d = str(tmp_path)
+    state = {"params": {"w": np.arange(6.0).reshape(2, 3)}}
+    ckpt.save(d, 5, state)
+    # simulate a crash mid-write of step 10: payload but no manifest
+    part = os.path.join(d, "step_00000010.tmp")
+    os.makedirs(part)
+    np.savez(os.path.join(part, "shard_00000.npz"),
+             **{"params/['w']": np.zeros((2, 3))})
+    latest = ckpt.latest_complete(d)
+    assert latest and latest.endswith("step_00000005")
+    restored, manifest = ckpt.restore(latest, state)
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  state["params"]["w"])
+    assert manifest["step"] == 5
+
+
+def test_prune_keeps_newest_and_cleans_tmp(tmp_path):
+    d = str(tmp_path)
+    state = {"p": {"w": np.zeros(3)}}
+    for step in (1, 2, 3, 4):
+        ckpt.save(d, step, state)
+    os.makedirs(os.path.join(d, "step_00000099.tmp"))
+    ckpt.prune(d, keep=2)
+    left = sorted(os.listdir(d))
+    assert left == ["step_00000003", "step_00000004"]
+
+
+def test_resharding_restore_shapes(tmp_path):
+    """Save under one 'mesh', restore into a differently-sharded (same
+    logical shape) structure — the npz stores logical arrays."""
+    d = str(tmp_path)
+    state = {"params": {"w": np.random.default_rng(0)
+                        .standard_normal((16, 8))}}
+    ckpt.save(d, 1, state, mesh_shape=(2, 16, 16))
+    restored, manifest = ckpt.restore(ckpt.latest_complete(d), state)
+    assert manifest["mesh_shape"] == [2, 16, 16]
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  state["params"]["w"])

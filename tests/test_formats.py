@@ -1,0 +1,115 @@
+"""Format round-trips, byte-exact size accounting, chunk-packing invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (COO, CSR, from_coo_tiled, to_chunked)
+from repro.sparse.generate import rmat, sbm
+
+
+def _edge_set(coo):
+    return set(zip(coo.rows.tolist(), coo.cols.tolist()))
+
+
+def test_csr_roundtrip(small_graph):
+    csr = CSR.from_coo(small_graph)
+    assert _edge_set(csr.to_coo()) == _edge_set(small_graph)
+
+
+@pytest.mark.parametrize("t", [256, 1024, 4096])
+def test_tiled_scsr_roundtrip(small_graph, t):
+    ts = from_coo_tiled(small_graph, t=t)
+    assert ts.nnz == small_graph.nnz
+    assert _edge_set(ts.to_coo()) == _edge_set(small_graph)
+
+
+def test_tiled_scsr_valued_roundtrip(small_valued):
+    ts = from_coo_tiled(small_valued, t=1024)
+    np.testing.assert_allclose(ts.to_coo().to_dense(),
+                               small_valued.to_dense(), atol=1e-6)
+
+
+def test_scsr_size_formula(small_graph):
+    """Byte count matches the paper's S = 2*nnr + (2+c)*nnz exactly."""
+    ts = from_coo_tiled(small_graph, t=1024)
+    nnr = int(ts.tile_info.nnr_multi.sum() + ts.tile_info.nnr_single.sum())
+    assert ts.nbytes(0) == 2 * nnr + 2 * ts.nnz
+    assert ts.nbytes(4) == 2 * nnr + 6 * ts.nnz
+    # the payload itself is the same number of uint16 units
+    assert ts.payload.nbytes == 2 * nnr + 2 * ts.nnz
+
+
+def test_scsr_vs_dcsc_band(small_graph):
+    """Paper Fig 2: SCSR is 45-70% of DCSC on real-world-like graphs (binary)."""
+    ts = from_coo_tiled(small_graph, t=1024)
+    ratio = ts.nbytes(0) / ts.dcsc_nbytes(0)
+    assert 0.4 <= ratio < 1.0
+
+
+def test_scsr_smaller_than_csr(small_graph):
+    ts = from_coo_tiled(small_graph, t=1024)
+    csr = CSR.from_coo(small_graph)
+    assert ts.nbytes(0) < csr.nbytes(0)
+
+
+@pytest.mark.parametrize("T,C", [(256, 64), (1024, 256)])
+def test_chunked_packing(small_valued, T, C):
+    ct = to_chunked(small_valued, T=T, C=C)
+    m = ct.meta
+    # chunks sorted by tile_row; one first-flag per tile row; all rows covered
+    assert np.all(np.diff(m[:, 0]) >= 0)
+    assert int(m[:, 2].sum()) == ct.n_tile_rows
+    assert set(m[:, 0].tolist()) == set(range(ct.n_tile_rows))
+    # within a tile row, tile_col nondecreasing
+    for tr in range(ct.n_tile_rows):
+        tc = m[m[:, 0] == tr, 1]
+        assert np.all(np.diff(tc) >= 0)
+    # local indices inside the tile
+    assert ct.row_local.max() < T and ct.col_local.max() < T
+    # total valid entries = nnz; padding lanes are zero-valued
+    assert int(m[:, 3].sum()) == small_valued.nnz
+    lanes = np.arange(C)[None, :]
+    assert np.all(ct.vals[lanes >= m[:, 3:4]] == 0.0)
+
+
+def test_chunked_reconstructs_dense(small_valued):
+    ct = to_chunked(small_valued, T=512, C=128)
+    dense = np.zeros((ct.padded_rows, ct.padded_cols))
+    flat_r = (ct.meta[:, 0:1] * ct.T + ct.row_local).reshape(-1)
+    flat_c = (ct.meta[:, 1:2] * ct.T + ct.col_local).reshape(-1)
+    np.add.at(dense, (flat_r, flat_c), ct.vals.reshape(-1))
+    np.testing.assert_allclose(
+        dense[: small_valued.n_rows, : small_valued.n_cols],
+        small_valued.to_dense(), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 200), density=st.floats(0.01, 0.3),
+       t=st.sampled_from([8, 32, 64]), seed=st.integers(0, 2 ** 16))
+def test_property_roundtrip(n, density, t, seed):
+    """Property: TiledSCSR and ChunkedTiles preserve any random matrix."""
+    rng = np.random.default_rng(seed)
+    nnz = max(1, int(n * n * density))
+    rows = rng.integers(0, n, nnz)
+    cols = rng.integers(0, n, nnz)
+    coo = COO(n, n, rows, cols, None).dedup()
+    vals = rng.standard_normal(coo.nnz).astype(np.float32)
+    coo = coo.with_values(vals)
+    dense = coo.to_dense()
+
+    ts = from_coo_tiled(coo, t=t)
+    np.testing.assert_allclose(ts.to_coo().to_dense(), dense, atol=1e-6)
+
+    ct = to_chunked(coo, T=t, C=16)
+    rec = np.zeros((ct.padded_rows, ct.padded_cols))
+    np.add.at(rec, ((ct.meta[:, 0:1] * t + ct.row_local).reshape(-1),
+                    (ct.meta[:, 1:2] * t + ct.col_local).reshape(-1)),
+              ct.vals.reshape(-1))
+    np.testing.assert_allclose(rec[:n, :n], dense, atol=1e-5)
+
+
+def test_generators_shapes():
+    g = sbm(1024, 8192, 8, 4.0, seed=0)
+    assert g.n_rows == 1024 and g.nnz > 0
+    u = rmat(8, 4, seed=0, undirected=True)
+    assert _edge_set(u) == {(c, r) for r, c in _edge_set(u)}

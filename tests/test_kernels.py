@@ -1,0 +1,83 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis properties vs
+the ref.py oracle (interpret mode per the CPU-container protocol)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import COO, to_chunked
+from repro.kernels.ops import pick_variant, spmm_pallas, spmm_pallas_batch
+from repro.kernels.ref import spmm_ref
+from repro.sparse.generate import rmat
+
+
+def _ref(ct, x):
+    x_pad = np.zeros((ct.padded_cols, x.shape[1]), np.float64)
+    x_pad[: x.shape[0]] = x
+    return spmm_ref(ct.meta, ct.row_local, ct.col_local, ct.vals, x_pad,
+                    ct.T)[: ct.n_rows]
+
+
+@pytest.mark.parametrize("variant", ["gather", "mxu"])
+@pytest.mark.parametrize("T,C,p", [(128, 32, 1), (256, 64, 3), (256, 128, 8),
+                                   (512, 128, 16)])
+def test_kernel_shape_sweep(small_valued, variant, T, C, p):
+    ct = to_chunked(small_valued, T=T, C=C)
+    rng = np.random.default_rng(p)
+    x = rng.standard_normal((small_valued.n_cols, p)).astype(np.float32)
+    out = np.asarray(spmm_pallas(ct, jnp.asarray(x), variant=variant))
+    np.testing.assert_allclose(out, _ref(ct, x), atol=5e-4)
+
+
+@pytest.mark.parametrize("variant", ["gather", "mxu"])
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 5e-4),
+                                        (jnp.bfloat16, 0.25)])
+def test_kernel_dtype_sweep(small_valued, variant, dtype, atol):
+    ct = to_chunked(small_valued, T=256, C=64)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((small_valued.n_cols, 4)).astype(np.float32)
+    out = np.asarray(spmm_pallas(ct, jnp.asarray(x, dtype), variant=variant),
+                     dtype=np.float64)
+    ref = _ref(ct, x)
+    np.testing.assert_allclose(out, ref, atol=atol, rtol=atol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(16, 300), nnz=st.integers(1, 2000),
+       p=st.integers(1, 9), t=st.sampled_from([32, 128]),
+       variant=st.sampled_from(["gather", "mxu"]),
+       seed=st.integers(0, 2 ** 16))
+def test_kernel_property(n, nnz, p, t, variant, seed):
+    """Property: kernel == oracle for arbitrary random sparse matrices."""
+    rng = np.random.default_rng(seed)
+    coo = COO(n, n, rng.integers(0, n, nnz), rng.integers(0, n, nnz),
+              None).dedup()
+    coo = coo.with_values(rng.standard_normal(coo.nnz).astype(np.float32))
+    ct = to_chunked(coo, T=t, C=16)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    out = np.asarray(spmm_pallas(ct, jnp.asarray(x), variant=variant))
+    np.testing.assert_allclose(out, _ref(ct, x), atol=1e-3)
+
+
+def test_batch_accumulation(small_valued):
+    """SEM streaming: applying chunk batches sequentially == one-shot."""
+    ct = to_chunked(small_valued, T=256, C=64)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((small_valued.n_cols, 3)).astype(np.float32)
+    x_pad = jnp.zeros((ct.padded_cols, 3)).at[: x.shape[0]].set(x)
+    out = jnp.zeros((ct.n_tile_rows, ct.T, 3))
+    B = 7
+    for s in range(0, ct.n_chunks, B):
+        e = min(s + B, ct.n_chunks)
+        out = spmm_pallas_batch(ct.meta[s:e], ct.row_local[s:e],
+                                ct.col_local[s:e], ct.vals[s:e], x_pad, out,
+                                ct.T)
+    got = np.asarray(out.reshape(-1, 3)[: ct.n_rows])
+    np.testing.assert_allclose(got, _ref(ct, x), atol=5e-4)
+
+
+def test_variant_dispatch():
+    small_tiles = to_chunked(rmat(10, 2, seed=0), T=512, C=128)
+    assert pick_variant(small_tiles) == "mxu"
+    paper_tiles = to_chunked(rmat(10, 2, seed=0), T=16384, C=2048)
+    assert pick_variant(paper_tiles) == "gather"

@@ -1,0 +1,155 @@
+"""Launch-layer unit tests: HLO cost analysis, sharding sanitization,
+roofline math, and model-flops accounting (no 512-device init — the
+multi-device dry-run itself runs via `python -m repro.launch.dryrun`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch import hlo_analysis as ha
+from repro.models import model_api
+
+
+# ---------------------------------------------------------------------------
+# hlo_analysis: trip-count-corrected costs
+# ---------------------------------------------------------------------------
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return jnp.dot(c, w), None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+    x = jnp.zeros((128, 128))
+    hlo = jax.jit(f).lower(x, x).compile().as_text()
+    r = ha.analyze(hlo)
+    assert r["flops"] == 2 * 128 ** 3 * 10
+
+
+def test_nested_scan_flops():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.dot(c2, w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+    x = jnp.zeros((64, 64))
+    hlo = jax.jit(g).lower(x, x).compile().as_text()
+    assert ha.analyze(hlo)["flops"] == 2 * 64 ** 3 * 15
+
+
+def test_unrolled_matches_scan():
+    w = jnp.zeros((64, 64))
+
+    def unrolled(x, w):
+        for _ in range(6):
+            x = jnp.dot(x, w)
+        return x
+
+    def scanned(x, w):
+        out, _ = jax.lax.scan(lambda c, _: (jnp.dot(c, w), None), x, None,
+                              length=6)
+        return out
+
+    h1 = jax.jit(unrolled).lower(w, w).compile().as_text()
+    h2 = jax.jit(scanned).lower(w, w).compile().as_text()
+    assert ha.analyze(h1)["flops"] == ha.analyze(h2)["flops"]
+
+
+def test_collective_parsing_synthetic():
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%p0), replica_groups={}, to_apply=%sum
+  %ag = f32[128]{0} all-gather(%ar), dimensions={0}
+  ROOT %out = f32[64]{0} slice(%ag), slice={[0:64]}
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+"""
+    r = ha.analyze(hlo)
+    assert r["collective_ops"]["all-reduce"] == 1
+    assert r["collective_ops"]["all-gather"] == 1
+    assert r["collective_bytes"]["all-reduce"] == 64 * 4
+    assert r["collective_bytes"]["all-gather"] == 64 * 4  # operand bytes
+
+
+def test_dynamic_slice_counts_slice_not_operand():
+    def f(stack, i):
+        return jax.lax.dynamic_slice(stack, (i, 0), (1, 1024))
+    stack = jnp.zeros((512, 1024))
+    hlo = jax.jit(f).lower(stack, jnp.int32(0)).compile().as_text()
+    r = ha.analyze(hlo)
+    # the 2 MB stack must not be charged; only ~2x slice (4 KB)
+    assert r["bytes"] < 64 * 1024, r["bytes"]
+
+
+# ---------------------------------------------------------------------------
+# sharding sanitization
+# ---------------------------------------------------------------------------
+def test_sanitize_spec_drops_uneven():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import sanitize_spec
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 16}
+    spec = sanitize_spec((36, 64), P("model", None), FakeMesh())
+    assert spec == P(None, None)          # 36 % 16 != 0 -> dropped
+    spec = sanitize_spec((32, 64), P("model", None), FakeMesh())
+    assert spec == P("model", None)
+    spec = sanitize_spec((64, 36), P(("model", "data"), None), FakeMesh())
+    assert spec == P(None, None)          # 64 % 256 != 0 -> dropped
+
+
+# ---------------------------------------------------------------------------
+# model flops accounting
+# ---------------------------------------------------------------------------
+def test_active_params_moe_less_than_total():
+    cfg = get_config("olmoe-1b-7b")
+    total = model_api.n_params(cfg)
+    active = model_api.n_active_params(cfg)
+    assert active < total
+    # 64 experts top-8: expert share shrinks 8x
+    expert_total = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_layers * 64
+    assert total - active == expert_total - expert_total * 8 // 64
+
+
+def test_model_flops_kinds():
+    from repro.launch.dryrun import model_flops
+    cfg = get_config("yi-9b")
+    n = model_api.n_active_params(cfg)
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr == 6.0 * n * 4096 * 256
+    assert pf == 2.0 * n * 32768 * 32
+    assert dc == 2.0 * n * 128
+
+
+def test_vocab_padding_divisible():
+    for arch in ("mamba2-130m", "whisper-medium", "internvl2-2b",
+                 "minicpm-2b"):
+        cfg = get_config(arch)
+        assert cfg.vocab_padded % 256 == 0
+        assert cfg.vocab_padded >= cfg.vocab
+        assert cfg.vocab_padded - cfg.vocab < 256
+
+
+def test_prefill_last_only_logits_shape():
+    cfg = get_config("mamba2-130m").reduced()
+    params = model_api.init_params(cfg, jax.random.key(0))
+    toks = jnp.zeros((2, 16), jnp.int32)
+    full, _ = model_api.forward(params, cfg, {"tokens": toks}, remat=False)
+    last, _ = model_api.forward(params, cfg, {"tokens": toks}, remat=False,
+                                logits_last_only=True)
+    assert last.shape == (2, 1, cfg.vocab_padded)
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(last),
+                               rtol=1e-5, atol=1e-5)

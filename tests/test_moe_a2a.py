@@ -1,0 +1,102 @@
+"""All-to-all MoE vs the GSPMD moe_block oracle (8 fake devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_moe_a2a_matches_dense_reference():
+    run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.moe_a2a import moe_block_a2a
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, L, D, E, K, F = 4, 16, 32, 8, 2, 64
+        rng = np.random.default_rng(0)
+        p = {
+            "router": jnp.asarray(rng.standard_normal((D, E)) * 0.5,
+                                  jnp.float32),
+            "w_gate": jnp.asarray(rng.standard_normal((E, D, F)) * 0.2,
+                                  jnp.float32),
+            "w_in": jnp.asarray(rng.standard_normal((E, D, F)) * 0.2,
+                                jnp.float32),
+            "w_out": jnp.asarray(rng.standard_normal((E, F, D)) * 0.2,
+                                 jnp.float32),
+        }
+        x = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+
+        # dense (no-drop) reference: route per token, run its top-k experts
+        def ref(p, x):
+            xt = x.reshape(-1, D)
+            logits = xt @ p["router"]
+            probs = jax.nn.softmax(logits, -1)
+            w, idx = jax.lax.top_k(probs, K)
+            w = w / w.sum(-1, keepdims=True)
+            h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["w_gate"]))
+            h = h * jnp.einsum("td,edf->tef", xt, p["w_in"])
+            y_all = jnp.einsum("tef,efd->ted", h, p["w_out"])  # (T, E, D)
+            out = jnp.zeros_like(xt)
+            for k in range(K):
+                out = out + w[:, k:k+1] * jnp.take_along_axis(
+                    y_all, idx[:, k][:, None, None].repeat(D, 2), 1)[:, 0]
+            return out.reshape(B, L, D)
+
+        want = ref(p, x)
+        # generous capacity -> no drops on the a2a path
+        got, aux = moe_block_a2a(p, x, mesh, n_experts=E, top_k=K,
+                                 capacity_factor=8.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+        assert np.isfinite(float(aux))
+
+        # gradients flow through both all_to_all exchanges
+        g = jax.grad(lambda pp: moe_block_a2a(
+            pp, x, mesh, n_experts=E, top_k=K,
+            capacity_factor=8.0)[0].sum())(p)
+        gn = sum(float(jnp.abs(v).sum()) for v in jax.tree.leaves(g))
+        assert np.isfinite(gn) and gn > 0
+        print("OK")
+    """)
+
+
+def test_moe_a2a_collective_schedule():
+    """The lowered HLO must contain all-to-alls and NO model-axis
+    all-reduce of (T, D)-sized tensors (the GSPMD pathology this module
+    removes)."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.moe_a2a import moe_block_a2a
+        from repro.launch import hlo_analysis
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, L, D, E, K, F = 4, 64, 32, 8, 2, 64
+        rng = np.random.default_rng(0)
+        p = {"router": jnp.asarray(rng.standard_normal((D, E)), jnp.float32),
+             "w_gate": jnp.asarray(rng.standard_normal((E, D, F)), jnp.float32),
+             "w_in": jnp.asarray(rng.standard_normal((E, D, F)), jnp.float32),
+             "w_out": jnp.asarray(rng.standard_normal((E, F, D)), jnp.float32)}
+        x = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+        hlo = jax.jit(lambda p, x: moe_block_a2a(
+            p, x, mesh, n_experts=E, top_k=K)[0]).lower(p, x)\\
+            .compile().as_text()
+        r = hlo_analysis.analyze(hlo)
+        ops = r["collective_ops"]
+        assert ops["all-to-all"] >= 3, ops          # dispatch + meta + return
+        # forward pass: no big all-reduce (aux pmeans are tiny)
+        assert r["collective_bytes"]["all-reduce"] < 64 * 1024, r
+        print("a2a ops:", ops["all-to-all"],
+              "ar bytes:", r["collective_bytes"]["all-reduce"])
+    """)
+    assert "a2a ops:" in out

@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) on the system's core invariants.
+
+Invariants under test:
+* format round-trips: COO -> TiledSCSR -> COO and COO -> ChunkedTiles
+  preserve the exact non-zero set, for arbitrary sparsity patterns;
+* SCSR byte count matches the paper's closed-form formula for every matrix;
+* SpMM correctness: chunked/tiled execution == dense reference, any shape;
+* semiring SpMM generalization (min-plus, or-and) == dense evaluation;
+* optimizer: AdamW step with zero gradients leaves parameters unchanged
+  apart from weight decay; global-norm clip bounds the update;
+* data stream: seek/replay determinism (fault-tolerance invariant);
+* LPT partitioning: makespan within 4/3 of the mean bound.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import COO, from_coo_tiled, to_chunked
+from repro.core.partition import lpt_partition
+from repro.core.spmm import spmm_chunked, spmm_coo
+from repro.train.data import DataConfig, TokenStream
+from repro.train.optimizer import (AdamWConfig, adamw_update,
+                                   clip_by_global_norm, init_opt_state)
+
+DEADLINE = None
+
+
+@st.composite
+def coo_matrices(draw, max_dim=200, max_nnz=400, valued=True):
+    n_rows = draw(st.integers(1, max_dim))
+    n_cols = draw(st.integers(1, max_dim))
+    nnz = draw(st.integers(0, max_nnz))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n_rows, nnz)
+    cols = rng.integers(0, n_cols, nnz)
+    vals = (rng.standard_normal(nnz).astype(np.float32) if valued else None)
+    return COO(n_rows, n_cols, rows, cols, vals).dedup()
+
+
+def _nz_set(m: COO):
+    return set(zip(m.rows.tolist(), m.cols.tolist()))
+
+
+@given(coo_matrices(valued=False), st.sampled_from([8, 16, 64]))
+@settings(deadline=DEADLINE, max_examples=40)
+def test_tiled_scsr_roundtrip(m, t):
+    ts = from_coo_tiled(m, t=t)
+    back = ts.to_coo()
+    assert _nz_set(back) == _nz_set(m)
+    assert ts.nnz == m.nnz
+
+
+@given(coo_matrices(valued=False), st.sampled_from([8, 32]))
+@settings(deadline=DEADLINE, max_examples=30)
+def test_scsr_size_formula(m, t):
+    """Paper: S_SCSR = 2*nnr + (2+c)*nnz bytes, binary matrix c=0."""
+    ts = from_coo_tiled(m, t=t)
+    ti = ts.tile_info
+    nnr = int(ti.nnr_multi.sum() + ti.nnr_single.sum())
+    assert ts.nbytes(0) == 2 * nnr + 2 * m.nnz
+    # the u16 payload is byte-exact with the formula
+    assert ts.payload.nbytes == ts.nbytes(0)
+
+
+@given(coo_matrices(), st.integers(1, 9), st.sampled_from([16, 64]))
+@settings(deadline=DEADLINE, max_examples=25)
+def test_spmm_matches_dense(m, p, t):
+    x = np.random.default_rng(0).standard_normal(
+        (m.n_cols, p)).astype(np.float32)
+    want = m.to_dense(np.float32) @ x
+    ct = to_chunked(m, T=t, C=32)
+    got = np.asarray(spmm_chunked(ct, jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    got2 = np.asarray(spmm_coo(m, jnp.asarray(x)))
+    np.testing.assert_allclose(got2, want, rtol=2e-4, atol=2e-4)
+
+
+@given(coo_matrices(max_dim=60, max_nnz=120), st.sampled_from([16]))
+@settings(deadline=DEADLINE, max_examples=15)
+def test_semiring_min_plus(m, t):
+    """Generalized SpMM: (min, +) semiring == dense shortest-path step."""
+    if m.nnz == 0:
+        return
+    x = np.random.default_rng(1).uniform(0, 10, (m.n_cols, 2)).astype(
+        np.float32)
+    ct = to_chunked(m, T=t, C=16)
+    got = np.asarray(spmm_chunked(ct, jnp.asarray(x), semiring="min_plus"))
+    dense = m.to_dense(np.float32)
+    want = np.full((m.n_rows, 2), np.inf, np.float32)
+    for r, c, v in zip(m.rows, m.cols, m.vals):
+        want[r] = np.minimum(want[r], v + x[c])
+    mask = np.isfinite(want)
+    np.testing.assert_allclose(got[mask], want[mask], rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 30))
+@settings(deadline=DEADLINE, max_examples=20)
+def test_data_stream_seekable(seed, idx):
+    """batch(i) is a pure function of (seed, i): replay after restore is
+    byte-identical (the checkpoint/restart invariant)."""
+    cfg = DataConfig(vocab=97, seq_len=16, global_batch=2, seed=seed)
+    s1 = TokenStream(cfg)
+    for _ in range(idx):
+        next(s1)
+    state = s1.state_dict()
+    want = next(s1)
+    s2 = TokenStream(cfg)
+    s2.load_state_dict(state)
+    got = next(s2)
+    np.testing.assert_array_equal(want["tokens"], got["tokens"])
+    np.testing.assert_array_equal(want["labels"], got["labels"])
+
+
+@given(st.lists(st.integers(1, 1000), min_size=1, max_size=200),
+       st.integers(1, 16))
+@settings(deadline=DEADLINE, max_examples=30)
+def test_lpt_balance_bound(weights, k):
+    """Greedy LPT: makespan <= (4/3 - 1/(3k)) * OPT >= mean bound."""
+    part = lpt_partition(np.asarray(weights, np.int64), k)
+    loads = np.bincount(part.assignment, weights=np.asarray(weights),
+                        minlength=k)
+    np.testing.assert_array_equal(loads, part.loads)
+    opt_lb = max(np.ceil(sum(weights) / k), max(weights))
+    assert loads.max() <= (4 / 3) * opt_lb + 1
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(deadline=DEADLINE, max_examples=10)
+def test_adamw_zero_grad_only_decays(seed):
+    rng = jax.random.key(seed % 1000)
+    params = {"w": jax.random.normal(rng, (4, 4)),
+              "ln": jnp.ones((4,))}
+    grads = jax.tree.map(jnp.zeros_like, params)
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.1, warmup_steps=0,
+                      schedule="const")
+    new, _, _ = adamw_update(cfg, params, grads, init_opt_state(params))
+    # decay-exempt ("ln") untouched; "w" shrunk toward zero
+    np.testing.assert_array_equal(np.asarray(new["ln"]),
+                                  np.asarray(params["ln"]))
+    assert float(jnp.abs(new["w"]).sum()) < float(jnp.abs(params["w"]).sum())
+
+
+@given(st.floats(0.1, 10.0), st.integers(0, 2**31 - 1))
+@settings(deadline=DEADLINE, max_examples=15)
+def test_clip_bounds_norm(max_norm, seed):
+    g = {"a": jax.random.normal(jax.random.key(seed % 997), (32,)) * 100}
+    clipped, norm = clip_by_global_norm(g, max_norm)
+    out_norm = float(jnp.sqrt(sum(jnp.sum(x * x)
+                                  for x in jax.tree.leaves(clipped))))
+    assert out_norm <= max_norm * (1 + 1e-4)

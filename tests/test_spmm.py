@@ -1,0 +1,81 @@
+"""SpMM execution paths agree with the dense oracle, across semirings."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import to_chunked
+from repro.core.spmm import spmm, spmm_chunked, spmm_coo
+from repro.core.partition import (block_partition, lpt_partition, split_chunks,
+                                  tile_row_nnz)
+
+
+@pytest.fixture(scope="module")
+def x(small_graph):
+    rng = np.random.default_rng(3)
+    return rng.standard_normal((small_graph.n_cols, 5)).astype(np.float32)
+
+
+def test_spmm_coo_matches_dense(small_valued, x):
+    ref = small_valued.to_dense(np.float64) @ x.astype(np.float64)
+    out = np.asarray(spmm_coo(small_valued, jnp.asarray(x)))
+    np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+@pytest.mark.parametrize("T,C", [(512, 128), (2048, 512)])
+def test_spmm_chunked_matches_dense(small_valued, x, T, C):
+    ct = to_chunked(small_valued, T=T, C=C)
+    ref = small_valued.to_dense(np.float64) @ x.astype(np.float64)
+    out = np.asarray(spmm_chunked(ct, jnp.asarray(x)))
+    np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+@pytest.mark.parametrize("ring", ["plus_times", "or_and", "min_plus",
+                                  "max_times"])
+def test_semiring_paths_agree(small_valued, x, ring):
+    xp = np.abs(x) + 0.1
+    ct = to_chunked(small_valued, T=512, C=128)
+    a = np.asarray(spmm(small_valued, jnp.asarray(xp), semiring=ring))
+    b = np.asarray(spmm(ct, jnp.asarray(xp), semiring=ring))
+    fa, fb = np.isfinite(a), np.isfinite(b)
+    assert np.array_equal(fa, fb)
+    np.testing.assert_allclose(np.where(fa, a, 0), np.where(fb, b, 0),
+                               atol=1e-4)
+
+
+def test_or_and_is_reachability(small_graph):
+    """BFS frontier via or_and semiring equals boolean matmul."""
+    frontier = np.zeros((small_graph.n_cols, 1), np.float32)
+    frontier[:17, 0] = 1.0
+    out = np.asarray(spmm(small_graph, jnp.asarray(frontier),
+                          semiring="or_and"))
+    dense = small_graph.to_dense() > 0
+    expect = (dense @ (frontier > 0)).astype(np.float32)
+    np.testing.assert_array_equal(out, expect)
+
+
+# -- load balancing ----------------------------------------------------------
+def test_lpt_beats_block_partition(small_valued):
+    # fine tile rows (the paper's fine-grain tasks): LPT balances power-law
+    # loads to ~0 while contiguous block partitioning is >2x imbalanced.
+    ct = to_chunked(small_valued, T=32, C=64)
+    nnz = tile_row_nnz(ct)
+    lpt = lpt_partition(nnz, 8)
+    blk = block_partition(nnz, 8)
+    assert lpt.loads.sum() == blk.loads.sum() == small_valued.nnz
+    assert lpt.imbalance <= blk.imbalance
+    assert lpt.imbalance < 0.1  # power-law rows balance well under LPT
+
+
+def test_split_chunks_partitions_everything(small_valued):
+    ct = to_chunked(small_valued, T=256, C=64)
+    part = lpt_partition(tile_row_nnz(ct), 4)
+    splits = split_chunks(ct, part, 4)
+    all_idx = np.sort(np.concatenate(splits))
+    np.testing.assert_array_equal(all_idx, np.arange(ct.n_chunks))
+    # each split keeps (tile_row, tile_col) sorted order => write-once holds
+    for s in splits:
+        m = ct.meta[s]
+        key = m[:, 0].astype(np.int64) * (2 ** 20) + m[:, 1]
+        # sorted within each tile_row group and groups don't interleave rows
+        order = np.lexsort((np.arange(len(s)), m[:, 0]))
+        assert np.all(np.diff(key[order]) >= -2 ** 20)
