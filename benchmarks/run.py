@@ -22,6 +22,7 @@ BENCHES = [
     ("fig13_io_opts", "benchmarks.bench_io_opts"),
     ("table2_convert", "benchmarks.bench_convert"),
     ("fig14_16_apps", "benchmarks.bench_apps"),
+    ("runtime_serving", "benchmarks.bench_runtime"),
 ]
 
 

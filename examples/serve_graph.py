@@ -1,0 +1,85 @@
+"""Example: multi-tenant graph-query serving over one on-"SSD" graph.
+
+  PYTHONPATH=src python examples/serve_graph.py [--scale 12] [--tenants 6]
+
+Usage note: the serving runtime turns the paper's Fig-5 crossover into a
+scheduler.  Build the sparse operator once (``TileStore.write``), wrap it in
+one ``SEMSpMM``, and hand that to ``SharedScanScheduler``.  Then submit any
+mix of tenants — one-shot ``scheduler.query(x)`` multiplies, iterative
+``PageRankSession`` / ``PowerIterationSession`` / ``LabelPropagationSession``
+workloads — and call ``scheduler.run()``.  Every pass streams the sparse
+matrix ONCE for the whole wave: N concurrent queries cost
+``ceil(cols / columns_that_fit)`` passes, not N.  Leftover memory budget is
+spent pinning hot chunk batches, so a draining workload converges toward
+in-memory performance (watch ``cache_hit_bytes`` climb as tenants retire).
+
+Tenants here all ride the PageRank operator P = A^T D^{-1}; point label
+propagation at a store built from ``repro.apps.labelprop.build_operator``
+when you need the symmetric-normalized adjacency instead.
+"""
+import argparse
+import os
+import tempfile
+
+import numpy as np
+
+from repro.apps.pagerank import build_operator, pagerank_session
+from repro.core.formats import to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.io.storage import TileStore
+from repro.runtime import PowerIterationSession, SharedScanScheduler
+from repro.sparse.generate import rmat
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--tenants", type=int, default=6)
+    args = ap.parse_args()
+
+    adj = rmat(args.scale, 16, seed=1)
+    print(f"graph: {adj.n_rows} vertices, {adj.nnz} edges")
+    ct = to_chunked(build_operator(adj), T=1024, C=256)
+    path = os.path.join(tempfile.mkdtemp(prefix="serve_graph_"), "g")
+    store = TileStore.write(path, ct)
+    print(f"operator on slow tier: {store.nbytes / 1e6:.1f} MB")
+
+    sem = SEMSpMM(store, SEMConfig(memory_budget_bytes=256 << 20,
+                                   chunk_batch=128))
+    sched = SharedScanScheduler(sem)
+
+    rng = np.random.default_rng(0)
+    n = adj.n_rows
+    tenants = [sched.submit(pagerank_session(
+        adj, max_iter=10 + 3 * i, tenant_id=f"pagerank-{i}"))
+        for i in range(args.tenants)]
+    tenants.append(sched.submit(PowerIterationSession(
+        rng.standard_normal(n).astype(np.float32), max_iter=25,
+        tenant_id="spectral")))
+    oneshots = [sched.query(rng.standard_normal(n).astype(np.float32),
+                            tenant_id=f"query-{i}") for i in range(4)]
+
+    read0 = store.stats.bytes_read
+    for i, rep in enumerate(sched.run(), 1):
+        print(f"pass {i:3d}: cols={rep.wave_cols:3d} "
+              f"tenants={rep.tenants} retired={rep.retired} "
+              f"read={rep.bytes_read / 1e6:7.2f}MB "
+              f"cache_hit={rep.cache_hit_bytes / 1e6:7.2f}MB")
+
+    total = store.stats.bytes_read - read0
+    served = sum(t.iterations for t in tenants) + len(oneshots)
+    naive = served * store.nbytes
+    print(f"\nserved {len(tenants)} iterative tenants "
+          f"({sum(t.iterations for t in tenants)} operator applications) "
+          f"+ {len(oneshots)} one-shot queries")
+    print(f"slow-tier reads: {total / 1e6:.1f} MB "
+          f"(naive per-request serving: {naive / 1e6:.1f} MB, "
+          f"amortization {naive / max(1, total):.1f}x)")
+    if sched.cache is not None:
+        print(f"hot-chunk cache: hit rate {sched.cache.stats.hit_rate:.0%}, "
+              f"pinned {sched.cache.pinned_bytes / 1e6:.1f} MB")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

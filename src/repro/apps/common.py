@@ -6,6 +6,7 @@ the paper's IM-SpMM / SEM-SpMM pair behind one interface.
 """
 from __future__ import annotations
 
+import os
 import tempfile
 from typing import Optional
 
@@ -65,7 +66,7 @@ class SEMOperator(Operator):
                  ) -> "SEMOperator":
         ct = to_chunked(coo, T=T, C=C)
         if path is None:
-            path = tempfile.mktemp(prefix="semspmm_")
+            path = os.path.join(tempfile.mkdtemp(prefix="semspmm_"), "spm")
         return cls(TileStore.write(path, ct), config)
 
     def dot(self, x: np.ndarray) -> np.ndarray:

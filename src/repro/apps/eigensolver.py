@@ -11,6 +11,7 @@ operator must be symmetric (the paper runs undirected graphs; use
 from __future__ import annotations
 
 import dataclasses
+import os
 import tempfile
 from typing import Optional
 
@@ -27,8 +28,9 @@ class Subspace:
         self.n, self.m = n, m
         self.on_disk = on_disk
         if on_disk:
-            self._store = DenseStore(path or tempfile.mktemp(prefix="krylov_"),
-                                     n, m)
+            if path is None:
+                path = os.path.join(tempfile.mkdtemp(prefix="krylov_"), "V")
+            self._store = DenseStore(path, n, m)
         else:
             self._mem = np.zeros((n, m), np.float32)
 

@@ -52,6 +52,21 @@ def dangling_vertices(adj: COO) -> np.ndarray:
     return out_degrees(adj) == 0
 
 
+def pagerank_session(adj: COO, *, damping: float = 0.85, max_iter: int = 30,
+                     tol: float = 1e-8, tenant_id: str = ""):
+    """Adapter for the serving runtime: a PageRank tenant for ``adj``.
+
+    Submit it to a :class:`repro.runtime.scheduler.SharedScanScheduler`
+    whose store holds :func:`build_operator`'s ``P``; the session's update
+    matches :func:`pagerank` step for step, so shared-scan serving returns
+    the same scores as a dedicated run.
+    """
+    from repro.runtime.session import PageRankSession
+    return PageRankSession(adj.n_rows, dangling_vertices(adj),
+                           damping=damping, tol=tol, max_iter=max_iter,
+                           tenant_id=tenant_id)
+
+
 def pagerank_dense_reference(adj: COO, damping: float = 0.85,
                              max_iter: int = 30) -> np.ndarray:
     """Dense-matrix oracle for tests."""

@@ -61,7 +61,7 @@ class SEMSpMM:
     """Semi-external-memory SpMM over a :class:`TileStore`."""
 
     def __init__(self, store: TileStore, config: Optional[SEMConfig] = None,
-                 mode: str = "sem"):
+                 mode: str = "sem", cache=None):
         assert mode in ("sem", "im")
         self.store = store
         self.cfg = config or SEMConfig()
@@ -71,6 +71,13 @@ class SEMSpMM:
         self.n_tile_rows = -(-self.n_rows // self.T)
         self.padded_cols = (-(-self.n_cols // self.T)) * self.T
         self._cached = None
+        # Optional hot-chunk cache (duck-typed, see runtime/cache.py): pins
+        # chunk batches in leftover memory, making this executor a hybrid
+        # between pure-streaming SEM and fully-resident IM.
+        self.cache = cache
+        # ``passes`` counts streaming passes over the sparse matrix (the
+        # serving scheduler's amortization accounting builds on it).
+        self.passes = 0
         if mode == "im":  # IM-SpMM: sparse matrix resident in memory
             self._cached = list(store.stream(self.cfg.chunk_batch,
                                              use_async=False))
@@ -85,7 +92,8 @@ class SEMSpMM:
         batches = (self._cached if self._cached is not None else
                    self.store.stream(self.cfg.chunk_batch,
                                      prefetch=self.cfg.prefetch,
-                                     use_async=self.cfg.use_async))
+                                     use_async=self.cfg.use_async,
+                                     cache=self.cache))
         if self.cfg.use_pallas:
             from repro.kernels.ops import spmm_pallas_batch
             for meta, rows, cols, vals in batches:
@@ -96,18 +104,37 @@ class SEMSpMM:
                 out = _batch_step(jnp.asarray(meta), jnp.asarray(rows),
                                   jnp.asarray(cols), jnp.asarray(vals),
                                   x_pad, out, self.T)
+        self.passes += 1
         return np.asarray(out.reshape(-1, p)[: self.n_rows])
 
     # -- regime 3: vertical partitioning ------------------------------------
+    def column_bytes(self) -> int:
+        """Memory cost of one dense column (input slice + output slice)."""
+        return 4 * (self.n_rows + self.padded_cols)
+
+    def stream_overhead_bytes(self) -> int:
+        """Memory cost of the streaming buffers (one in-flight chunk batch
+        per prefetch slot plus the one being consumed)."""
+        return self.store.header["record"] * self.cfg.chunk_batch * (
+            self.cfg.prefetch + 1)
+
     def columns_that_fit(self, p_total: int) -> int:
         """How many dense columns fit the memory budget (input slice +
         output slice + one chunk batch of buffers), min 1 (paper: minimum
         memory requirement is O(n) — one column)."""
-        per_col = 4 * (self.n_rows + self.padded_cols)  # in + out column
-        overhead = self.store.header["record"] * self.cfg.chunk_batch * (
-            self.cfg.prefetch + 1)
-        fit = (self.cfg.memory_budget_bytes - overhead) // per_col
+        fit = (self.cfg.memory_budget_bytes - self.stream_overhead_bytes()
+               ) // self.column_bytes()
         return int(max(1, min(p_total, fit)))
+
+    def leftover_budget(self, cols_in_use: int) -> int:
+        """Memory budget remaining after ``cols_in_use`` dense columns and
+        the streaming buffers are paid for — what the serving runtime may
+        spend on pinning hot chunk batches (§3.6 inverted: once every dense
+        column is resident, the next-best use of a byte IS the sparse
+        matrix)."""
+        return max(0, self.cfg.memory_budget_bytes
+                   - self.stream_overhead_bytes()
+                   - self.column_bytes() * cols_in_use)
 
     def multiply_external(self, x_store: DenseStore, out_store: DenseStore,
                           cols_in_memory: Optional[int] = None) -> IOStats:

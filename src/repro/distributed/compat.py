@@ -1,0 +1,37 @@
+"""JAX version compatibility for the distributed layer.
+
+``shard_map`` moved (``jax.experimental.shard_map`` -> ``jax.shard_map``)
+and renamed its replication-check kwarg (``check_rep`` -> ``check_vma``)
+across JAX releases.  This shim exports one ``shard_map`` that accepts the
+new-style ``check_vma`` kwarg on every supported JAX version.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map  # jax >= 0.8
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_HAS_CHECK_VMA = "check_vma" in _PARAMS
+_HAS_CHECK_REP = "check_rep" in _PARAMS
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` polyfill (older JAX: psum of ones)."""
+    import jax
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    if check_vma is not None:
+        if _HAS_CHECK_VMA:
+            kwargs["check_vma"] = check_vma
+        elif _HAS_CHECK_REP:
+            kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

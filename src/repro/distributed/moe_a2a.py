@@ -34,10 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:
-    from jax import shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.distributed import compat
+from repro.distributed.compat import shard_map
 
 
 def _inv_permute(slot: jax.Array, n_slots: int, n_src: int) -> jax.Array:
@@ -55,7 +53,7 @@ def moe_ffn_a2a(p: dict, xt: jax.Array, *, n_experts: int, top_k: int,
     slices (E_loc, D, F)/(E_loc, F, D).  Returns (out (T_loc, D), aux)."""
     T, D = xt.shape
     E, K = n_experts, top_k
-    m = jax.lax.axis_size(axis)
+    m = compat.axis_size(axis)
     E_loc = E // m
     F = p["w_in"].shape[-1]
 

@@ -33,10 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:
-    from jax import shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.distributed.compat import shard_map
 
 
 def stage_split(n_layers: int, n_stages: int) -> list:

@@ -39,6 +39,9 @@ class IOStats:
     bytes_written: int = 0
     reads: int = 0
     writes: int = 0
+    cache_hits: int = 0
+    cache_hit_bytes: int = 0   # bytes served from the hot-chunk cache
+                               # instead of the slow tier
 
     def add_read(self, n: int) -> None:
         self.bytes_read += n
@@ -47,6 +50,10 @@ class IOStats:
     def add_write(self, n: int) -> None:
         self.bytes_written += n
         self.writes += 1
+
+    def add_cache_hit(self, n: int) -> None:
+        self.cache_hits += 1
+        self.cache_hit_bytes += n
 
 
 class BufferPool:
@@ -154,7 +161,27 @@ class TileStore:
         self.pool.put(buf)
         return meta, rows, cols, vals
 
-    def stream(self, batch: int, prefetch: int = 2, use_async: bool = True
+    def _fetch(self, start: int, count: int, cache) -> Tuple[np.ndarray, ...]:
+        """Cached read path: serve a pinned batch from memory (counted as a
+        cache hit, not slow-tier I/O); on a miss, read and offer the decoded
+        batch for pinning.  ``cache`` is duck-typed (get/offer) so this layer
+        stays independent of the runtime subsystem above it."""
+        if cache is None:
+            return self.read_batch(start, count)
+        key = (start, count)
+        hit = cache.get(key)
+        if hit is not None:
+            # hit accounting is in on-disk bytes: the I/O this hit avoided
+            self.stats.add_cache_hit(self.header["record"] * count)
+            return hit
+        batch = self.read_batch(start, count)
+        # charge the cache what the pinned arrays actually occupy resident
+        # (decoded int32/f32 arrays are larger than the on-disk records)
+        cache.offer(key, batch, sum(a.nbytes for a in batch))
+        return batch
+
+    def stream(self, batch: int, prefetch: int = 2, use_async: bool = True,
+               cache=None
                ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
         """Iterate chunk batches in execution order, optionally with an async
         prefetch thread keeping ``prefetch`` batches ready."""
@@ -162,13 +189,13 @@ class TileStore:
         sizes = [min(batch, self.n_chunks - s) for s in starts]
         if not use_async:
             for s, c in zip(starts, sizes):
-                yield self.read_batch(s, c)
+                yield self._fetch(s, c, cache)
             return
         q: "queue.Queue" = queue.Queue(maxsize=prefetch)
 
         def reader():
             for s, c in zip(starts, sizes):
-                q.put(self.read_batch(s, c))
+                q.put(self._fetch(s, c, cache))
             q.put(None)
 
         t = threading.Thread(target=reader, daemon=True)

@@ -1,0 +1,19 @@
+"""Multi-tenant graph-query serving runtime over the SEM-SpMM executor.
+
+Packs concurrent queries into columns of one shared dense matrix and serves
+them with shared streaming passes (batcher + scheduler), advances iterative
+per-tenant sessions one operator application per pass (session), and spends
+leftover memory budget on pinning hot chunk batches (cache).
+"""
+from repro.runtime.batcher import Batcher, Wave, WaveEntry
+from repro.runtime.cache import CacheStats, HotChunkCache
+from repro.runtime.scheduler import PassReport, SharedScanScheduler
+from repro.runtime.session import (LabelPropagationSession, MultiplyRequest,
+                                   PageRankSession, PowerIterationSession,
+                                   Session)
+
+__all__ = [
+    "Batcher", "Wave", "WaveEntry", "CacheStats", "HotChunkCache",
+    "PassReport", "SharedScanScheduler", "LabelPropagationSession",
+    "MultiplyRequest", "PageRankSession", "PowerIterationSession", "Session",
+]

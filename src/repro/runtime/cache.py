@@ -1,0 +1,121 @@
+"""Hot-chunk cache: spend *leftover* memory budget on pinning chunk batches.
+
+The paper's §3.6 policy spends memory on dense columns first — caching the
+sparse matrix is the worst use of a byte while any dense column is still on
+the slow tier (E > M).  But a serving runtime routinely has budget left over
+after the wave's columns are admitted (few tenants, narrow waves, tenants
+converging mid-workload).  That remainder is exactly the memory an IM
+executor would have used, so we pin the most frequently read chunk batches
+in it, turning the executor into a tunable hybrid between SEM-SpMM (budget
+exhausted by columns -> pure streaming) and IM-SpMM (budget covers the whole
+matrix -> no I/O after warmup).
+
+Eviction is LFU with persistent frequencies: access counts survive eviction,
+so a batch that keeps getting re-read re-earns its pin even after a budget
+squeeze (a tenant wave widening temporarily).  On power-law graphs chunk
+batches are uniform in *bytes* but the runtime may scan subranges or shrink
+budget mid-workload, which is where the frequency signal bites.
+
+Duck-typed interface consumed by :meth:`repro.io.storage.TileStore.stream`:
+``get(key)`` -> batch-or-None, ``offer(key, batch, nbytes)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+Key = Tuple[int, int]  # (start_chunk, n_chunks) of a read batch
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    hit_bytes: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class HotChunkCache:
+    """LFU-pinned chunk-batch cache with a resizable byte budget."""
+
+    def __init__(self, budget_bytes: int = 0):
+        self.budget_bytes = int(budget_bytes)
+        self.stats = CacheStats()
+        self._pinned: Dict[Key, tuple] = {}    # key -> batch tuple
+        self._nbytes: Dict[Key, int] = {}      # key -> resident bytes pinned
+        self._freq: Dict[Key, int] = {}        # persistent access counts
+        self.pinned_bytes = 0
+
+    # -- read path -----------------------------------------------------------
+    def get(self, key: Key):
+        self._freq[key] = self._freq.get(key, 0) + 1
+        batch = self._pinned.get(key)
+        if batch is not None:
+            self.stats.hits += 1
+            self.stats.hit_bytes += self._nbytes[key]
+        else:
+            self.stats.misses += 1
+        return batch
+
+    def offer(self, key: Key, batch: tuple, nbytes: int) -> bool:
+        """Called after a miss was read from the slow tier; pin it if the
+        budget allows (evicting strictly colder entries if needed)."""
+        if key in self._pinned or nbytes > self.budget_bytes:
+            return False
+        if self.pinned_bytes + nbytes > self.budget_bytes:
+            # Evict only if the strictly-colder entries free enough bytes —
+            # decide before touching anything, so a doomed offer never
+            # shrinks the cache (evict-then-bail would strip entries the
+            # budget had already admitted).
+            freq = self._freq.get(key, 0)
+            victims = sorted((k for k in self._pinned
+                              if self._freq.get(k, 0) < freq),
+                             key=lambda k: self._freq.get(k, 0))
+            freed, needed = 0, self.pinned_bytes + nbytes - self.budget_bytes
+            chosen = []
+            for v in victims:
+                if freed >= needed:
+                    break
+                chosen.append(v)
+                freed += self._nbytes[v]
+            if freed < needed:
+                return False
+            for v in chosen:
+                self._evict(v)
+        self._pinned[key] = batch
+        self._nbytes[key] = nbytes
+        self.pinned_bytes += nbytes
+        return True
+
+    # -- budget control ------------------------------------------------------
+    def set_budget(self, budget_bytes: int) -> None:
+        """Resize (the scheduler calls this each pass with the leftover
+        budget); evicts coldest-first until pinned bytes fit."""
+        self.budget_bytes = max(0, int(budget_bytes))
+        while self.pinned_bytes > self.budget_bytes:
+            self._evict(self._coldest())
+
+    def _coldest(self) -> Optional[Key]:
+        if not self._pinned:
+            return None
+        # .get: entries pinned via offer() without a prior get() (pre-warm)
+        # have no frequency record yet
+        return min(self._pinned, key=lambda k: self._freq.get(k, 0))
+
+    def _evict(self, key: Key) -> None:
+        del self._pinned[key]
+        self.pinned_bytes -= self._nbytes.pop(key)
+        self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._pinned.clear()
+        self._nbytes.clear()
+        self.pinned_bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._pinned)

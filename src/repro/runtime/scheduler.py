@@ -1,0 +1,135 @@
+"""Shared-scan scheduler: one streaming pass serves the whole wave.
+
+The serving loop is the paper's executor inverted: instead of one caller
+driving many passes, many tenants ride one pass.  Each ``run_pass``:
+
+1. **admit** — queued sessions join the active wave while their columns fit
+   the §3.6 memory-budget limit (``SEMSpMM.columns_that_fit``);
+2. **pack** — active tenants' current columns become one shared ``X``;
+3. **scan** — a single streaming pass over the :class:`TileStore` computes
+   ``A @ X`` (vertical partitioning kicks in automatically if a lone tenant
+   is wider than the budget — paper §3.3);
+4. **scatter** — each tenant consumes its result columns and advances;
+   converged tenants retire, freeing columns for the next admission;
+5. **re-budget** — leftover memory (budget minus live columns) is handed to
+   the hot-chunk cache, so a draining workload asymptotically becomes
+   IM-SpMM while a saturated one stays pure streaming.
+
+I/O amortization is the invariant the tests pin down: serving N single-vector
+tenants costs ``ceil(total_cols / columns_that_fit)`` passes, not N.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.sem import SEMSpMM
+from repro.runtime.batcher import Batcher, Wave
+from repro.runtime.cache import HotChunkCache
+from repro.runtime.session import MultiplyRequest, Session
+
+
+@dataclasses.dataclass
+class PassReport:
+    """What one shared scan did (per-pass stats from the executor)."""
+    wave_cols: int = 0
+    tenants: int = 0
+    retired: int = 0
+    scan_passes: int = 0        # >1 only for an oversized (sliced) wave
+    bytes_read: int = 0
+    cache_hit_bytes: int = 0
+    cache_budget: int = 0
+
+
+class SharedScanScheduler:
+    """Multi-tenant serving runtime over one shared :class:`SEMSpMM`."""
+
+    def __init__(self, sem: SEMSpMM, *, use_cache: bool = True):
+        self.sem = sem
+        self.batcher = Batcher(sem.n_cols)
+        self.active: List[Session] = []
+        self.cache: Optional[HotChunkCache] = None
+        if use_cache and sem.mode == "sem":
+            # adopt a cache already attached to the executor (e.g. pre-warmed
+            # via SEMSpMM(cache=...)) rather than clobbering it
+            self.cache = sem.cache if sem.cache is not None else \
+                HotChunkCache(0)
+            sem.cache = self.cache
+        self.reports: List[PassReport] = []
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, session: Session) -> Session:
+        return self.batcher.submit(session)
+
+    def query(self, x: np.ndarray, tenant_id: str = "") -> MultiplyRequest:
+        """Convenience: enqueue a one-shot A @ x request."""
+        return self.submit(MultiplyRequest(x, tenant_id=tenant_id))
+
+    @property
+    def idle(self) -> bool:
+        return not self.active and self.batcher.pending == 0
+
+    # -- the serving loop ----------------------------------------------------
+    def run_pass(self) -> Optional[PassReport]:
+        """Admit, pack, scan once, scatter, retire.  Returns None when there
+        is no work."""
+        demand = (sum(s.width for s in self.active)
+                  + self.batcher.pending_columns())
+        if demand == 0:
+            return None
+        col_budget = self.sem.columns_that_fit(demand)
+        self.batcher.admit(self.active, col_budget)
+        wave = self.batcher.pack(self.active)
+        if wave is None:
+            return None
+
+        # Leftover budget -> hot-chunk cache (shrink before the scan so the
+        # cache never overdraws memory the wave's columns need).
+        report = PassReport(wave_cols=wave.width, tenants=len(wave.entries))
+        if self.cache is not None:
+            leftover = self.sem.leftover_budget(wave.width)
+            self.cache.set_budget(leftover)
+            report.cache_budget = leftover
+
+        stats = self.sem.store.stats
+        r0, h0, p0 = stats.bytes_read, stats.cache_hit_bytes, self.sem.passes
+        y = self._scan(wave, col_budget)
+        self.batcher.scatter(wave, y)
+
+        still_active = [s for s in self.active if not s.done]
+        report.retired = len(self.active) - len(still_active)
+        self.active = still_active
+        report.scan_passes = self.sem.passes - p0
+        report.bytes_read = stats.bytes_read - r0
+        report.cache_hit_bytes = stats.cache_hit_bytes - h0
+        self.reports.append(report)
+        return report
+
+    def _scan(self, wave: Wave, col_budget: int) -> np.ndarray:
+        """One shared A @ X.  An oversized lone tenant is served by vertical
+        partitioning: slice X to the column budget, one streaming pass per
+        slice (paper §3.3 / §3.6: passes = ceil(p / p_fit))."""
+        if wave.width <= col_budget:
+            return self.sem.multiply(wave.x)
+        slices = [self.sem.multiply(wave.x[:, c0:c0 + col_budget])
+                  for c0 in range(0, wave.width, col_budget)]
+        return np.concatenate(slices, axis=1)
+
+    def run(self, max_passes: int = 10_000) -> List[PassReport]:
+        """Serve until every submitted session is done (or the pass cap)."""
+        done: List[PassReport] = []
+        for _ in range(max_passes):
+            rep = self.run_pass()
+            if rep is None:
+                break
+            done.append(rep)
+        return done
+
+    # -- accounting ----------------------------------------------------------
+    def total_bytes_read(self) -> int:
+        return sum(r.bytes_read for r in self.reports)
+
+    def total_scan_passes(self) -> int:
+        return sum(r.scan_passes for r in self.reports)

@@ -1,0 +1,163 @@
+"""Per-tenant session state for the shared-scan serving runtime.
+
+A :class:`Session` is the unit of multi-tenancy: it contributes columns to
+the packed wave (``x_columns``), receives its slice of the shared ``A @ X``
+(``consume``), and advances its own iterate.  Iterative workloads (PageRank,
+power iteration, label propagation) advance one operator application per
+shared streaming pass; a converged tenant reports ``done`` and the scheduler
+retires it, freeing its columns mid-workload for queued tenants (and growing
+the hot-chunk cache's leftover budget).
+
+Sessions hold *no* reference to the operator — the scheduler owns the single
+shared ``SEMSpMM``; a session only describes what to multiply next and what
+to do with the product.  That is what makes N tenants one streaming pass.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class Session:
+    """Base tenant: contribute columns, consume the product, maybe finish."""
+
+    def __init__(self, tenant_id: str = ""):
+        self.tenant_id = tenant_id
+        self.iterations = 0
+        self.done = False
+        self.result: Optional[np.ndarray] = None
+
+    @property
+    def width(self) -> int:
+        x = self.x_columns()
+        return 1 if x.ndim == 1 else x.shape[1]
+
+    def x_columns(self) -> np.ndarray:
+        """Current operand columns, shape (n,) or (n, k)."""
+        raise NotImplementedError
+
+    def consume(self, y: np.ndarray) -> None:
+        """Receive this tenant's slice of A @ X (shape (m, k)); advance."""
+        raise NotImplementedError
+
+
+class MultiplyRequest(Session):
+    """One-shot A @ x query — done after a single shared pass."""
+
+    def __init__(self, x: np.ndarray, tenant_id: str = ""):
+        super().__init__(tenant_id)
+        self._x = np.asarray(x, np.float32)
+        if self._x.ndim == 1:
+            self._x = self._x[:, None]
+        self._squeeze = np.asarray(x).ndim == 1
+
+    def x_columns(self) -> np.ndarray:
+        return self._x
+
+    def consume(self, y: np.ndarray) -> None:
+        # copy: y is a view into the shared wave output; retaining it would
+        # keep the whole (n, wave_width) array alive per tenant
+        self.result = np.ascontiguousarray(y[:, 0] if self._squeeze else y)
+        self.iterations = 1
+        self.done = True
+
+
+class PowerIterationSession(Session):
+    """Dominant eigenvector by power iteration: x' = A x / ||A x||."""
+
+    def __init__(self, x0: np.ndarray, *, tol: float = 1e-6,
+                 max_iter: int = 100, tenant_id: str = ""):
+        super().__init__(tenant_id)
+        x0 = np.asarray(x0, np.float32)
+        self.x = (x0 / np.linalg.norm(x0)).astype(np.float32)
+        self.tol, self.max_iter = tol, max_iter
+        self.eigenvalue = 0.0
+        self.residuals: List[float] = []
+
+    def x_columns(self) -> np.ndarray:
+        return self.x[:, None]
+
+    def consume(self, y: np.ndarray) -> None:
+        y = y[:, 0]
+        self.eigenvalue = float(self.x @ y)  # Rayleigh quotient
+        norm = float(np.linalg.norm(y))
+        x_new = (y / norm).astype(np.float32) if norm > 0 else self.x
+        resid = float(np.abs(x_new - self.x).max())
+        self.residuals.append(resid)
+        self.x = x_new
+        self.iterations += 1
+        if resid < self.tol or self.iterations >= self.max_iter:
+            self.result = self.x
+            self.done = True
+
+
+class PageRankSession(Session):
+    """PageRank-as-a-service: one damped update per shared pass.
+
+    The operator behind the scheduler must be the column-stochastic
+    ``P = A^T D^{-1}`` (:func:`repro.sparse.graph.pagerank_operator`); the
+    update ``x' = d (P x + dangling/N) + (1-d)/N`` matches
+    :func:`repro.apps.pagerank.pagerank` step for step, so a session served
+    through the shared scan returns the same scores as a dedicated run.
+    """
+
+    def __init__(self, n: int, dangling_mask: np.ndarray, *,
+                 damping: float = 0.85, tol: float = 1e-8,
+                 max_iter: int = 30, tenant_id: str = ""):
+        super().__init__(tenant_id)
+        self.n = n
+        self.dangling_mask = dangling_mask
+        self.damping, self.tol, self.max_iter = damping, tol, max_iter
+        self.x = np.full(n, 1.0 / n, np.float32)
+        self.residuals: List[float] = []
+
+    def x_columns(self) -> np.ndarray:
+        return self.x[:, None]
+
+    def consume(self, y: np.ndarray) -> None:
+        y = y[:, 0]
+        dangling = float(self.x[self.dangling_mask].sum()) / self.n
+        x_new = (self.damping * (y + dangling)
+                 + (1.0 - self.damping) / self.n)
+        resid = float(np.abs(x_new - self.x).sum())
+        self.residuals.append(resid)
+        self.x = x_new.astype(np.float32)
+        self.iterations += 1
+        if resid < self.tol or self.iterations >= self.max_iter:
+            self.result = self.x
+            self.done = True
+
+
+class LabelPropagationSession(Session):
+    """Seeded label propagation: X is (n, n_labels); each pass computes
+    ``A @ X``, renormalizes rows, and clamps seed rows back to their labels.
+    Converges when the label distribution stops moving.  A multi-column
+    tenant — it is the in-runtime example of the paper's point that wider
+    dense matrices amortize the stream better."""
+
+    def __init__(self, seeds: np.ndarray, seed_labels: np.ndarray,
+                 n: int, n_labels: int, *, tol: float = 1e-4,
+                 max_iter: int = 50, tenant_id: str = ""):
+        super().__init__(tenant_id)
+        self.seeds = np.asarray(seeds)
+        self.seed_labels = np.asarray(seed_labels)
+        self.tol, self.max_iter = tol, max_iter
+        self.x = np.zeros((n, n_labels), np.float32)
+        self.x[self.seeds, self.seed_labels] = 1.0
+
+    def x_columns(self) -> np.ndarray:
+        return self.x
+
+    def consume(self, y: np.ndarray) -> None:
+        row_sum = y.sum(axis=1, keepdims=True)
+        x_new = np.where(row_sum > 0, y / np.maximum(row_sum, 1e-12), self.x)
+        x_new[self.seeds] = 0.0
+        x_new[self.seeds, self.seed_labels] = 1.0
+        delta = float(np.abs(x_new - self.x).max())
+        self.x = x_new.astype(np.float32)
+        self.iterations += 1
+        if delta < self.tol or self.iterations >= self.max_iter:
+            self.result = self.x
+            self.labels = self.x.argmax(axis=1)
+            self.done = True

@@ -1,6 +1,7 @@
 """Format round-trips, byte-exact size accounting, chunk-packing invariants."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.formats import (COO, CSR, from_coo_tiled, to_chunked)

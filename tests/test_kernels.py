@@ -3,6 +3,7 @@ the ref.py oracle (interpret mode per the CPU-container protocol)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.formats import COO, to_chunked

@@ -14,6 +14,8 @@ Invariants under test:
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.formats import COO, from_coo_tiled, to_chunked

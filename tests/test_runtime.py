@@ -1,0 +1,319 @@
+"""Serving-runtime tests: shared-scan correctness (bit-for-bit vs dedicated
+multiplies), I/O amortization (N tenants ~ 1 pass, not N), admission control
+against the §3.6 column budget, hot-chunk cache correctness + I/O reduction,
+and mid-workload retirement freeing columns."""
+import numpy as np
+import pytest
+
+from repro.apps.common import SEMOperator
+from repro.apps.labelprop import (build_operator as lp_operator,
+                                  labelprop_dense_reference,
+                                  labelprop_session)
+from repro.apps.pagerank import (build_operator as pr_operator,
+                                 dangling_vertices, pagerank,
+                                 pagerank_session)
+from repro.core.formats import to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.io.storage import TileStore
+from repro.runtime import (Batcher, HotChunkCache, MultiplyRequest,
+                           PowerIterationSession, SharedScanScheduler)
+from repro.sparse.generate import sbm
+
+
+@pytest.fixture(scope="module")
+def store_path(small_valued, tmp_path_factory):
+    ct = to_chunked(small_valued, T=512, C=128)
+    path = str(tmp_path_factory.mktemp("runtime") / "g")
+    TileStore.write(path, ct)
+    return path
+
+
+def fresh_sem(store_path, **cfg):
+    """Independent store handle -> independent I/O stats."""
+    return SEMSpMM(TileStore.open(store_path), SEMConfig(chunk_batch=64,
+                                                         **cfg))
+
+
+def budget_for_cols(sem: SEMSpMM, cols: int) -> int:
+    """A memory budget that admits exactly ``cols`` dense columns."""
+    return (sem.stream_overhead_bytes() + sem.column_bytes() * cols
+            + sem.column_bytes() // 2)
+
+
+# ---------------------------------------------------------------------------
+# Correctness: the shared scan is bit-for-bit the dedicated multiply
+# ---------------------------------------------------------------------------
+def test_shared_scan_matches_per_request_bitwise(store_path, small_valued):
+    rng = np.random.default_rng(3)
+    xs = [rng.standard_normal(small_valued.n_cols).astype(np.float32)
+          for _ in range(8)]
+    sched = SharedScanScheduler(fresh_sem(store_path), use_cache=False)
+    reqs = [sched.query(x, tenant_id=f"t{i}") for i, x in enumerate(xs)]
+    sched.run()
+    dedicated = fresh_sem(store_path)
+    for x, r in zip(xs, reqs):
+        assert r.done
+        np.testing.assert_array_equal(r.result,
+                                      dedicated.multiply(x[:, None])[:, 0])
+
+
+def test_matrix_request_roundtrip(store_path, small_valued):
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((small_valued.n_cols, 3)).astype(np.float32)
+    sched = SharedScanScheduler(fresh_sem(store_path), use_cache=False)
+    req = sched.submit(MultiplyRequest(x))
+    sched.run()
+    np.testing.assert_array_equal(req.result,
+                                  fresh_sem(store_path).multiply(x))
+
+
+# ---------------------------------------------------------------------------
+# I/O amortization: N tenants, ~1 pass
+# ---------------------------------------------------------------------------
+def test_wave_of_n_requests_reads_one_pass(store_path, small_valued):
+    """8 concurrent single-vector queries -> bytes_read of ONE streaming
+    pass, not 8 (the naive per-request cost)."""
+    rng = np.random.default_rng(5)
+    sem = fresh_sem(store_path)
+    sched = SharedScanScheduler(sem, use_cache=False)
+    for i in range(8):
+        sched.query(rng.standard_normal(small_valued.n_cols)
+                    .astype(np.float32), tenant_id=f"q{i}")
+    sched.run()
+    assert sem.store.stats.bytes_read == sem.store.nbytes  # == 1 pass
+    assert sched.total_scan_passes() == 1
+
+
+def test_amortization_bound_under_column_budget(store_path, small_valued):
+    """Acceptance criterion: N >= 8 queries read the matrix at most
+    ceil(packed_cols / columns_that_fit) times."""
+    rng = np.random.default_rng(6)
+    n_req = 10
+    sem = fresh_sem(store_path)
+    sem.cfg.memory_budget_bytes = budget_for_cols(sem, 4)
+    assert sem.columns_that_fit(n_req) == 4
+    sched = SharedScanScheduler(sem, use_cache=False)
+    for i in range(n_req):
+        sched.query(rng.standard_normal(small_valued.n_cols)
+                    .astype(np.float32), tenant_id=f"q{i}")
+    sched.run()
+    max_passes = -(-n_req // 4)  # ceil(10/4) = 3
+    assert sched.total_scan_passes() <= max_passes
+    assert sem.store.stats.bytes_read <= max_passes * sem.store.nbytes
+
+
+def test_oversized_tenant_served_by_vertical_slices(store_path, small_valued):
+    """A lone tenant wider than the column budget is admitted alone and
+    sliced (paper §3.3): ceil(width / p_fit) passes, correct result."""
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((small_valued.n_cols, 7)).astype(np.float32)
+    sem = fresh_sem(store_path)
+    sem.cfg.memory_budget_bytes = budget_for_cols(sem, 3)
+    sched = SharedScanScheduler(sem, use_cache=False)
+    req = sched.submit(MultiplyRequest(x))
+    rep = sched.run_pass()
+    assert rep.scan_passes == -(-7 // 3)  # 3 slices
+    np.testing.assert_array_equal(req.result,
+                                  fresh_sem(store_path).multiply(x))
+
+
+def test_fifo_admission_no_overtaking(store_path, small_valued):
+    """A wide tenant at the head is never overtaken by narrow ones queued
+    behind it."""
+    n = small_valued.n_cols
+    sem = fresh_sem(store_path)
+    sem.cfg.memory_budget_bytes = budget_for_cols(sem, 4)
+    sched = SharedScanScheduler(sem, use_cache=False)
+    wide = sched.submit(MultiplyRequest(np.ones((n, 3), np.float32)))
+    wide2 = sched.submit(MultiplyRequest(np.ones((n, 3), np.float32)))
+    narrow = sched.submit(MultiplyRequest(np.ones(n, np.float32)))
+    rep1 = sched.run_pass()
+    # wave 1: wide (3 cols) fits; wide2 would need 6 -> waits; narrow must
+    # NOT jump the queue even though it would fit.
+    assert rep1.wave_cols == 3 and rep1.tenants == 1
+    assert wide.done and not wide2.done and not narrow.done
+    rep2 = sched.run_pass()
+    assert rep2.wave_cols == 4 and rep2.tenants == 2
+    assert wide2.done and narrow.done
+
+
+# ---------------------------------------------------------------------------
+# Hot-chunk cache
+# ---------------------------------------------------------------------------
+def test_cache_preserves_results_and_reduces_io(store_path, small_valued):
+    """Iterative serving with the cache returns the same bits while reading
+    fewer bytes from the slow tier."""
+    n = small_valued.n_cols
+    rng = np.random.default_rng(8)
+    x0 = rng.standard_normal(n).astype(np.float32)
+
+    def serve(use_cache):
+        sem = fresh_sem(store_path)
+        sem.cfg.memory_budget_bytes = 1 << 30  # plenty left over
+        sched = SharedScanScheduler(sem, use_cache=use_cache)
+        s = sched.submit(PowerIterationSession(x0.copy(), tol=0.0,
+                                               max_iter=6))
+        sched.run()
+        return s, sem.store.stats
+
+    s_plain, st_plain = serve(False)
+    s_cache, st_cache = serve(True)
+    np.testing.assert_array_equal(s_plain.result, s_cache.result)
+    assert s_plain.eigenvalue == s_cache.eigenvalue
+    # 6 passes uncached vs 1 cold pass + 5 cached passes
+    assert st_cache.bytes_read < st_plain.bytes_read
+    assert st_cache.bytes_read == st_plain.bytes_read // 6  # 1 cold pass
+    assert st_cache.cache_hit_bytes == st_plain.bytes_read - \
+        st_cache.bytes_read
+
+
+def test_cache_respects_budget_and_lfu_eviction():
+    cache = HotChunkCache(100)
+    batch = ("b",)
+    assert cache.get((0, 1)) is None          # miss, freq[(0,1)] = 1
+    assert cache.offer((0, 1), batch, 60)
+    assert cache.offer((1, 1), batch, 60) is False   # over budget, colder
+    assert cache.get((0, 1)) is batch          # hit
+    cache.set_budget(50)                       # squeeze -> evict
+    assert len(cache) == 0 and cache.pinned_bytes == 0
+    # frequency survives eviction: (0,1) has freq 2, re-earns its pin
+    assert cache.offer((0, 1), batch, 40)
+    # a strictly hotter key evicts it
+    for _ in range(3):
+        cache.get((2, 1))
+    assert cache.offer((2, 1), batch, 40)
+    assert cache.get((0, 1)) is None and cache.get((2, 1)) is batch
+
+
+def test_cache_budget_grows_as_tenants_retire(store_path, small_valued):
+    """Retired tenants free columns -> leftover (cache) budget grows."""
+    n = small_valued.n_cols
+    sem = fresh_sem(store_path)
+    sem.cfg.memory_budget_bytes = budget_for_cols(sem, 8)
+    sched = SharedScanScheduler(sem, use_cache=True)
+    sched.submit(PowerIterationSession(np.ones(n, np.float32), tol=0.0,
+                                       max_iter=5))
+    for i in range(4):
+        sched.query(np.ones(n, np.float32), tenant_id=f"q{i}")
+    reports = sched.run()
+    assert reports[0].wave_cols == 5 and reports[0].retired == 4
+    assert reports[1].wave_cols == 1
+    assert reports[1].cache_budget > reports[0].cache_budget
+
+
+# ---------------------------------------------------------------------------
+# Iterative sessions vs their dedicated implementations
+# ---------------------------------------------------------------------------
+def test_pagerank_session_matches_dedicated_run(small_graph, tmp_path):
+    p = pr_operator(small_graph)
+    op = SEMOperator.from_coo(p, path=str(tmp_path / "pr"), T=512, C=128)
+    want = pagerank(op, dangling_vertices(small_graph), max_iter=20)
+
+    sched = SharedScanScheduler(
+        SEMSpMM(op.sem.store, SEMConfig(chunk_batch=64)), use_cache=False)
+    # three tenants share the scan; all converge to the dedicated scores
+    sessions = [sched.submit(pagerank_session(small_graph, max_iter=20,
+                                              tenant_id=f"pr{i}"))
+                for i in range(3)]
+    sched.run()
+    for s in sessions:
+        assert s.done and s.iterations == want.iterations
+        np.testing.assert_array_equal(s.result, want.scores)
+        assert s.residuals == want.residuals
+
+
+def test_labelprop_session_recovers_sbm_communities(tmp_path):
+    adj = sbm(1024, 8192, n_clusters=4, in_out_ratio=8.0, seed=2)
+    opm = lp_operator(adj)
+    op = SEMOperator.from_coo(opm, path=str(tmp_path / "lp"), T=512, C=128)
+    rng = np.random.default_rng(0)
+    seeds = np.concatenate([rng.integers(c * 256, (c + 1) * 256, 8)
+                            for c in range(4)])
+    seed_labels = np.repeat(np.arange(4), 8)
+
+    sched = SharedScanScheduler(
+        SEMSpMM(op.sem.store, SEMConfig(chunk_batch=64)), use_cache=False)
+    s = sched.submit(labelprop_session(adj, seeds, seed_labels, 4,
+                                       max_iter=30))
+    sched.run()
+    assert s.done
+    np.testing.assert_array_equal(s.labels[seeds], seed_labels)
+    ref = labelprop_dense_reference(adj, seeds, seed_labels, 4, max_iter=30)
+    agree = float((s.labels == ref).mean())
+    assert agree > 0.9, agree
+
+
+def test_mixed_wave_shares_one_scan(store_path, small_valued):
+    """A mixed wave (iterative + one-shot tenants) costs one pass per
+    iteration, and one-shots retire after riding along once."""
+    n = small_valued.n_cols
+    sem = fresh_sem(store_path)
+    sched = SharedScanScheduler(sem, use_cache=False)
+    rng = np.random.default_rng(11)
+    power = sched.submit(PowerIterationSession(
+        rng.standard_normal(n).astype(np.float32), tol=0.0, max_iter=4))
+    oneshot = sched.query(rng.standard_normal(n).astype(np.float32))
+    reports = sched.run()
+    assert oneshot.done and power.done
+    assert len(reports) == 4                      # power's 4 iterations
+    assert sem.store.stats.bytes_read == 4 * sem.store.nbytes
+    assert reports[0].wave_cols == 2 and reports[1].wave_cols == 1
+
+
+# ---------------------------------------------------------------------------
+# Batcher unit behavior
+# ---------------------------------------------------------------------------
+def test_batcher_rejects_wrong_shape(store_path):
+    sem = fresh_sem(store_path)
+    b = Batcher(sem.n_cols)
+    with pytest.raises(ValueError):
+        b.submit(MultiplyRequest(np.ones(sem.n_cols + 1, np.float32)))
+
+
+def test_batcher_rejects_zero_width(store_path):
+    """A zero-column tenant would wait forever (no demand to trigger a
+    pass) — reject at submit instead of hanging the caller."""
+    sem = fresh_sem(store_path)
+    b = Batcher(sem.n_cols)
+    with pytest.raises(ValueError):
+        b.submit(MultiplyRequest(np.empty((sem.n_cols, 0), np.float32)))
+
+
+def test_cache_doomed_offer_does_not_strip_entries():
+    """An offer that cannot fit even after evicting every strictly-colder
+    entry must leave the cache untouched (no evict-then-bail)."""
+    cache = HotChunkCache(100)
+    a, b, k = ("a",), ("b",), ("k",)
+    cache.get((0, 1))                       # freq[(0,1)] = 1
+    for _ in range(5):
+        cache.get((1, 1))                   # freq[(1,1)] = 5
+    assert cache.offer((0, 1), a, 30)
+    assert cache.offer((1, 1), b, 60)
+    cache.get((2, 1)); cache.get((2, 1))    # freq[(2,1)] = 2
+    # needs 40 freed but the only strictly-colder entry frees 30 -> refuse
+    # without evicting anything
+    assert cache.offer((2, 1), k, 50) is False
+    assert cache.get((0, 1)) is a and cache.get((1, 1)) is b
+
+
+def test_prewarmed_cache_survives_budget_squeeze():
+    """Entries pinned via offer() with no prior get() (pre-warming) must not
+    crash eviction paths that consult their frequency."""
+    cache = HotChunkCache(100)
+    assert cache.offer((0, 1), ("a",), 60)   # pinned, never looked up
+    cache.set_budget(10)                      # squeeze -> evict the unknown
+    assert len(cache) == 0
+    assert cache.offer((1, 1), ("b",), 10)
+    cache.get((2, 1))                         # freq[(2,1)] = 1 > unseen 0
+    assert cache.offer((2, 1), ("c",), 10)    # victim scan sees freq-less pin
+    assert cache.get((2, 1)) == ("c",)
+
+
+def test_scheduler_adopts_prewarmed_cache(store_path, small_valued):
+    """A cache attached via SEMSpMM(cache=...) is reused, not clobbered."""
+    from repro.core.sem import SEMConfig
+    prewarmed = HotChunkCache(1 << 30)
+    sem = SEMSpMM(TileStore.open(store_path), SEMConfig(chunk_batch=64),
+                  cache=prewarmed)
+    sched = SharedScanScheduler(sem, use_cache=True)
+    assert sched.cache is prewarmed and sem.cache is prewarmed
