@@ -1,13 +1,19 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig12]
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig12] [--json]
 
 Writes results/bench/<name>.json per bench and prints CSVs.  Asserts inside
 each bench validate the paper's claims (byte formulas, balance bounds,
-convergence) — a failed claim fails the run."""
+convergence) — a failed claim fails the run.
+
+``--json`` additionally writes repo-root ``BENCH_engine.json`` — the
+machine-readable perf trajectory of the streaming engine (rows/s, bytes
+streamed, overlap %, pass counts per engine variant) tracked across PRs."""
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -23,13 +29,37 @@ BENCHES = [
     ("table2_convert", "benchmarks.bench_convert"),
     ("fig14_16_apps", "benchmarks.bench_apps"),
     ("runtime_serving", "benchmarks.bench_runtime"),
+    ("engine", "benchmarks.bench_engine"),
 ]
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_engine_json(rows) -> str:
+    """Distill the engine ablation into repo-root BENCH_engine.json (the
+    cross-PR perf trajectory file)."""
+    summary = {
+        "p": rows[0]["p"],
+        "engines": [
+            {k: r[k] for k in ("tier", "engine", "t_pass_ms", "rows_per_s",
+                               "mb_streamed_per_pass", "h2d_mb_per_pass",
+                               "overlap_pct", "passes")}
+            for r in rows],
+        "overlap_speedup_emulated": rows[0]["overlap_speedup_emulated"],
+        "h2d_index_saving_mb": rows[0]["h2d_index_saving_mb"],
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1)
+    return path
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list of name prefixes to run")
+    ap.add_argument("--json", action="store_true",
+                    help="also write repo-root BENCH_engine.json")
     args = ap.parse_args(argv)
     prefixes = args.only.split(",") if args.only else None
 
@@ -40,7 +70,9 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["main"])
-            mod.main()
+            rows = mod.main()
+            if args.json and name == "engine" and rows:
+                print(f"[bench] wrote {write_engine_json(rows)}")
             print(f"[bench] {name}: ok ({time.time() - t0:.1f}s)\n")
         except Exception as e:  # noqa: BLE001
             import traceback

@@ -16,12 +16,31 @@ Data placement policy (paper §3.1/§3.6):
 
 ``mode="im"`` keeps the sparse matrix in memory (IM-SpMM) — the paper's
 own overhead-quantification baseline.
+
+The streaming pass is a pipelined engine (the paper's premise that SEM
+reaches ~100% of in-memory speed by hiding SSD latency behind compute,
+carried through every stage, not just the disk read):
+
+* **zero-copy reads** — batches arrive as uint16 strided views into the
+  store's persistent memmap (``TileStore.read_batch_raw``), faulted in by
+  the prefetch thread;
+* **device-side decode** — the uint16 indices are shipped to the device
+  as-is and upcast inside the jitted step, halving host->device index
+  traffic (the SCSR 2-byte saving survives the whole pipeline); binary
+  matrices ship no values at all (synthesized on device from chunk nnz);
+* **overlapped staging** — batch k+1 is ``jax.device_put`` while batch k's
+  kernel runs (async dispatch); the donated accumulator is only
+  ``block_until_ready`` at pass end.  ``IOStats.h2d_bytes`` /
+  ``overlap_batches`` expose the traffic and overlap for benchmarks;
+* **fixed-shape batches** — the tail batch is padded to ``chunk_batch``
+  with zero-nnz chunks so each jitted step compiles exactly once per
+  (C, T, p).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,12 +57,19 @@ class SEMConfig:
     prefetch: int = 2             # async prefetch depth
     use_async: bool = True        # paper's async I/O + polling
     use_pallas: bool = False      # interpret-mode Pallas kernel (slow on CPU)
+    decode_on_device: bool = True  # ship uint16 indices, upcast on device
+    overlap: bool = True          # stage batch k+1 while batch k computes
+    fixed_shape: bool = True      # pad the tail batch to chunk_batch
 
 
 @partial(jax.jit, static_argnames=("T", "semiring"), donate_argnums=(5,))
 def _batch_step(meta, row_l, col_l, vals, x_pad, out_blocks, T: int,
                 semiring: str = "plus_times"):
-    """Apply one batch of chunks: out_blocks (n_tile_rows, T, p) += A_batch @ X."""
+    """Apply one batch of chunks: out_blocks (n_tile_rows, T, p) += A_batch @ X.
+    Accepts uint16 or int32 local indices; the upcast happens here, on
+    device (jit specializes per input dtype)."""
+    row_l = row_l.astype(jnp.int32)
+    col_l = col_l.astype(jnp.int32)
     x_blocks = x_pad.reshape(-1, T, x_pad.shape[1])
 
     def step(out, chunk):
@@ -57,11 +83,39 @@ def _batch_step(meta, row_l, col_l, vals, x_pad, out_blocks, T: int,
     return out_blocks
 
 
+@partial(jax.jit, static_argnames=("T",), donate_argnums=(4,))
+def _batch_step_binary(meta, row_l, col_l, x_pad, out_blocks, T: int):
+    """Binary-matrix step: no values are streamed or staged at all — a lane
+    contributes 1.0 iff its index is below the chunk's nnz (device-side
+    synthesis of what the decoded path materialized on the host)."""
+    row_l = row_l.astype(jnp.int32)
+    col_l = col_l.astype(jnp.int32)
+    x_blocks = x_pad.reshape(-1, T, x_pad.shape[1])
+    lanes = jnp.arange(row_l.shape[1])
+
+    def step(out, chunk):
+        m, r, c = chunk
+        gathered = jnp.take(x_blocks[m[1]], c, axis=0)
+        contrib = jnp.where((lanes < m[3])[:, None], gathered, 0.0)
+        blk = jnp.zeros((T, x_pad.shape[1]), x_pad.dtype).at[r].add(contrib)
+        return out.at[m[0]].add(blk), None
+
+    out_blocks, _ = jax.lax.scan(step, out_blocks, (meta, row_l, col_l))
+    return out_blocks
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _zero_acc(out_blocks):
+    """In-place zero of a donated accumulator (reused across vertical
+    slices instead of allocating a fresh one per slice)."""
+    return jnp.zeros_like(out_blocks)
+
+
 class SEMSpMM:
     """Semi-external-memory SpMM over a :class:`TileStore`."""
 
     def __init__(self, store: TileStore, config: Optional[SEMConfig] = None,
-                 mode: str = "sem", cache=None):
+                 mode: str = "sem", cache=None, device=None):
         assert mode in ("sem", "im")
         self.store = store
         self.cfg = config or SEMConfig()
@@ -71,6 +125,9 @@ class SEMSpMM:
         self.n_tile_rows = -(-self.n_rows // self.T)
         self.padded_cols = (-(-self.n_cols // self.T)) * self.T
         self._cached = None
+        # Optional device pinning (sharded scans place one shard per device;
+        # None = the backend default).
+        self.device = device
         # Optional hot-chunk cache (duck-typed, see runtime/cache.py): pins
         # chunk batches in leftover memory, making this executor a hybrid
         # between pure-streaming SEM and fully-resident IM.
@@ -82,30 +139,152 @@ class SEMSpMM:
             self._cached = list(store.stream(self.cfg.chunk_batch,
                                              use_async=False))
 
-    # -- regime 1/2: X in memory ------------------------------------------
-    def multiply(self, x: np.ndarray) -> np.ndarray:
-        """A @ X with X (n, p) in memory; returns in-memory result."""
-        p = x.shape[1]
-        x_pad = jnp.zeros((self.padded_cols, p), jnp.float32)
-        x_pad = x_pad.at[: x.shape[0]].set(jnp.asarray(x, jnp.float32))
-        out = jnp.zeros((self.n_tile_rows, self.T, p), jnp.float32)
-        batches = (self._cached if self._cached is not None else
+    # -- the pipelined streaming pass ---------------------------------------
+    def _use_raw(self) -> bool:
+        return self.cfg.decode_on_device and self._cached is None
+
+    def _prepare_x(self, x) -> jax.Array:
+        """Stage X on device, padded to the tile grid.  Skips the rebuild,
+        copy, and h2d accounting when ``x`` is already a padded float32
+        device array (the sharded path stages once for all shards)."""
+        already_dev = isinstance(x, jax.Array)
+        if x.shape[0] == self.padded_cols and x.dtype == jnp.float32:
+            x_pad = x if already_dev else jnp.asarray(x)
+            staged = not already_dev
+        else:
+            x_pad = jnp.zeros((self.padded_cols, x.shape[1]), jnp.float32)
+            x_pad = x_pad.at[: x.shape[0]].set(jnp.asarray(x, jnp.float32))
+            staged = True
+        if self.device is not None:
+            x_pad = jax.device_put(x_pad, self.device)
+            staged = True
+        if staged:
+            self.store.stats.add_h2d(x_pad.nbytes)
+        return x_pad
+
+    def _pad_tail(self, batches: Iterator[Tuple[np.ndarray, ...]]
+                  ) -> Iterator[Tuple[np.ndarray, ...]]:
+        """Pad a short tail batch to ``chunk_batch`` chunks so every jitted
+        step sees one shape.  Pad chunks replicate the last chunk's tile
+        coordinates with nnz = 0 and zero entries — their contribution is
+        identically zero and no first-of-tile-row flag is disturbed."""
+        B = self.cfg.chunk_batch
+        for batch in batches:
+            meta = batch[0]
+            n = meta.shape[0]
+            if n == B or n == 0:
+                yield batch
+                continue
+            meta_p = np.zeros((B, 4), meta.dtype)
+            meta_p[:n] = meta
+            meta_p[n:, 0] = meta[-1, 0]   # keep pointing at a live tile row:
+            meta_p[n:, 1] = meta[-1, 1]   # a pad chunk must not re-init or
+            meta_p[n:, 2] = 0             # mark-present a foreign block
+            padded = [meta_p]
+            for a in batch[1:]:
+                if a is None:
+                    padded.append(None)
+                    continue
+                a_p = np.zeros((B,) + a.shape[1:], a.dtype)
+                a_p[:n] = a
+                padded.append(a_p)
+            yield tuple(padded)
+
+    def _stage(self, batch: Tuple[np.ndarray, ...]) -> tuple:
+        """Issue the host->device transfer for one batch (async — returns
+        immediately; overlapped with the in-flight kernel when the engine
+        runs a batch ahead).  Counts the actual bytes shipped: uint16
+        indices cost half the decoded int32, binary matrices ship no
+        values.  The Pallas step consumes the *host* meta (it recomputes
+        first-flags on the CPU), so meta is not staged on that path."""
+        meta, rest = batch[0], batch[1:]
+        dev_rest = tuple(None if a is None else jax.device_put(a, self.device)
+                         for a in rest)
+        if self.cfg.use_pallas:
+            staged, shipped = (meta,) + dev_rest, dev_rest
+        else:
+            dev_meta = jax.device_put(meta, self.device)
+            staged = shipped = (dev_meta,) + dev_rest
+        self.store.stats.add_h2d(
+            sum(a.nbytes for a in shipped if a is not None))
+        return staged
+
+    def _make_step(self, x_pad: jax.Array, binary_raw: bool):
+        """Bind the kernel for this pass: Pallas wave kernel, binary raw
+        step (no values), or the general scan step."""
+        if self.cfg.use_pallas:
+            from repro.kernels.ops import spmm_pallas_batch
+
+            def step(staged, host_meta, out):
+                _, rows, cols, vals = staged
+                return spmm_pallas_batch(host_meta, rows, cols, vals,
+                                         x_pad, out, self.T)
+        elif binary_raw:
+            def step(staged, host_meta, out):
+                meta, rows, cols, _ = staged
+                return _batch_step_binary(meta, rows, cols, x_pad, out,
+                                          self.T)
+        else:
+            def step(staged, host_meta, out):
+                meta, rows, cols, vals = staged
+                return _batch_step(meta, rows, cols, vals, x_pad, out, self.T)
+        return step
+
+    def _stream_pass(self, x_pad: jax.Array, out: jax.Array) -> jax.Array:
+        """One full streaming pass of the sparse matrix, accumulated into the
+        donated ``out`` blocks."""
+        raw = self._use_raw()
+        batches = (iter(self._cached) if self._cached is not None else
                    self.store.stream(self.cfg.chunk_batch,
                                      prefetch=self.cfg.prefetch,
                                      use_async=self.cfg.use_async,
-                                     cache=self.cache))
-        if self.cfg.use_pallas:
-            from repro.kernels.ops import spmm_pallas_batch
-            for meta, rows, cols, vals in batches:
-                out = spmm_pallas_batch(meta, rows, cols, vals, x_pad, out,
-                                        self.T)
+                                     cache=self.cache, raw=raw))
+        if self.cfg.fixed_shape:
+            batches = self._pad_tail(batches)
+        binary_raw = raw and self.store.header["binary"]
+        step = self._make_step(x_pad, binary_raw)
+        stats = self.store.stats
+        if not self.cfg.overlap:
+            for batch in batches:
+                out = step(self._stage(batch), batch[0], out)
         else:
-            for meta, rows, cols, vals in batches:
-                out = _batch_step(jnp.asarray(meta), jnp.asarray(rows),
-                                  jnp.asarray(cols), jnp.asarray(vals),
-                                  x_pad, out, self.T)
+            pending = None
+            for batch in batches:
+                staged = self._stage(batch)  # stage k+1 ...
+                if pending is not None:
+                    out = step(*pending, out)  # ... while k computes
+                    stats.add_overlap()
+                pending = (staged, batch[0])
+            if pending is not None:
+                out = step(*pending, out)
         self.passes += 1
-        return np.asarray(out.reshape(-1, p)[: self.n_rows])
+        return out
+
+    # -- regime 1/2: X in memory ------------------------------------------
+    def multiply(self, x: np.ndarray) -> np.ndarray:
+        """A @ X with X (n, p) in memory; returns in-memory result."""
+        out, _ = self._multiply(x)
+        return out
+
+    def _multiply(self, x: np.ndarray, acc: Optional[jax.Array] = None
+                  ) -> Tuple[np.ndarray, Optional[jax.Array]]:
+        """multiply() plus accumulator reuse: a caller looping over slices of
+        equal width passes back the returned ``acc`` (still holding the
+        previous slice's blocks — it is re-zeroed in place here, via
+        donation, only when actually reused; a one-shot multiply() never
+        pays the zero-fill)."""
+        p = x.shape[1]
+        x_pad = self._prepare_x(x)
+        if acc is None or acc.shape[2] != p:
+            acc = jnp.zeros((self.n_tile_rows, self.T, p), jnp.float32)
+            if self.device is not None:
+                acc = jax.device_put(acc, self.device)
+        else:
+            acc = _zero_acc(acc)
+        out = self._stream_pass(x_pad, acc)
+        out.block_until_ready()   # only here — never inside the pass
+        result = np.asarray(out.reshape(-1, p)[: self.n_rows])
+        return result, out
 
     # -- regime 3: vertical partitioning ------------------------------------
     def column_bytes(self) -> int:
@@ -140,13 +319,15 @@ class SEMSpMM:
                           cols_in_memory: Optional[int] = None) -> IOStats:
         """A @ X with X on the slow tier: vertical partitioning.  Each slice
         triggers one full streaming pass over the sparse matrix (paper
-        §3.6: passes = ceil(p / p_fit))."""
+        §3.6: passes = ceil(p / p_fit)); the output accumulator is donated
+        back and reused across equal-width slices."""
         p_total = x_store.n_cols
         p_fit = cols_in_memory or self.columns_that_fit(p_total)
+        acc = None
         for c0 in range(0, p_total, p_fit):
             c1 = min(c0 + p_fit, p_total)
-            x_slice = x_store.read_cols(c0, c1)     # slow tier -> memory
-            out_slice = self.multiply(x_slice)       # stream sparse matrix
+            x_slice = x_store.read_cols(c0, c1)      # slow tier -> memory
+            out_slice, acc = self._multiply(x_slice, acc)  # stream A
             out_store.write_cols(c0, out_slice)      # write-once
         out_store.flush()
         return out_store.stats

@@ -61,6 +61,9 @@ def _spmm_chunked_impl(meta, row_l, col_l, vals, x_pad, T: int,
     by its own tile row's chunks (write-once per block in the kernel)."""
     ring = sr.SEMIRINGS[semiring]
     p = x_pad.shape[1]
+    # Accept uint16 local indices (the on-disk SCSR width) — upcast on device.
+    row_l = row_l.astype(jnp.int32)
+    col_l = col_l.astype(jnp.int32)
     x_blocks = x_pad.reshape(-1, T, p)
 
     def step(out, chunk):

@@ -5,9 +5,14 @@ DRAM (or networked blob storage) feeding HBM.  On this container it is a
 file on disk accessed through ``np.memmap``.  The mechanisms reproduced:
 
 * **Sequential streaming** — chunks are laid out in execution order and read
-  in large batches (the paper: "large I/O to access matrices on SSDs").
-* **Buffer pool** — reads land in preallocated, reused buffers; a too-small
-  buffer is resized and kept (paper §3.5, verbatim behavior).
+  in large batches (the paper: "large I/O to access matrices on SSDs")
+  through one persistent ``np.memmap`` per store; the raw read path returns
+  strided uint16 views into the mapping (zero-copy — the SCSR 2-byte index
+  width survives until the device-side decode).
+* **Buffer pool** — :class:`BufferPool` reproduces the paper's §3.5
+  preallocated, reused read buffers (resize a too-small buffer and keep it);
+  the memmap read path itself needs no buffers, so the pool survives as a
+  standalone mechanism (see ``benchmarks/bench_io_opts.py``).
 * **Asynchronous prefetch with polling** — a background reader thread keeps a
   bounded queue of ready batches ahead of compute; the consumer polls the
   queue (the paper's async I/O + I/O polling, emulated with a thread since
@@ -42,6 +47,8 @@ class IOStats:
     cache_hits: int = 0
     cache_hit_bytes: int = 0   # bytes served from the hot-chunk cache
                                # instead of the slow tier
+    h2d_bytes: int = 0         # host->device bytes staged by the engine
+    overlap_batches: int = 0   # batches whose staging overlapped compute
 
     def add_read(self, n: int) -> None:
         self.bytes_read += n
@@ -54,6 +61,20 @@ class IOStats:
     def add_cache_hit(self, n: int) -> None:
         self.cache_hits += 1
         self.cache_hit_bytes += n
+
+    def add_h2d(self, n: int) -> None:
+        self.h2d_bytes += n
+
+    def add_overlap(self, n: int = 1) -> None:
+        self.overlap_batches += n
+
+
+class _ReaderFailure:
+    """Wrapper carrying an exception from the prefetch thread to the
+    consumer (a plain sentinel would be indistinguishable from data)."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
 
 
 class BufferPool:
@@ -86,12 +107,17 @@ class TileStore:
     the 2-byte index width is the SCSR I/O-volume saving carried over).
     """
 
-    def __init__(self, path: str, header: dict):
+    def __init__(self, path: str, header: dict, *, chunk_offset: int = 0,
+                 tile_row_offset: int = 0, row_offset: int = 0):
         self.path = path
         self.header = header
         self.stats = IOStats()
-        self.pool = BufferPool()
         self._mm: Optional[np.memmap] = None
+        # Shard views (see :meth:`partition_rows`) share the backing file but
+        # cover a contiguous chunk range; offsets are 0 for a whole store.
+        self.chunk_offset = chunk_offset
+        self.tile_row_offset = tile_row_offset
+        self.row_offset = row_offset
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -133,79 +159,207 @@ class TileStore:
         return self.header["record"] * self.n_chunks
 
     # -- sequential batched reads --------------------------------------------
-    def read_batch(self, start: int, count: int
-                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """Read ``count`` chunks starting at ``start``; returns
-        (meta (count,4) i32, rows (count,C) i32, cols (count,C) i32,
-        vals (count,C) f32)."""
+    def _memmap(self) -> np.memmap:
+        """Persistent read-only byte map of the backing file (opened once per
+        store, not once per batch)."""
+        if self._mm is None:
+            self._mm = np.memmap(self.path + ".bin", dtype=np.uint8, mode="r")
+        return self._mm
+
+    def read_batch_raw(self, start: int, count: int
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                  Optional[np.ndarray]]:
+        """Zero-copy read of ``count`` chunks starting at ``start``: returns
+        (meta (count,4) i32, rows (count,C) u16 view, cols (count,C) u16 view,
+        vals (count,C) f32 view — or ``None`` for a binary matrix).
+
+        rows/cols/vals are strided views straight into the file mapping — no
+        host-side upcast or repack; the uint16 SCSR index width survives until
+        the device decode.  Only ``meta`` is copied (it is 16 bytes per chunk
+        and shard views rebase its tile-row ids).
+        """
         h = self.header
         C, rec = h["C"], h["record"]
+        mm = self._memmap()
+        off = (self.chunk_offset + start) * rec
         nbytes = rec * count
-        buf = self.pool.get(nbytes)
-        with open(self.path + ".bin", "rb") as f:
-            f.seek(start * rec)
-            n = f.readinto(memoryview(buf)[:nbytes])
-        assert n == nbytes, (n, nbytes)
+        if count:
+            # Touch one byte per page so the disk I/O happens *here* (inside
+            # the prefetch thread under stream()), not lazily at staging
+            # time.  The strided walk can step over the final page when
+            # ``off`` is not page-aligned — touch the last byte explicitly.
+            int(np.add.reduce(mm[off:off + nbytes:4096], dtype=np.int64))
+            int(mm[off + nbytes - 1])
         self.stats.add_read(nbytes)
-        raw = buf[:nbytes].reshape(count, rec)
-        meta = raw[:, :16].copy().view(np.int32).reshape(count, 4)
-        rows = raw[:, 16:16 + 2 * C].copy().view(np.uint16).astype(np.int32)
-        cols = raw[:, 16 + 2 * C:16 + 4 * C].copy().view(np.uint16).astype(np.int32)
-        if h["binary"]:
-            vals = np.ones((count, C), np.float32)
-            # zero out padding lanes
-            lanes = np.arange(C)[None, :]
-            vals[lanes >= meta[:, 3:4]] = 0.0
-        else:
-            vals = raw[:, 16 + 4 * C:].copy().view(np.float32).reshape(count, C)
-        self.pool.put(buf)
+        meta = np.ndarray((count, 4), np.int32, buffer=mm, offset=off,
+                          strides=(rec, 4)).copy()
+        if self.tile_row_offset:
+            meta[:, 0] -= self.tile_row_offset
+        rows = np.ndarray((count, C), np.uint16, buffer=mm, offset=off + 16,
+                          strides=(rec, 2))
+        cols = np.ndarray((count, C), np.uint16, buffer=mm,
+                          offset=off + 16 + 2 * C, strides=(rec, 2))
+        vals = None
+        if not h["binary"]:
+            vals = np.ndarray((count, C), np.float32, buffer=mm,
+                              offset=off + 16 + 4 * C, strides=(rec, 4))
         return meta, rows, cols, vals
 
-    def _fetch(self, start: int, count: int, cache) -> Tuple[np.ndarray, ...]:
+    def read_batch(self, start: int, count: int
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Decoded read: ``count`` chunks from ``start`` as
+        (meta (count,4) i32, rows (count,C) i32, cols (count,C) i32,
+        vals (count,C) f32) — the host-decoded path kept for IM caching and
+        as the engine ablation baseline."""
+        meta, rows16, cols16, vals = self.read_batch_raw(start, count)
+        rows = rows16.astype(np.int32)
+        cols = cols16.astype(np.int32)
+        if vals is None:
+            vals = np.ones((count, self.header["C"]), np.float32)
+            lanes = np.arange(self.header["C"])[None, :]
+            vals[lanes >= meta[:, 3:4]] = 0.0
+        else:
+            vals = np.ascontiguousarray(vals)
+        return meta, rows, cols, vals
+
+    def _fetch(self, start: int, count: int, cache, raw: bool = False
+               ) -> Tuple[np.ndarray, ...]:
         """Cached read path: serve a pinned batch from memory (counted as a
-        cache hit, not slow-tier I/O); on a miss, read and offer the decoded
-        batch for pinning.  ``cache`` is duck-typed (get/offer) so this layer
+        cache hit, not slow-tier I/O); on a miss, read and offer the batch
+        for pinning.  ``cache`` is duck-typed (get/offer) so this layer
         stays independent of the runtime subsystem above it."""
         if cache is None:
-            return self.read_batch(start, count)
-        key = (start, count)
+            return (self.read_batch_raw if raw else self.read_batch)(
+                start, count)
+        # Key in *global* chunk ids so shard views of one store can share a
+        # cache, and tag the format: raw u16 and decoded i32 pins of the
+        # same range are different resident objects.  The tile-row offset is
+        # part of the key because a pinned batch's meta is rebased to the
+        # reader's shard frame — an offset-0 consumer must never be served a
+        # shard-rebased pin (or vice versa).
+        key = (self.chunk_offset + start, count, self.tile_row_offset,
+               "raw" if raw else "i32")
         hit = cache.get(key)
         if hit is not None:
             # hit accounting is in on-disk bytes: the I/O this hit avoided
             self.stats.add_cache_hit(self.header["record"] * count)
             return hit
-        batch = self.read_batch(start, count)
+        batch = (self.read_batch_raw if raw else self.read_batch)(start, count)
+        if raw:
+            # materialize the memmap views before pinning: a pinned view
+            # holds no pages resident, so it would be a fake cache entry
+            batch = tuple(None if a is None else np.ascontiguousarray(a)
+                          for a in batch)
         # charge the cache what the pinned arrays actually occupy resident
-        # (decoded int32/f32 arrays are larger than the on-disk records)
-        cache.offer(key, batch, sum(a.nbytes for a in batch))
+        # (raw u16 pins cost ~half the decoded int32/f32 arrays)
+        cache.offer(key, batch,
+                    sum(a.nbytes for a in batch if a is not None))
         return batch
 
     def stream(self, batch: int, prefetch: int = 2, use_async: bool = True,
-               cache=None
-               ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+               cache=None, raw: bool = False
+               ) -> Iterator[Tuple[np.ndarray, ...]]:
         """Iterate chunk batches in execution order, optionally with an async
-        prefetch thread keeping ``prefetch`` batches ready."""
+        prefetch thread keeping ``prefetch`` batches ready.  ``raw=True``
+        yields uint16 index views (see :meth:`read_batch_raw`).
+
+        Failure propagates both ways: an exception in the prefetch thread is
+        re-raised in the consumer (a failed read must not hang the pipeline
+        waiting for a sentinel that will never arrive), and a consumer that
+        abandons the iterator mid-pass (downstream exception, generator
+        close) releases the reader — it must not stay blocked on the bounded
+        queue forever."""
         starts = list(range(0, self.n_chunks, batch))
         sizes = [min(batch, self.n_chunks - s) for s in starts]
         if not use_async:
             for s, c in zip(starts, sizes):
-                yield self._fetch(s, c, cache)
+                yield self._fetch(s, c, cache, raw)
             return
         q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+
+        def put(item) -> bool:
+            """Bounded put that gives up once the consumer is gone."""
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def reader():
-            for s, c in zip(starts, sizes):
-                q.put(self._fetch(s, c, cache))
-            q.put(None)
+            try:
+                for s, c in zip(starts, sizes):
+                    if not put(self._fetch(s, c, cache, raw)):
+                        return
+            except BaseException as e:  # noqa: BLE001 — forwarded, not eaten
+                put(_ReaderFailure(e))
+                return
+            put(None)
 
         t = threading.Thread(target=reader, daemon=True)
         t.start()
-        while True:
-            item = q.get()  # poll; consumer never blocks long if reader ahead
-            if item is None:
-                break
-            yield item
-        t.join()
+        try:
+            while True:
+                item = q.get()  # poll; consumer rarely waits if reader ahead
+                if item is None:
+                    break
+                if isinstance(item, _ReaderFailure):
+                    raise item.exc
+                yield item
+        finally:
+            stop.set()
+            t.join()
+
+    # -- row sharding ---------------------------------------------------------
+    def partition_rows(self, n_shards: int) -> List["TileStore"]:
+        """Split into ``n_shards`` contiguous tile-row shard stores over the
+        *same* backing file (no data is rewritten).
+
+        Chunks are laid out in (tile_row, tile_col) order and every chunk
+        belongs to exactly one tile row, so a contiguous tile-row range is a
+        contiguous chunk range: each shard streams its own byte range and owns
+        its own stats/buffers (thread-safe parallel scans), and concatenating
+        the shards' row blocks reproduces the single-scan result bit for bit
+        (identical per-row accumulation order).  Ranges are balanced by nnz
+        (greedy contiguous split — the contiguity-constrained analogue of
+        ``core.partition.lpt_partition``)."""
+        h = self.header
+        T, rec = h["T"], h["record"]
+        n_tile_rows = -(-h["n_rows"] // T)
+        n_shards = max(1, min(int(n_shards), n_tile_rows))
+        mm = self._memmap()
+        meta = np.ndarray((self.n_chunks, 4), np.int32, buffer=mm,
+                          offset=self.chunk_offset * rec, strides=(rec, 4))
+        trow = meta[:, 0].astype(np.int64) - self.tile_row_offset
+        row_nnz = np.bincount(trow, weights=meta[:, 3],
+                              minlength=n_tile_rows)
+        cum = np.cumsum(row_nnz)
+        total = float(cum[-1])
+        shards: List[TileStore] = []
+        tr0 = 0
+        for s in range(n_shards):
+            if s == n_shards - 1:
+                tr1 = n_tile_rows
+            else:
+                tr1 = int(np.searchsorted(cum, total * (s + 1) / n_shards)) + 1
+                tr1 = max(tr1, tr0 + 1)
+                tr1 = min(tr1, n_tile_rows - (n_shards - 1 - s))
+            c0 = int(np.searchsorted(trow, tr0, side="left"))
+            c1 = int(np.searchsorted(trow, tr1, side="left"))
+            n_rows_shard = min(tr1 * T, h["n_rows"]) - tr0 * T
+            hdr = dict(h, n_chunks=c1 - c0, n_rows=int(n_rows_shard))
+            # type(self), not TileStore: subclasses that override the read
+            # path (e.g. a throttled bench store) keep their behavior in
+            # their shards.
+            st = type(self)(self.path, hdr,
+                            chunk_offset=self.chunk_offset + c0,
+                            tile_row_offset=self.tile_row_offset + tr0,
+                            row_offset=self.row_offset + tr0 * T)
+            shards.append(st)
+            tr0 = tr1
+        return shards
 
 
 class DenseStore:

@@ -45,24 +45,34 @@ def spmm_pallas(ct: ChunkedTiles, x: jax.Array, variant: str | None = None,
     return out[: ct.n_rows, :p]
 
 
-def spmm_pallas_batch(meta: np.ndarray, rows: np.ndarray, cols: np.ndarray,
-                      vals: np.ndarray, x_pad: jax.Array, out_blocks: jax.Array,
+def spmm_pallas_batch(meta: np.ndarray, rows, cols, vals,
+                      x_pad: jax.Array, out_blocks: jax.Array,
                       T: int, variant: str = "gather") -> jax.Array:
     """SEM-streaming step: apply one chunk batch read from the slow tier and
     accumulate into ``out_blocks`` (n_tile_rows, T, p).
 
     A batch may start mid-tile-row, so first-flags are recomputed within the
-    batch and only tile rows present in the batch are merged back.
+    batch (on the host ``meta`` copy) and only tile rows present in the batch
+    are merged back.  ``rows``/``cols`` may be uint16 (host views or already
+    staged device arrays) — the upcast happens inside :func:`spmm_tiles`;
+    ``vals is None`` denotes a binary matrix, whose lane mask is synthesized
+    on device from the chunk nnz instead of being streamed.
     """
     n_tile_rows, _, p = out_blocks.shape
-    meta = meta.copy()
+    meta = np.asarray(meta).copy()
     meta[0, 2] = 1
     meta[1:, 2] = (meta[1:, 0] != meta[:-1, 0]).astype(meta.dtype)
     present = np.zeros(n_tile_rows, dtype=bool)
     present[meta[:, 0]] = True
 
+    if vals is None:
+        C = rows.shape[1]
+        vals = (jnp.arange(C)[None, :]
+                < jnp.asarray(meta[:, 3:4])).astype(x_pad.dtype)
+    else:
+        vals = jnp.asarray(vals, x_pad.dtype)
     res = spmm_tiles(jnp.asarray(meta), jnp.asarray(rows), jnp.asarray(cols),
-                     jnp.asarray(vals, x_pad.dtype), x_pad, T=T,
+                     vals, x_pad, T=T,
                      n_tile_rows=n_tile_rows, variant=variant)
     res = res.reshape(n_tile_rows, T, p)
     mask = jnp.asarray(present)[:, None, None]

@@ -111,6 +111,11 @@ def spmm_tiles(meta, row_local, col_local, vals, x_pad, *, T: int,
     p padded to the lane width by the caller; returns (n_tile_rows * T, p)."""
     n_chunks, C = row_local.shape
     p = x_pad.shape[1]
+    # Device-side decode: the engine ships the SCSR uint16 indices as-is;
+    # the upcast to the kernels' int32 happens here, on device (jit
+    # specializes per input dtype, so int32 callers compile identically).
+    row_local = row_local.astype(jnp.int32)
+    col_local = col_local.astype(jnp.int32)
     body = (_gather_body if variant == "gather"
             else functools.partial(_mxu_body, T=T))
     return pl.pallas_call(

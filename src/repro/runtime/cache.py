@@ -22,9 +22,14 @@ Duck-typed interface consumed by :meth:`repro.io.storage.TileStore.stream`:
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Optional, Tuple
 
-Key = Tuple[int, int]  # (start_chunk, n_chunks) of a read batch
+# (global_start_chunk, n_chunks, tile_row_offset, format_tag) of a read
+# batch — built in TileStore._fetch.  tile_row_offset is load-bearing: a
+# pinned batch's meta is rebased to the reading shard's frame, so views
+# with different offsets must never share an entry.
+Key = Tuple
 
 
 @dataclasses.dataclass
@@ -50,21 +55,28 @@ class HotChunkCache:
         self._nbytes: Dict[Key, int] = {}      # key -> resident bytes pinned
         self._freq: Dict[Key, int] = {}        # persistent access counts
         self.pinned_bytes = 0
+        # Sharded scans hit one cache from several prefetch threads at once.
+        self._lock = threading.RLock()
 
     # -- read path -----------------------------------------------------------
     def get(self, key: Key):
-        self._freq[key] = self._freq.get(key, 0) + 1
-        batch = self._pinned.get(key)
-        if batch is not None:
-            self.stats.hits += 1
-            self.stats.hit_bytes += self._nbytes[key]
-        else:
-            self.stats.misses += 1
-        return batch
+        with self._lock:
+            self._freq[key] = self._freq.get(key, 0) + 1
+            batch = self._pinned.get(key)
+            if batch is not None:
+                self.stats.hits += 1
+                self.stats.hit_bytes += self._nbytes[key]
+            else:
+                self.stats.misses += 1
+            return batch
 
     def offer(self, key: Key, batch: tuple, nbytes: int) -> bool:
         """Called after a miss was read from the slow tier; pin it if the
         budget allows (evicting strictly colder entries if needed)."""
+        with self._lock:
+            return self._offer(key, batch, nbytes)
+
+    def _offer(self, key: Key, batch: tuple, nbytes: int) -> bool:
         if key in self._pinned or nbytes > self.budget_bytes:
             return False
         if self.pinned_bytes + nbytes > self.budget_bytes:
@@ -96,9 +108,10 @@ class HotChunkCache:
     def set_budget(self, budget_bytes: int) -> None:
         """Resize (the scheduler calls this each pass with the leftover
         budget); evicts coldest-first until pinned bytes fit."""
-        self.budget_bytes = max(0, int(budget_bytes))
-        while self.pinned_bytes > self.budget_bytes:
-            self._evict(self._coldest())
+        with self._lock:
+            self.budget_bytes = max(0, int(budget_bytes))
+            while self.pinned_bytes > self.budget_bytes:
+                self._evict(self._coldest())
 
     def _coldest(self) -> Optional[Key]:
         if not self._pinned:

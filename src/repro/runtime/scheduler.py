@@ -44,9 +44,16 @@ class PassReport:
 
 
 class SharedScanScheduler:
-    """Multi-tenant serving runtime over one shared :class:`SEMSpMM`."""
+    """Multi-tenant serving runtime over one shared :class:`SEMSpMM`.
 
-    def __init__(self, sem: SEMSpMM, *, use_cache: bool = True):
+    ``sharded=N`` (N >= 2) fans every wave's pass out across N row shards of
+    the store (:class:`repro.distributed.shard_scan.ShardedSEMSpMM`):
+    parallel partial scans + a row-block concatenation, bit-identical to the
+    single-scan path.  Admission control and budgets stay on the unsharded
+    executor (the column budget is a property of the whole operator)."""
+
+    def __init__(self, sem: SEMSpMM, *, use_cache: bool = True,
+                 sharded: int = 0):
         self.sem = sem
         self.batcher = Batcher(sem.n_cols)
         self.active: List[Session] = []
@@ -57,7 +64,23 @@ class SharedScanScheduler:
             self.cache = sem.cache if sem.cache is not None else \
                 HotChunkCache(0)
             sem.cache = self.cache
+        self.sharded = None
+        if sharded and sharded >= 2 and sem.mode == "sem":
+            from repro.distributed.shard_scan import ShardedSEMSpMM
+            self.sharded = ShardedSEMSpMM(sem.store, n_shards=sharded,
+                                          config=sem.cfg, cache=self.cache)
         self.reports: List[PassReport] = []
+
+    def close(self) -> None:
+        """Release the sharded executor's scan threads (no-op unsharded)."""
+        if self.sharded is not None:
+            self.sharded.close()
+
+    def __enter__(self) -> "SharedScanScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- submission ----------------------------------------------------------
     def submit(self, session: Session) -> Session:
@@ -93,27 +116,37 @@ class SharedScanScheduler:
             self.cache.set_budget(leftover)
             report.cache_budget = leftover
 
-        stats = self.sem.store.stats
-        r0, h0, p0 = stats.bytes_read, stats.cache_hit_bytes, self.sem.passes
+        r0, h0, p0 = self._counters()
         y = self._scan(wave, col_budget)
         self.batcher.scatter(wave, y)
 
         still_active = [s for s in self.active if not s.done]
         report.retired = len(self.active) - len(still_active)
         self.active = still_active
-        report.scan_passes = self.sem.passes - p0
-        report.bytes_read = stats.bytes_read - r0
-        report.cache_hit_bytes = stats.cache_hit_bytes - h0
+        r1, h1, p1 = self._counters()
+        report.scan_passes = p1 - p0
+        report.bytes_read = r1 - r0
+        report.cache_hit_bytes = h1 - h0
         self.reports.append(report)
         return report
+
+    def _counters(self):
+        """(bytes_read, cache_hit_bytes, passes) of whichever executor the
+        scans run on — shard-aggregated when the pass fans out."""
+        if self.sharded is not None:
+            st = self.sharded.io_stats
+            return st.bytes_read, st.cache_hit_bytes, self.sharded.passes
+        st = self.sem.store.stats
+        return st.bytes_read, st.cache_hit_bytes, self.sem.passes
 
     def _scan(self, wave: Wave, col_budget: int) -> np.ndarray:
         """One shared A @ X.  An oversized lone tenant is served by vertical
         partitioning: slice X to the column budget, one streaming pass per
         slice (paper §3.3 / §3.6: passes = ceil(p / p_fit))."""
+        op = self.sharded if self.sharded is not None else self.sem
         if wave.width <= col_budget:
-            return self.sem.multiply(wave.x)
-        slices = [self.sem.multiply(wave.x[:, c0:c0 + col_budget])
+            return op.multiply(wave.x)
+        slices = [op.multiply(wave.x[:, c0:c0 + col_budget])
                   for c0 in range(0, wave.width, col_budget)]
         return np.concatenate(slices, axis=1)
 

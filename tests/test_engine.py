@@ -1,0 +1,267 @@
+"""The overlapped streaming engine: zero-copy uint16 reads, device-side
+decode, overlapped staging, fixed-shape tail batches, sharded parallel
+scans — all bit-exact against the ``spmm_chunked`` oracle — plus the
+reader-thread failure path and the h2d/overlap accounting."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.formats import to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.core.spmm import spmm_chunked
+from repro.distributed.shard_scan import ShardedSEMSpMM
+from repro.io.storage import DenseStore, TileStore
+from repro.runtime import SharedScanScheduler
+
+C = 128
+T = 512
+BATCH = 53  # does not divide the chunk count -> the tail batch is padded
+
+
+@pytest.fixture(scope="module")
+def ct(small_valued):
+    return to_chunked(small_valued, T=T, C=C)
+
+
+@pytest.fixture(scope="module")
+def ct_bin(small_graph):
+    return to_chunked(small_graph, T=T, C=C)
+
+
+@pytest.fixture(scope="module")
+def valued_path(ct, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("engine") / "val")
+    TileStore.write(path, ct)
+    return path
+
+
+@pytest.fixture(scope="module")
+def binary_path(ct_bin, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("engine") / "bin")
+    TileStore.write(path, ct_bin, binary=True)
+    return path
+
+
+@pytest.fixture(scope="module")
+def x8(small_valued):
+    rng = np.random.default_rng(3)
+    return rng.standard_normal((small_valued.n_cols, 8)).astype(np.float32)
+
+
+def fresh(path, **cfg):
+    return SEMSpMM(TileStore.open(path), SEMConfig(chunk_batch=BATCH, **cfg))
+
+
+# -- bit-exactness -----------------------------------------------------------
+def test_overlapped_engine_bit_exact_valued(ct, valued_path, x8):
+    """Raw u16 + device decode + overlap + padded tail == the oracle, bit
+    for bit (same per-element accumulation order)."""
+    oracle = np.asarray(spmm_chunked(ct, jnp.asarray(x8)))
+    y = fresh(valued_path).multiply(x8)
+    np.testing.assert_array_equal(y, oracle)
+
+
+def test_overlapped_engine_bit_exact_binary(ct_bin, binary_path, x8):
+    """Binary store: values are synthesized on device, none streamed."""
+    oracle = np.asarray(spmm_chunked(ct_bin, jnp.asarray(x8)))
+    y = fresh(binary_path).multiply(x8)
+    np.testing.assert_array_equal(y, oracle)
+
+
+def test_engine_matches_serial_baseline(valued_path, x8):
+    """The pipelined engine and the fully-serial decoded path agree bit for
+    bit across every ablation axis."""
+    serial = fresh(valued_path, decode_on_device=False, overlap=False,
+                   fixed_shape=False, use_async=False).multiply(x8)
+    for kw in (dict(),                      # everything on
+               dict(overlap=False),
+               dict(fixed_shape=False),
+               dict(decode_on_device=False)):
+        np.testing.assert_array_equal(fresh(valued_path, **kw).multiply(x8),
+                                      serial)
+
+
+def test_padded_tail_batch_compiles_once(valued_path, x8):
+    """Fixed-shape batches: the tail is padded to chunk_batch, so one pass
+    adds at most one (C, T, p) jit entry; without padding the tail shape
+    adds a second."""
+    from repro.core import sem as sem_mod
+    x5 = x8[:, :5]  # a p no other test uses -> fresh jit-cache shapes
+    sem = fresh(valued_path)
+    assert sem.store.n_chunks % BATCH != 0  # the premise: a short tail
+    before = sem_mod._batch_step._cache_size()
+    sem.multiply(x5)
+    assert sem_mod._batch_step._cache_size() - before == 1
+    fresh(valued_path).multiply(x5)  # second pass: no new entries
+    assert sem_mod._batch_step._cache_size() - before == 1
+    fresh(valued_path, fixed_shape=False).multiply(x5)  # tail shape compiles
+    assert sem_mod._batch_step._cache_size() - before == 2
+
+
+def test_prepadded_x_skips_rebuild(ct, valued_path, x8):
+    """An already-padded float32 operand is staged as-is (the sharded path
+    relies on this to pad once for all shards)."""
+    oracle = np.asarray(spmm_chunked(ct, jnp.asarray(x8)))
+    x_pad = np.zeros((ct.padded_cols, x8.shape[1]), np.float32)
+    x_pad[: x8.shape[0]] = x8
+    np.testing.assert_array_equal(fresh(valued_path).multiply(x_pad), oracle)
+
+
+def test_vertical_slices_reuse_accumulator(valued_path, small_valued, x8,
+                                           tmp_path):
+    """multiply_external's donated accumulator reuse is invisible in the
+    results and the write-once discipline."""
+    xs = DenseStore(str(tmp_path / "x.f32"), x8.shape[0], x8.shape[1])
+    xs.write_cols(0, x8)
+    out = DenseStore(str(tmp_path / "o.f32"), small_valued.n_rows, x8.shape[1])
+    sem = fresh(valued_path)
+    sem.multiply_external(xs, out, cols_in_memory=3)  # 8 cols -> 3+3+2 slices
+    ref = small_valued.to_dense(np.float64) @ x8.astype(np.float64)
+    np.testing.assert_allclose(out.to_array(), ref, atol=2e-4)
+    assert out.stats.bytes_written == ref.size * 4
+    assert sem.passes == 3
+
+
+# -- reader-thread failure propagation ---------------------------------------
+def test_reader_exception_propagates(valued_path):
+    """A failed read inside the prefetch thread re-raises in the consumer
+    instead of hanging it on a sentinel that never arrives."""
+    store = TileStore.open(valued_path)
+    calls = {"n": 0}
+    real = store.read_batch_raw
+
+    def flaky(start, count):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise OSError("injected read failure")
+        return real(start, count)
+
+    store.read_batch_raw = flaky
+    consumed = 0
+    with pytest.raises(OSError, match="injected read failure"):
+        for _ in store.stream(BATCH, use_async=True, raw=True):
+            consumed += 1
+    assert consumed == 1  # first batch delivered, failure surfaced after
+
+
+def test_reader_exception_propagates_through_multiply(valued_path, x8):
+    sem = fresh(valued_path)
+
+    def boom(start, count):
+        raise OSError("disk died")
+
+    sem.store.read_batch_raw = boom
+    with pytest.raises(OSError, match="disk died"):
+        sem.multiply(x8)
+
+
+def test_abandoned_stream_releases_reader(valued_path):
+    """The reverse failure direction: a consumer that abandons the iterator
+    mid-pass must not leave the prefetch thread blocked forever on the
+    bounded queue."""
+    import threading
+    store = TileStore.open(valued_path)
+    n0 = threading.active_count()
+    it = store.stream(1, prefetch=1, use_async=True, raw=True)
+    next(it)   # reader is now ahead, blocked on the full queue
+    it.close()  # generator finally joins the reader; must not hang
+    assert threading.active_count() == n0
+
+
+# -- IOStats accounting -------------------------------------------------------
+def test_h2d_index_bytes_halved(valued_path, x8):
+    """Device-side decode ships uint16 indices: exactly 2*2 bytes per lane
+    saved vs the decoded int32 path, everything else equal."""
+    u16 = fresh(valued_path)
+    u16.multiply(x8)
+    i32 = fresh(valued_path, decode_on_device=False)
+    i32.multiply(x8)
+    n_chunks = -(-u16.store.n_chunks // BATCH) * BATCH  # incl. tail padding
+    saved = i32.store.stats.h2d_bytes - u16.store.stats.h2d_bytes
+    assert saved == 4 * C * n_chunks      # index traffic exactly halved
+    assert u16.store.stats.bytes_read == u16.store.nbytes  # same disk bytes
+
+
+def test_h2d_binary_ships_no_values(binary_path, x8):
+    """Binary matrices stage meta + u16 indices only: the value plane is
+    synthesized on device."""
+    sem = fresh(binary_path)
+    sem.multiply(x8)
+    n_chunks = -(-sem.store.n_chunks // BATCH) * BATCH
+    x_pad_bytes = 4 * sem.padded_cols * x8.shape[1]
+    expected = x_pad_bytes + n_chunks * (16 + 4 * C)  # meta + rows + cols
+    assert sem.store.stats.h2d_bytes == expected
+
+
+def test_overlap_batches_counted(valued_path, x8):
+    """Every batch after the first overlaps its staging with the in-flight
+    step; the serial path records none."""
+    sem = fresh(valued_path)
+    sem.multiply(x8)
+    n_batches = -(-sem.store.n_chunks // BATCH)
+    assert sem.store.stats.overlap_batches == n_batches - 1
+    serial = fresh(valued_path, overlap=False)
+    serial.multiply(x8)
+    assert serial.store.stats.overlap_batches == 0
+
+
+# -- sharded parallel scans ---------------------------------------------------
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_scan_bit_identical(valued_path, x8, n_shards):
+    single = fresh(valued_path).multiply(x8)
+    with ShardedSEMSpMM(TileStore.open(valued_path), n_shards=n_shards,
+                        config=SEMConfig(chunk_batch=BATCH)) as sh:
+        np.testing.assert_array_equal(sh.multiply(x8), single)
+        # each shard streamed its own disjoint byte range, exactly once
+        assert sh.io_stats.bytes_read == sh.store.nbytes
+
+
+def test_sharded_scan_binary_bit_identical(binary_path, x8):
+    single = fresh(binary_path).multiply(x8)
+    with ShardedSEMSpMM(TileStore.open(binary_path), n_shards=4,
+                        config=SEMConfig(chunk_batch=BATCH)) as sh:
+        np.testing.assert_array_equal(sh.multiply(x8), single)
+
+
+def test_partition_rows_covers_store(valued_path):
+    st = TileStore.open(valued_path)
+    shards = st.partition_rows(4)
+    assert sum(s.n_chunks for s in shards) == st.n_chunks
+    assert sum(s.header["n_rows"] for s in shards) == st.header["n_rows"]
+    offs = [s.chunk_offset for s in shards]
+    assert offs == sorted(offs) and offs[0] == 0
+    for s in shards:  # every shard's meta is rebased to its own block space
+        meta, *_ = s.read_batch_raw(0, s.n_chunks)
+        assert meta[:, 0].min() >= 0
+        assert meta[:, 0].max() < -(-s.header["n_rows"] // s.header["T"])
+
+
+def test_shared_cache_shard_and_whole_store(valued_path, x8):
+    """One HotChunkCache serving both shard views and the whole store: a
+    shard pins meta rebased to its own frame, so its keys must never hit an
+    offset-0 reader's lookups (chunk_batch=1 makes every global chunk id a
+    batch start in both views)."""
+    from repro.runtime.cache import HotChunkCache
+    cache = HotChunkCache(1 << 30)
+    cfg = SEMConfig(chunk_batch=1)
+    store = TileStore.open(valued_path)
+    with ShardedSEMSpMM(store, n_shards=2, config=cfg, cache=cache) as sh:
+        expect = sh.multiply(x8)  # populates shard-frame pins
+        sem = SEMSpMM(TileStore.open(valued_path), cfg, cache=cache)
+        np.testing.assert_array_equal(sem.multiply(x8), expect)
+        # and the other direction: whole-store pins must not corrupt shards
+        np.testing.assert_array_equal(sh.multiply(x8), expect)
+
+
+def test_scheduler_sharded_wave(valued_path, x8):
+    """A serving wave fans out across shards and returns the same columns
+    as the dedicated single-scan multiply."""
+    single = fresh(valued_path).multiply(x8)
+    sem = fresh(valued_path)
+    with SharedScanScheduler(sem, sharded=4) as sched:
+        reqs = [sched.query(x8[:, i], tenant_id=str(i)) for i in range(8)]
+        reports = sched.run()
+        assert sum(r.scan_passes for r in reports) >= 1
+        assert sum(r.bytes_read for r in reports) > 0
+        for i, r in enumerate(reqs):
+            np.testing.assert_array_equal(r.result, single[:, i])
