@@ -14,10 +14,16 @@ measured compute time of one pass — the paper's regime, where stream time
 The no-throttle wall-times are reported alongside, unasserted.
 
 Asserted claims:
-* overlapped engine >= 1.3x the serial path on the emulated SSD;
+* overlapped engine >= 1.3x the serial path on the emulated SSD (>= 1.2 in
+  quick mode, where the pass is only a handful of batches);
 * host->device *index* bytes exactly halved by the device-side uint16
   decode (IOStats.h2d_bytes delta == 4 bytes/lane * lanes streamed);
 * 4-way sharded scans are bit-identical to the single-scan pass.
+
+``REPRO_BENCH_QUICK=1`` (set by ``benchmarks.run --quick``) shrinks the
+graph and batch sizes to a seconds-long run — the CI regression gate's
+mode.  Quick numbers are only comparable to quick numbers; the gate keeps
+full and quick trajectories separate (see ``benchmarks/check_regression``).
 """
 from __future__ import annotations
 
@@ -34,12 +40,16 @@ from repro.distributed.shard_scan import ShardedSEMSpMM
 from repro.io.storage import TileStore
 from repro.sparse.generate import rmat
 
-from benchmarks.common import run_and_save, timeit
+from benchmarks.common import quick_mode, run_and_save, timeit
 
+QUICK = quick_mode()
 P = 8
-C = 1024
-T = 4096
-BATCH = 192   # does not divide the chunk count -> exercises the padded tail
+if QUICK:   # tiny emulated-SSD sizes: seconds, not minutes
+    SCALE, NNZ_MIN, C, T, BATCH, MIN_SPEEDUP = 14, 200_000, 512, 2048, 64, 1.2
+else:
+    SCALE, NNZ_MIN, C, T, BATCH, MIN_SPEEDUP = 17, 1_000_000, 1024, 4096, \
+        192, 1.3
+# BATCH does not divide the chunk count -> exercises the padded tail
 
 SERIAL = dict(decode_on_device=False, overlap=False, fixed_shape=False,
               use_async=False)
@@ -79,8 +89,8 @@ def _pass_time(sem, x: np.ndarray) -> float:
 
 
 def bench() -> List[Dict]:
-    g = rmat(17, 16, seed=5)           # 131k vertices, ~1.9M nnz (>= 1M)
-    assert g.nnz >= 1_000_000
+    g = rmat(SCALE, 16, seed=5)        # full: 131k vertices, ~1.9M nnz
+    assert g.nnz >= NNZ_MIN
     ct = to_chunked(g.with_values(
         np.random.default_rng(0).standard_normal(g.nnz).astype(np.float32)),
         T=T, C=C)
@@ -134,7 +144,8 @@ def bench() -> List[Dict]:
     # -- asserted claims -----------------------------------------------------
     speedup = (results[("emulated-ssd", "serial")]["t"]
                / results[("emulated-ssd", "overlapped")]["t"])
-    assert speedup >= 1.3, f"overlap speedup {speedup:.2f} < 1.3"
+    assert speedup >= MIN_SPEEDUP, \
+        f"overlap speedup {speedup:.2f} < {MIN_SPEEDUP}"
 
     # index traffic halved: re-run one decoded pass on the page-cache tier
     st_i32 = TileStore.open(path)

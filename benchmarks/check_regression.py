@@ -1,0 +1,93 @@
+"""Benchmark regression gate: fail CI when the streaming engine loses the
+wins the trajectory file records.
+
+  PYTHONPATH=src python benchmarks/check_regression.py FRESH.json \\
+      [BASELINE.json] [--mode quick] [--tolerance 0.2]
+
+Compares a fresh ``benchmarks.run --json`` summary against the committed
+``BENCH_engine.json`` and exits nonzero when, beyond ``--tolerance``
+(default 20%):
+
+* the emulated-SSD overlap speedup drops (the engine stopped hiding the
+  stream behind compute), or
+* any engine variant's host->device bytes per pass grow (a decode/staging
+  win regressed — e.g. the uint16 device decode fell back to int32).
+
+Comparisons are mode-matched (``full`` vs ``full``, ``quick`` vs
+``quick``): quick-mode sizes are different, so cross-mode deltas are
+meaningless.  A baseline missing the requested mode is an error — commit a
+baseline for the mode CI runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def _load_mode(path: str, mode: str) -> Dict:
+    with open(path) as f:
+        data = json.load(f)
+    if "full" not in data and "quick" not in data:
+        data = {"full": data}  # legacy flat schema == a full-size run
+    if mode not in data:
+        raise SystemExit(f"{path} has no '{mode}' summary "
+                         f"(found: {sorted(data)})")
+    return data[mode]
+
+
+def compare(fresh: Dict, baseline: Dict, tolerance: float) -> List[str]:
+    """Regression messages (empty == gate passes)."""
+    problems: List[str] = []
+
+    speed_f = fresh["overlap_speedup_emulated"]
+    speed_b = baseline["overlap_speedup_emulated"]
+    if speed_f < speed_b * (1.0 - tolerance):
+        problems.append(
+            f"overlap speedup regressed: {speed_f:.3f} vs baseline "
+            f"{speed_b:.3f} (floor {speed_b * (1 - tolerance):.3f})")
+
+    base_h2d = {(e["tier"], e["engine"]): e["h2d_mb_per_pass"]
+                for e in baseline["engines"]}
+    for e in fresh["engines"]:
+        key = (e["tier"], e["engine"])
+        if key not in base_h2d:
+            continue  # a new engine variant has no trajectory yet
+        ceiling = base_h2d[key] * (1.0 + tolerance)
+        if e["h2d_mb_per_pass"] > ceiling:
+            problems.append(
+                f"h2d bytes/pass regressed for {key[0]}/{key[1]}: "
+                f"{e['h2d_mb_per_pass']:.3f} MB vs baseline "
+                f"{base_h2d[key]:.3f} MB (ceiling {ceiling:.3f})")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="BENCH_engine.json from this run")
+    ap.add_argument("baseline", nargs="?", default="BENCH_engine.json",
+                    help="committed trajectory (default: BENCH_engine.json)")
+    ap.add_argument("--mode", default="quick", choices=("full", "quick"),
+                    help="which trajectory to compare (default: quick, "
+                         "what CI runs)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional regression (default 0.2)")
+    args = ap.parse_args(argv)
+
+    fresh = _load_mode(args.fresh, args.mode)
+    baseline = _load_mode(args.baseline, args.mode)
+    problems = compare(fresh, baseline, args.tolerance)
+    if problems:
+        for p in problems:
+            print(f"[regression] {p}")
+        return 1
+    print(f"[regression] gate passed ({args.mode}: overlap speedup "
+          f"{fresh['overlap_speedup_emulated']:.2f}x, "
+          f"{len(fresh['engines'])} engine rows within "
+          f"{args.tolerance:.0%} of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,13 @@ RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "results", "bench")
 
 
+def quick_mode() -> bool:
+    """True when the run is in CI quick mode (``benchmarks.run --quick``
+    exports ``REPRO_BENCH_QUICK=1``): benches shrink to emulated-SSD sizes
+    that finish in seconds and tag their output accordingly."""
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
 def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
     """Median wall seconds."""
     for _ in range(warmup):

@@ -1,6 +1,7 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig5,fig12] [--json]
+                                          [--quick] [--json-out PATH]
 
 Writes results/bench/<name>.json per bench and prints CSVs.  Asserts inside
 each bench validate the paper's claims (byte formulas, balance bounds,
@@ -8,7 +9,15 @@ convergence) — a failed claim fails the run.
 
 ``--json`` additionally writes repo-root ``BENCH_engine.json`` — the
 machine-readable perf trajectory of the streaming engine (rows/s, bytes
-streamed, overlap %, pass counts per engine variant) tracked across PRs."""
+streamed, overlap %, pass counts per engine variant) tracked across PRs.
+The file holds one summary per mode (``full`` and ``quick``); a run
+updates its own mode's block and leaves the other untouched.
+
+``--quick`` exports ``REPRO_BENCH_QUICK=1`` before the benches import:
+emulated-SSD sizes shrink to a seconds-long run (the CI regression gate's
+mode — see ``benchmarks/check_regression.py``).  ``--json-out`` redirects
+the summary (CI writes a scratch file and diffs it against the committed
+trajectory instead of overwriting it)."""
 from __future__ import annotations
 
 import argparse
@@ -35,9 +44,10 @@ BENCHES = [
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def write_engine_json(rows) -> str:
-    """Distill the engine ablation into repo-root BENCH_engine.json (the
-    cross-PR perf trajectory file)."""
+def write_engine_json(rows, out_path=None, quick=False) -> str:
+    """Distill the engine ablation into BENCH_engine.json (the cross-PR perf
+    trajectory file), under the running mode's key — a quick run never
+    clobbers the full-size trajectory and vice versa."""
     summary = {
         "p": rows[0]["p"],
         "engines": [
@@ -48,9 +58,16 @@ def write_engine_json(rows) -> str:
         "overlap_speedup_emulated": rows[0]["overlap_speedup_emulated"],
         "h2d_index_saving_mb": rows[0]["h2d_index_saving_mb"],
     }
-    path = os.path.join(REPO_ROOT, "BENCH_engine.json")
+    path = out_path or os.path.join(REPO_ROOT, "BENCH_engine.json")
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+        if "full" not in merged and "quick" not in merged:
+            merged = {"full": merged}  # legacy flat schema
+    merged["quick" if quick else "full"] = summary
     with open(path, "w") as f:
-        json.dump(summary, f, indent=1)
+        json.dump(merged, f, indent=1)
     return path
 
 
@@ -59,9 +76,16 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma list of name prefixes to run")
     ap.add_argument("--json", action="store_true",
-                    help="also write repo-root BENCH_engine.json")
+                    help="also write the BENCH_engine.json summary")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="where --json writes (default: repo-root "
+                         "BENCH_engine.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny emulated-SSD sizes (seconds; the CI gate)")
     args = ap.parse_args(argv)
     prefixes = args.only.split(",") if args.only else None
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
 
     failures = []
     for name, module in BENCHES:
@@ -72,7 +96,8 @@ def main(argv=None) -> int:
             mod = __import__(module, fromlist=["main"])
             rows = mod.main()
             if args.json and name == "engine" and rows:
-                print(f"[bench] wrote {write_engine_json(rows)}")
+                out = write_engine_json(rows, args.json_out, args.quick)
+                print(f"[bench] wrote {out}")
             print(f"[bench] {name}: ok ({time.time() - t0:.1f}s)\n")
         except Exception as e:  # noqa: BLE001
             import traceback

@@ -1,33 +1,42 @@
-"""Example: multi-tenant graph-query serving over one on-"SSD" graph.
+"""Example: elastic multi-tenant graph-query serving over replicated
+on-"SSD" copies of one graph.
 
   PYTHONPATH=src python examples/serve_graph.py [--scale 12] [--tenants 6]
+                                                [--replicas 2]
 
 Usage note: the serving runtime turns the paper's Fig-5 crossover into a
-scheduler.  Build the sparse operator once (``TileStore.write``), wrap it in
-one ``SEMSpMM``, and hand that to ``SharedScanScheduler``.  Then submit any
-mix of tenants — one-shot ``scheduler.query(x)`` multiplies, iterative
-``PageRankSession`` / ``PowerIterationSession`` / ``LabelPropagationSession``
-workloads — and call ``scheduler.run()``.  Every pass streams the sparse
-matrix ONCE for the whole wave: N concurrent queries cost
-``ceil(cols / columns_that_fit)`` passes, not N.  Leftover memory budget is
-spent pinning hot chunk batches, so a draining workload converges toward
-in-memory performance (watch ``cache_hit_bytes`` climb as tenants retire).
+scheduler.  Build the sparse operator once (``TileStore.write``), copy it
+to one path per spindle/NUMA node, wrap the copies in a ``ReplicaSet``
+(waves are routed to the healthiest, fastest copy; a failed copy is routed
+around), and hand that to ``SharedScanScheduler(elastic=True)``.  Then
+submit any mix of tenants — one-shot ``scheduler.query(x)`` multiplies,
+iterative ``PageRankSession`` / ``PowerIterationSession`` /
+``LabelPropagationSession`` workloads — and call ``scheduler.run()``.
+Every pass streams the sparse matrix ONCE for the whole wave, and elastic
+mode admits late arrivals at chunk-batch boundaries *inside* a running
+pass: a request that shows up mid-pass starts accumulating tile rows
+immediately and is delivered from a stitched partial pass roughly half a
+pass earlier than between-pass admission — with bit-identical results.
+Leftover memory budget still pins hot chunk batches.
 
-Tenants here all ride the PageRank operator P = A^T D^{-1}; point label
-propagation at a store built from ``repro.apps.labelprop.build_operator``
-when you need the symmetric-normalized adjacency instead.
+This demo drips one-shot queries in mid-pass (via the scheduler's boundary
+probe, so the run is deterministic) and prints each pass's mid-pass
+admissions/completions plus every late query's time-to-first-result in
+chunk-batch boundaries.
 """
 import argparse
 import os
+import shutil
 import tempfile
 
 import numpy as np
 
 from repro.apps.pagerank import build_operator, pagerank_session
 from repro.core.formats import to_chunked
-from repro.core.sem import SEMConfig, SEMSpMM
+from repro.core.sem import SEMConfig
 from repro.io.storage import TileStore
-from repro.runtime import PowerIterationSession, SharedScanScheduler
+from repro.runtime import (PowerIterationSession, ReplicaSet,
+                           SharedScanScheduler)
 from repro.sparse.generate import rmat
 
 
@@ -35,49 +44,82 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--tenants", type=int, default=6)
+    ap.add_argument("--replicas", type=int, default=2)
     args = ap.parse_args()
 
     adj = rmat(args.scale, 16, seed=1)
     print(f"graph: {adj.n_rows} vertices, {adj.nnz} edges")
     ct = to_chunked(build_operator(adj), T=1024, C=256)
-    path = os.path.join(tempfile.mkdtemp(prefix="serve_graph_"), "g")
+    root = tempfile.mkdtemp(prefix="serve_graph_")
+    path = os.path.join(root, "replica0")
     store = TileStore.write(path, ct)
-    print(f"operator on slow tier: {store.nbytes / 1e6:.1f} MB")
+    paths = [path]
+    for i in range(1, max(1, args.replicas)):
+        p = os.path.join(root, f"replica{i}")
+        shutil.copy(path + ".bin", p + ".bin")
+        shutil.copy(path + ".json", p + ".json")
+        paths.append(p)
+    print(f"operator on slow tier: {store.nbytes / 1e6:.1f} MB "
+          f"x {len(paths)} replica(s)")
 
-    sem = SEMSpMM(store, SEMConfig(memory_budget_bytes=256 << 20,
-                                   chunk_batch=128))
-    sched = SharedScanScheduler(sem)
+    # small chunk batches -> many boundaries per pass: more mid-pass
+    # admission points for the demo's late arrivals
+    replicas = ReplicaSet(TileStore.open_replicas(paths),
+                          SEMConfig(memory_budget_bytes=256 << 20,
+                                    chunk_batch=32))
 
+    # Drip 4 late one-shot queries in mid-pass, 9 boundaries apart.
     rng = np.random.default_rng(0)
     n = adj.n_rows
+    late = {"queries": [], "xs": [rng.standard_normal(n).astype(np.float32)
+                                  for _ in range(4)]}
+
+    def drip(sched, boundary):
+        i = len(late["queries"])
+        if i < len(late["xs"]) and sched.boundary_clock >= 9 * (i + 1):
+            late["queries"].append(
+                sched.query(late["xs"][i], tenant_id=f"late-{i}"))
+
+    sched = SharedScanScheduler(replicas, elastic=True, reserve_cols=2,
+                                boundary_probe=drip)
     tenants = [sched.submit(pagerank_session(
         adj, max_iter=10 + 3 * i, tenant_id=f"pagerank-{i}"))
         for i in range(args.tenants)]
     tenants.append(sched.submit(PowerIterationSession(
         rng.standard_normal(n).astype(np.float32), max_iter=25,
         tenant_id="spectral")))
-    oneshots = [sched.query(rng.standard_normal(n).astype(np.float32),
-                            tenant_id=f"query-{i}") for i in range(4)]
 
-    read0 = store.stats.bytes_read
+    read0 = replicas.io_stats.bytes_read
     for i, rep in enumerate(sched.run(), 1):
-        print(f"pass {i:3d}: cols={rep.wave_cols:3d} "
+        print(f"pass {i:3d}: cols={rep.wave_cols:3d}/{rep.capacity} "
               f"tenants={rep.tenants} retired={rep.retired} "
+              f"mid-pass +{rep.admitted_midpass}/-{rep.completed_midpass} "
               f"read={rep.bytes_read / 1e6:7.2f}MB "
               f"cache_hit={rep.cache_hit_bytes / 1e6:7.2f}MB")
 
-    total = store.stats.bytes_read - read0
-    served = sum(t.iterations for t in tenants) + len(oneshots)
+    n_batches = replicas.n_batches
+    print("\nlate arrivals (admitted inside a running pass):")
+    for q in late["queries"]:
+        waited = q.first_result_clock - q.submit_clock
+        print(f"  {q.tenant_id}: result after {waited} boundaries "
+              f"= {waited / n_batches:.2f} passes "
+              f"({(q.t_first_result - q.t_submit) * 1e3:.0f} ms)")
+
+    total = replicas.io_stats.bytes_read - read0
+    served = sum(t.iterations for t in tenants) + len(late["queries"])
     naive = served * store.nbytes
     print(f"\nserved {len(tenants)} iterative tenants "
           f"({sum(t.iterations for t in tenants)} operator applications) "
-          f"+ {len(oneshots)} one-shot queries")
+          f"+ {len(late['queries'])} mid-pass one-shot queries")
     print(f"slow-tier reads: {total / 1e6:.1f} MB "
           f"(naive per-request serving: {naive / 1e6:.1f} MB, "
           f"amortization {naive / max(1, total):.1f}x)")
     if sched.cache is not None:
-        print(f"hot-chunk cache: hit rate {sched.cache.stats.hit_rate:.0%}, "
-              f"pinned {sched.cache.pinned_bytes / 1e6:.1f} MB")
+        print(f"hot-chunk cache: hit rate {sched.cache.stats.hit_rate:.0%}")
+    for st in replicas.router.states:
+        print(f"replica {st.replica_id}: {st.scans} scans, "
+              f"{st.ewma_bps / 1e6:.0f} MB/s, "
+              f"{'healthy' if st.healthy else 'DOWN'}")
     return 0
 
 

@@ -48,7 +48,6 @@ def main():
     print(f"restarted at step {t2.step} "
           f"(data stream at batch {t2.data.next_index}) — resuming")
     last = t2.run(args.steps - t2.step)
-    first_loss = t2.metrics_log[0]["loss"] if t2.metrics_log else mid_loss
     print(f"done: step {t2.step}, loss={last['loss']:.4f} "
           f"(grad_norm={last['grad_norm']:.3f}, lr={last['lr']:.2e})")
     shutil.rmtree(ckpt_dir, ignore_errors=True)

@@ -14,7 +14,7 @@ each slice triggers its own streaming pass (regime 3 of the SEM executor).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -245,7 +245,6 @@ def from_coo_tiled(m: COO, t: int = 16384) -> TiledSCSR:
     # ---- build the byte-exact uint16 payload ------------------------------
     # Section sizes: SCSR = header + cols per multi-row; COO = 2 u16 per single.
     # Entry order inside a tile: all multi-rows (ascending), then singles.
-    scsr_units = nnr_multi + np.zeros_like(nnr_multi)
     # units per tile: sum over multi rows of (1 + len) + 2 * singles
     multi_len_per_tile = np.bincount(run_tile, weights=run_len * multi,
                                      minlength=n_tiles).astype(np.int64)
@@ -302,7 +301,6 @@ def decode_payload(ts: TiledSCSR) -> Tuple[np.ndarray, np.ndarray]:
     order (vectorized)."""
     pay = ts.payload
     is_header = (pay & ROW_FLAG) != 0
-    n_tiles = ts.tile_info.tile_ids.shape[0]
     unit_tile = np.searchsorted(ts.tile_offsets[1:], np.arange(pay.shape[0]),
                                 side="right")
     # SCSR section: header u16s start rows; column u16s inherit the latest header.
@@ -310,8 +308,6 @@ def decode_payload(ts: TiledSCSR) -> Tuple[np.ndarray, np.ndarray]:
                          + _multi_len(ts))
     in_scsr = np.arange(pay.shape[0]) < multi_section_end[unit_tile]
 
-    rows_out = []
-    cols_out = []
     # SCSR entries: propagate last header index
     hdr_idx = np.where(is_header & in_scsr, np.arange(pay.shape[0]), -1)
     np.maximum.accumulate(hdr_idx, out=hdr_idx)

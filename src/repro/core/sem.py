@@ -35,6 +35,14 @@ carried through every stage, not just the disk read):
 * **fixed-shape batches** — the tail batch is padded to ``chunk_batch``
   with zero-nnz chunks so each jitted step compiles exactly once per
   (C, T, p).
+
+The pass is *elastic*: ``multiply(x, boundary_hook=...)`` invokes the hook
+at every chunk-batch boundary with a :class:`PassBoundary` through which a
+caller may rewrite operand columns mid-pass (shape-preserving, so the jit
+entry is reused) and read the accumulator's completed tile-row prefix.
+The serving scheduler builds mid-pass tenant admission on exactly this:
+a newcomer's columns join the staged X at a boundary, and the tile rows
+streamed after that boundary accumulate its partial first result.
 """
 from __future__ import annotations
 
@@ -46,7 +54,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import ChunkedTiles
 from repro.io.storage import DenseStore, IOStats, TileStore
 
 
@@ -102,6 +109,54 @@ def _batch_step_binary(meta, row_l, col_l, x_pad, out_blocks, T: int):
 
     out_blocks, _ = jax.lax.scan(step, out_blocks, (meta, row_l, col_l))
     return out_blocks
+
+
+class PassBoundary:
+    """Mid-pass control point handed to ``boundary_hook`` before each chunk
+    batch is dispatched.
+
+    ``chunk_start`` is the index of the first chunk of the *next* batch, in
+    this executor's chunk space; every chunk below it has already been
+    dispatched against the operand columns staged at the time.  Chunks are
+    laid out in (tile_row, tile_col) order, so chunks ``< chunk_start``
+    touch only tile rows below the first row that starts at or after the
+    boundary — which is what makes column rewrites here composable: a
+    column written at this boundary receives bit-exact contributions for
+    every tile row whose chunks all lie at or after ``chunk_start``.
+    """
+
+    def __init__(self, sem: "SEMSpMM", chunk_start: int, x_pad: jax.Array,
+                 out: jax.Array):
+        self.sem = sem
+        self.chunk_start = chunk_start
+        self.x_pad = x_pad
+        self.out = out
+
+    def write_columns(self, c0: int, cols: np.ndarray) -> None:
+        """Replace operand columns ``[c0, c0+w)`` from this batch onward.
+        Shape- and dtype-preserving, so subsequent steps hit the same jit
+        entry the pass started with."""
+        cols = np.asarray(cols, np.float32)
+        if cols.ndim == 1:
+            cols = cols[:, None]
+        pad = self.sem.padded_cols
+        if cols.shape[0] != pad:
+            full = np.zeros((pad, cols.shape[1]), np.float32)
+            full[: cols.shape[0]] = cols
+            cols = full
+        dev = jax.device_put(jnp.asarray(cols), self.sem.device)
+        self.sem.store.stats.add_h2d(dev.nbytes)
+        self.x_pad = self.x_pad.at[:, c0:c0 + cols.shape[1]].set(dev)
+
+    def read_output(self, n_tile_rows: int, c0: int, c1: int) -> np.ndarray:
+        """Materialize accumulator tile rows ``[0, n_tile_rows)`` for columns
+        ``[c0, c1)`` — every batch before this boundary applied.  Blocks on
+        the in-flight steps (the price of mid-pass delivery)."""
+        if n_tile_rows <= 0:
+            return np.empty((0, c1 - c0), np.float32)
+        blk = np.asarray(self.out[:n_tile_rows, :, c0:c1])
+        n = min(n_tile_rows * self.sem.T, self.sem.n_rows)
+        return blk.reshape(n_tile_rows * self.sem.T, c1 - c0)[:n]
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -209,28 +264,41 @@ class SEMSpMM:
             sum(a.nbytes for a in shipped if a is not None))
         return staged
 
-    def _make_step(self, x_pad: jax.Array, binary_raw: bool):
+    def _make_step(self, binary_raw: bool):
         """Bind the kernel for this pass: Pallas wave kernel, binary raw
-        step (no values), or the general scan step."""
+        step (no values), or the general scan step.  ``x_pad`` is threaded
+        through per call (a boundary hook may swap in a same-shape update
+        mid-pass without touching the jit entry)."""
         if self.cfg.use_pallas:
             from repro.kernels.ops import spmm_pallas_batch
 
-            def step(staged, host_meta, out):
+            def step(staged, host_meta, x_pad, out):
                 _, rows, cols, vals = staged
                 return spmm_pallas_batch(host_meta, rows, cols, vals,
                                          x_pad, out, self.T)
         elif binary_raw:
-            def step(staged, host_meta, out):
+            def step(staged, host_meta, x_pad, out):
                 meta, rows, cols, _ = staged
                 return _batch_step_binary(meta, rows, cols, x_pad, out,
                                           self.T)
         else:
-            def step(staged, host_meta, out):
+            def step(staged, host_meta, x_pad, out):
                 meta, rows, cols, vals = staged
                 return _batch_step(meta, rows, cols, vals, x_pad, out, self.T)
         return step
 
-    def _stream_pass(self, x_pad: jax.Array, out: jax.Array) -> jax.Array:
+    def _boundary(self, hook, chunk_start: int, x_pad: jax.Array,
+                  out: jax.Array) -> jax.Array:
+        """Run the boundary hook (if any) before a batch is dispatched;
+        returns the possibly-updated operand."""
+        if hook is None:
+            return x_pad
+        b = PassBoundary(self, chunk_start, x_pad, out)
+        hook(b)
+        return b.x_pad
+
+    def _stream_pass(self, x_pad: jax.Array, out: jax.Array,
+                     hook=None) -> jax.Array:
         """One full streaming pass of the sparse matrix, accumulated into the
         donated ``out`` blocks."""
         raw = self._use_raw()
@@ -242,31 +310,40 @@ class SEMSpMM:
         if self.cfg.fixed_shape:
             batches = self._pad_tail(batches)
         binary_raw = raw and self.store.header["binary"]
-        step = self._make_step(x_pad, binary_raw)
+        step = self._make_step(binary_raw)
         stats = self.store.stats
+        B = self.cfg.chunk_batch
         if not self.cfg.overlap:
-            for batch in batches:
-                out = step(self._stage(batch), batch[0], out)
+            for i, batch in enumerate(batches):
+                x_pad = self._boundary(hook, i * B, x_pad, out)
+                out = step(self._stage(batch), batch[0], x_pad, out)
         else:
             pending = None
-            for batch in batches:
+            for i, batch in enumerate(batches):
                 staged = self._stage(batch)  # stage k+1 ...
                 if pending is not None:
-                    out = step(*pending, out)  # ... while k computes
+                    j, st_j, meta_j = pending
+                    x_pad = self._boundary(hook, j * B, x_pad, out)
+                    out = step(st_j, meta_j, x_pad, out)  # ... while k stages
                     stats.add_overlap()
-                pending = (staged, batch[0])
+                pending = (i, staged, batch[0])
             if pending is not None:
-                out = step(*pending, out)
+                j, st_j, meta_j = pending
+                x_pad = self._boundary(hook, j * B, x_pad, out)
+                out = step(st_j, meta_j, x_pad, out)
         self.passes += 1
         return out
 
     # -- regime 1/2: X in memory ------------------------------------------
-    def multiply(self, x: np.ndarray) -> np.ndarray:
-        """A @ X with X (n, p) in memory; returns in-memory result."""
-        out, _ = self._multiply(x)
+    def multiply(self, x: np.ndarray, *, boundary_hook=None) -> np.ndarray:
+        """A @ X with X (n, p) in memory; returns in-memory result.
+        ``boundary_hook`` (optional) is called with a :class:`PassBoundary`
+        before each chunk batch — the elastic-admission entry point."""
+        out, _ = self._multiply(x, boundary_hook=boundary_hook)
         return out
 
-    def _multiply(self, x: np.ndarray, acc: Optional[jax.Array] = None
+    def _multiply(self, x: np.ndarray, acc: Optional[jax.Array] = None,
+                  boundary_hook=None
                   ) -> Tuple[np.ndarray, Optional[jax.Array]]:
         """multiply() plus accumulator reuse: a caller looping over slices of
         equal width passes back the returned ``acc`` (still holding the
@@ -281,7 +358,7 @@ class SEMSpMM:
                 acc = jax.device_put(acc, self.device)
         else:
             acc = _zero_acc(acc)
-        out = self._stream_pass(x_pad, acc)
+        out = self._stream_pass(x_pad, acc, hook=boundary_hook)
         out.block_until_ready()   # only here — never inside the pass
         result = np.asarray(out.reshape(-1, p)[: self.n_rows])
         return result, out
@@ -331,6 +408,11 @@ class SEMSpMM:
             out_store.write_cols(c0, out_slice)      # write-once
         out_store.flush()
         return out_store.stats
+
+    @property
+    def n_batches(self) -> int:
+        """Chunk batches per streaming pass (boundary-hook call count)."""
+        return -(-self.store.n_chunks // self.cfg.chunk_batch)
 
     @property
     def io_stats(self) -> IOStats:

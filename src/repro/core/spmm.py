@@ -20,7 +20,6 @@ only, as on real hardware).
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -24,13 +24,12 @@ the roofline term parser (launch/roofline.py) sees exactly these ops.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from repro.distributed.compat import shard_map
 
 
@@ -167,13 +166,7 @@ def chunked_psum(tree, mesh: Mesh, axes: Sequence[str],
     if cur:
         buckets.append(cur)
 
-    def reduce_bucket(subleaves):
-        return [jax.lax.psum(l, tuple(axes)) for l in subleaves]
-
-    specs = [P() for _ in leaves]
     out = list(leaves)
-    fn = shard_map(reduce_bucket, mesh=mesh,
-                   in_specs=(tuple(specs),), out_specs=tuple(specs))
     # One shard_map per bucket keeps each bucket an independent collective
     # group in the HLO (schedulable early).
     for b in buckets:

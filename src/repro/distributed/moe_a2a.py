@@ -26,7 +26,6 @@ side (tests/test_moe_a2a.py, 8 fake devices).
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Tuple
 
@@ -55,7 +54,6 @@ def moe_ffn_a2a(p: dict, xt: jax.Array, *, n_experts: int, top_k: int,
     E, K = n_experts, top_k
     m = compat.axis_size(axis)
     E_loc = E // m
-    F = p["w_in"].shape[-1]
 
     logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)

@@ -25,13 +25,11 @@ the unpipelined reference, gradient equality, and bubble accounting.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.compat import shard_map
 

@@ -20,10 +20,15 @@ threads overlap each other's page faults and the per-shard passes release
 the GIL inside XLA compute.  With multiple JAX devices each shard's operand
 and accumulator are pinned round-robin via ``SEMSpMM(device=...)``, turning
 the same code into a one-device-per-shard parallel scan.
+
+Two scaling knobs compose here: ``replicas=`` spreads the shards of one
+wave across N copies of the matrix (per-SSD/per-NUMA paths — each shard
+streams a different spindle), and a partitioned hot-chunk cache
+(``cache.shard(i)``) gives every shard its own pin budget so a fast shard
+cannot evict a slow shard's hot batches.
 """
 from __future__ import annotations
 
-import dataclasses
 from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional, Sequence
 
@@ -32,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sem import SEMConfig, SEMSpMM
-from repro.io.storage import IOStats, TileStore
+from repro.io.storage import IOStats, TileStore, validate_replicas
 
 
 class ShardedSEMSpMM:
@@ -45,7 +50,8 @@ class ShardedSEMSpMM:
 
     def __init__(self, store: TileStore, n_shards: Optional[int] = None,
                  config: Optional[SEMConfig] = None, cache=None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 replicas: Optional[Sequence[TileStore]] = None):
         if devices is None:
             devs = jax.devices()
             devices = devs if len(devs) > 1 else None
@@ -53,9 +59,25 @@ class ShardedSEMSpMM:
             n_shards = len(devices) if devices else 2
         self.store = store
         self.cfg = config or SEMConfig()
-        self.shards = store.partition_rows(n_shards)
+        # Replica-aware shard placement: with N copies of the matrix (same
+        # logical bytes, different spindles/paths), shard i streams from
+        # copy i mod N — the shards of ONE wave fan out across replicas and
+        # scan bandwidth scales with spindles instead of being fixed per
+        # store.  Every source is partitioned identically (the split is a
+        # pure function of the shared header + meta), so shard i covers the
+        # same tile rows regardless of which copy serves it.
+        sources = [store]
+        if replicas:
+            validate_replicas([store] + list(replicas))
+            sources = [store] + list(replicas)
+        per_source = [s.partition_rows(n_shards) for s in sources]
+        n_shards = len(per_source[0])  # partition_rows may clamp
+        self.shards = [per_source[i % len(sources)][i]
+                       for i in range(n_shards)]
         self.execs: List[SEMSpMM] = [
-            SEMSpMM(s, self.cfg, cache=cache,
+            SEMSpMM(s, self.cfg,
+                    cache=cache.shard(i) if hasattr(cache, "shard")
+                    else cache,
                     device=devices[i % len(devices)] if devices else None)
             for i, s in enumerate(self.shards)]
         h = store.header
@@ -92,15 +114,8 @@ class ShardedSEMSpMM:
     # -- aggregated accounting (scheduler-facing) ----------------------------
     @property
     def io_stats(self) -> IOStats:
-        """Point-in-time sum of the shard stores' counters (every IOStats
-        field, so counters added later aggregate without edits here)."""
-        agg = IOStats()
-        for ex in self.execs:
-            st = ex.store.stats
-            for f in dataclasses.fields(IOStats):
-                setattr(agg, f.name,
-                        getattr(agg, f.name) + getattr(st, f.name))
-        return agg
+        """Point-in-time sum of the shard stores' counters."""
+        return IOStats.aggregate(ex.store.stats for ex in self.execs)
 
     def close(self) -> None:
         self._pool.shutdown(wait=True)

@@ -31,7 +31,7 @@ import json
 import os
 import queue
 import threading
-from typing import Iterator, List, Optional, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,6 +67,16 @@ class IOStats:
 
     def add_overlap(self, n: int = 1) -> None:
         self.overlap_batches += n
+
+    @classmethod
+    def aggregate(cls, stats: "Iterator[IOStats]") -> "IOStats":
+        """Point-in-time field-wise sum (every field, so counters added
+        later aggregate without edits at the call sites)."""
+        agg = cls()
+        for st in stats:
+            for f in dataclasses.fields(cls):
+                setattr(agg, f.name, getattr(agg, f.name) + getattr(st, f.name))
+        return agg
 
 
 class _ReaderFailure:
@@ -145,6 +155,15 @@ class TileStore:
     def open(cls, path: str) -> "TileStore":
         with open(path + ".json") as f:
             return cls(path, json.load(f))
+
+    @classmethod
+    def open_replicas(cls, paths: "Sequence[str]") -> List["TileStore"]:
+        """Open N copies of the same logical matrix (e.g. per-NUMA/per-SSD
+        paths) and validate they really are replicas; see
+        :func:`validate_replicas`."""
+        stores = [cls.open(p) for p in paths]
+        validate_replicas(stores)
+        return stores
 
     @staticmethod
     def _record_bytes(C: int, binary: bool) -> int:
@@ -312,6 +331,20 @@ class TileStore:
             stop.set()
             t.join()
 
+    # -- chunk -> tile-row mapping (elastic-admission accounting) -------------
+    def chunk_tile_rows(self) -> np.ndarray:
+        """Tile row of every chunk in this store's frame, ascending (chunks
+        are laid out in (tile_row, tile_col) order).  Read from the memmap's
+        meta stride — no decode of the index planes.  The serving runtime
+        uses this to account which tile rows a mid-pass-admitted tenant's
+        partial first pass covered."""
+        h = self.header
+        rec = h["record"]
+        mm = self._memmap()
+        meta0 = np.ndarray((self.n_chunks,), np.int32, buffer=mm,
+                           offset=self.chunk_offset * rec, strides=(rec,))
+        return meta0.astype(np.int64) - self.tile_row_offset
+
     # -- row sharding ---------------------------------------------------------
     def partition_rows(self, n_shards: int) -> List["TileStore"]:
         """Split into ``n_shards`` contiguous tile-row shard stores over the
@@ -360,6 +393,27 @@ class TileStore:
             shards.append(st)
             tr0 = tr1
         return shards
+
+
+def validate_replicas(stores: Sequence[TileStore]) -> None:
+    """Check that ``stores`` hold the same logical matrix: identical headers
+    (shape, tiling, chunk count, record layout) and identical backing-file
+    sizes.  Replica routing silently mixing two different matrices would be
+    a correctness disaster — fail loudly at open time instead."""
+    if not stores:
+        raise ValueError("empty replica set")
+    ref = stores[0]
+    ref_size = os.path.getsize(ref.path + ".bin")
+    for s in stores[1:]:
+        if s.header != ref.header:
+            raise ValueError(
+                f"replica {s.path!r} header {s.header} does not match "
+                f"{ref.path!r} header {ref.header}")
+        size = os.path.getsize(s.path + ".bin")
+        if size != ref_size:
+            raise ValueError(
+                f"replica {s.path!r} backing file is {size} bytes, "
+                f"expected {ref_size} ({ref.path!r})")
 
 
 class DenseStore:

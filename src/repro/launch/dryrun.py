@@ -22,18 +22,14 @@ Usage:
   ... --policy no_seq_parallel,no_fsdp   # §Perf ablation knobs
 """
 import argparse
-import dataclasses
 import json
-import re
 import sys
 import time
 import traceback
-from functools import partial
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ARCH_IDS, SHAPES, ArchConfig, ShapeCell, get_config
 from repro.distributed.sharding import use_sharding, param_sharding_tree
@@ -41,8 +37,7 @@ from repro.launch import hlo_analysis
 from repro.launch.mesh import (cache_shardings, input_shardings, make_ctx,
                                make_production_mesh)
 from repro.models import model_api
-from repro.models.params import PDef
-from repro.train.optimizer import AdamWConfig, adamw_update, opt_state_shapes
+from repro.train.optimizer import AdamWConfig, adamw_update
 from repro.train.optimizer import OptState
 
 # TPU v5e hardware constants (per chip) — §Roofline.

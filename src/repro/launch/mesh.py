@@ -6,7 +6,7 @@ only ``dryrun.py`` (which sets XLA_FLAGS before any import) sees 512.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -21,7 +21,7 @@ import argparse
 import json
 import os
 import sys
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 
 def load_records(dir_: str) -> List[dict]:

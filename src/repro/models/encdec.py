@@ -8,7 +8,7 @@ learned positional embeddings (frontend-stub deviation, noted in DESIGN.md).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

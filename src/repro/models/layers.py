@@ -9,7 +9,6 @@ un-replicated by folding the group dim into the einsums.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional, Tuple
 

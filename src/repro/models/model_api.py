@@ -19,17 +19,16 @@ The shape cells (``train_4k`` …) lower either ``train_step`` (kind="train"),
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig, SHAPES, ShapeCell
+from repro.configs.base import ArchConfig, ShapeCell
 from repro.models import encdec as ed
 from repro.models import transformer as tf
-from repro.models.params import PDef, materialize, shape_tree
+from repro.models.params import materialize, shape_tree
 from repro.models.ssm import mamba_dims
 
 

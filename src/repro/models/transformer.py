@@ -7,7 +7,6 @@ The layer body is remat'd (jax.checkpoint) for training shapes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -17,7 +16,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import (ATTN_LOGICAL, MLP_LOGICAL,
                                         MOE_LOGICAL, SSM_LOGICAL,
-                                        gather_fsdp, shard, shard_seq)
+                                        gather_fsdp, shard_seq)
 from repro.models import layers as ll
 from repro.models.moe import moe_block
 from repro.models.params import PDef

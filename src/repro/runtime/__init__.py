@@ -1,19 +1,28 @@
 """Multi-tenant graph-query serving runtime over the SEM-SpMM executor.
 
 Packs concurrent queries into columns of one shared dense matrix and serves
-them with shared streaming passes (batcher + scheduler), advances iterative
-per-tenant sessions one operator application per pass (session), and spends
-leftover memory budget on pinning hot chunk batches (cache).
+them with shared streaming passes (batcher + scheduler) — elastically:
+tenants can be admitted at chunk-batch boundaries *inside* an in-flight
+pass and delivered from stitched partial passes (scheduler).  Iterative
+per-tenant sessions advance one operator application per pass (session),
+leftover memory budget pins hot chunk batches (cache, per-shard budget
+slices when the scan is sharded), and replica routing (replica) spreads
+waves across copies of the on-SSD matrix with failure fallback.
 """
 from repro.runtime.batcher import Batcher, Wave, WaveEntry
-from repro.runtime.cache import CacheStats, HotChunkCache
-from repro.runtime.scheduler import PassReport, SharedScanScheduler
+from repro.runtime.cache import (CacheStats, HotChunkCache,
+                                 PartitionedHotChunkCache)
+from repro.runtime.replica import ReplicaRouter, ReplicaSet, ReplicaState
+from repro.runtime.scheduler import (MidPassState, PassReport,
+                                     SharedScanScheduler)
 from repro.runtime.session import (LabelPropagationSession, MultiplyRequest,
                                    PageRankSession, PowerIterationSession,
                                    Session)
 
 __all__ = [
     "Batcher", "Wave", "WaveEntry", "CacheStats", "HotChunkCache",
-    "PassReport", "SharedScanScheduler", "LabelPropagationSession",
-    "MultiplyRequest", "PageRankSession", "PowerIterationSession", "Session",
+    "PartitionedHotChunkCache", "ReplicaRouter", "ReplicaSet", "ReplicaState",
+    "MidPassState", "PassReport", "SharedScanScheduler",
+    "LabelPropagationSession", "MultiplyRequest", "PageRankSession",
+    "PowerIterationSession", "Session",
 ]

@@ -71,6 +71,14 @@ class Batcher:
     def pending_columns(self) -> int:
         return sum(s.width for s in self._queue)
 
+    def peek(self) -> Session:
+        """The queue head (the only admission candidate — FIFO, no
+        overtaking; the elastic scheduler admits it mid-pass)."""
+        return self._queue[0]
+
+    def pop(self) -> Session:
+        return self._queue.popleft()
+
     def admit(self, active: List[Session], col_budget: int) -> List[Session]:
         """Move queued sessions into ``active`` while the wave still has
         column budget.  FIFO, no overtaking — except that a session wider
@@ -104,9 +112,3 @@ class Batcher:
             blocks.append(np.asarray(x, np.float32))
             off += x.shape[1]
         return Wave(np.concatenate(blocks, axis=1), entries)
-
-    @staticmethod
-    def scatter(wave: Wave, y: np.ndarray) -> None:
-        """Hand each tenant its result columns from the shared A @ X."""
-        for e in wave.entries:
-            e.session.consume(y[:, e.col_offset:e.col_offset + e.width])

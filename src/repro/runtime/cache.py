@@ -132,3 +132,60 @@ class HotChunkCache:
 
     def __len__(self) -> int:
         return len(self._pinned)
+
+
+class PartitionedHotChunkCache:
+    """Shard-aware budget split: one child :class:`HotChunkCache` per shard,
+    each owning an equal slice of the total budget.
+
+    A sharded scan hits the cache from every shard's prefetch thread at
+    once; with one shared budget a fast shard (small byte range, quick
+    passes) can monopolize the pins and evict a slow shard's hot batches —
+    exactly the shard whose reads most need hiding.  Splitting the budget
+    per shard makes eviction pressure local: shard i's offers compete only
+    against shard i's pins.  The scheduler resizes the whole partition each
+    pass (``set_budget``) and reads aggregated stats; executors read/write
+    through their own ``shard(i)`` slice."""
+
+    def __init__(self, n_shards: int, budget_bytes: int = 0):
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        self.shards = [HotChunkCache(0) for _ in range(n_shards)]
+        self.budget_bytes = 0
+        self.set_budget(budget_bytes)
+
+    def shard(self, i: int) -> HotChunkCache:
+        return self.shards[i]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def set_budget(self, budget_bytes: int) -> None:
+        """Split the total budget equally; each child evicts down to its own
+        slice (a squeeze on one shard never touches another's pins)."""
+        self.budget_bytes = max(0, int(budget_bytes))
+        per = self.budget_bytes // len(self.shards)
+        for c in self.shards:
+            c.set_budget(per)
+
+    @property
+    def pinned_bytes(self) -> int:
+        return sum(c.pinned_bytes for c in self.shards)
+
+    @property
+    def stats(self) -> CacheStats:
+        agg = CacheStats()
+        for c in self.shards:
+            agg.hits += c.stats.hits
+            agg.misses += c.stats.misses
+            agg.hit_bytes += c.stats.hit_bytes
+            agg.evictions += c.stats.evictions
+        return agg
+
+    def clear(self) -> None:
+        for c in self.shards:
+            c.clear()
+
+    def __len__(self) -> int:
+        return sum(len(c) for c in self.shards)

@@ -17,17 +17,48 @@ driving many passes, many tenants ride one pass.  Each ``run_pass``:
 
 I/O amortization is the invariant the tests pin down: serving N single-vector
 tenants costs ``ceil(total_cols / columns_that_fit)`` passes, not N.
+
+**Elastic mode** (``elastic=True``) removes the last head-of-line blocking:
+a request arriving just after a wave starts no longer waits out the whole
+pass.  The wave is packed at a *fixed column capacity* (occupied tenants at
+the front, slack zeros behind — one jit entry for the scheduler's whole
+lifetime), and the engine's batch-boundary hook
+(:class:`repro.core.sem.PassBoundary`) lets the scheduler act inside an
+in-flight pass:
+
+* **mid-pass admission** — a queued tenant's columns are written into free
+  slack at a chunk-batch boundary.  Chunks are laid out in (tile_row,
+  tile_col) order, so every tile row starting at or after the boundary
+  accumulates the newcomer's contribution bit-exactly; the scheduler
+  records that first partial pass's coverage (``tr_start``) per tenant.
+* **partial-pass completion** — on the *next* pass the tenant's same
+  operand rides from the start; as soon as the boundary clock passes the
+  last chunk of tile row ``tr_start - 1``, rows ``[0, tr_start)`` are read
+  from the live accumulator, stitched with the previous pass's suffix, and
+  delivered — bit-identical to between-pass admission, roughly half a pass
+  earlier.  An iterative tenant is immediately re-admitted at the same
+  boundary with its next iterate (a rolling wavefront), and a finished
+  tenant's slack is handed to the next queued request at the very next
+  boundary.
+
+The executor behind the scheduler may be a single :class:`SEMSpMM`, a
+:class:`~repro.distributed.shard_scan.ShardedSEMSpMM` (``sharded=``), or a
+:class:`~repro.runtime.replica.ReplicaSet` routing each pass across store
+copies — elastic mode composes with replicas (the hook survives replica
+failover) but not with ``sharded=`` (shards run their boundaries
+concurrently; use replicas to scale scan bandwidth for an elastic wave).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import time
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.sem import SEMSpMM
 from repro.runtime.batcher import Batcher, Wave
-from repro.runtime.cache import HotChunkCache
+from repro.runtime.cache import HotChunkCache, PartitionedHotChunkCache
 from repro.runtime.session import MultiplyRequest, Session
 
 
@@ -41,6 +72,27 @@ class PassReport:
     bytes_read: int = 0
     cache_hit_bytes: int = 0
     cache_budget: int = 0
+    capacity: int = 0           # elastic: the fixed packed width
+    admitted_midpass: int = 0   # elastic: tenants that joined inside the pass
+    completed_midpass: int = 0  # elastic: stitched deliveries inside the pass
+
+
+@dataclasses.dataclass
+class MidPassState:
+    """One tenant's partial-pass protocol state.
+
+    ``tr_start`` is the accounting the stitch rests on: the first tile row
+    whose chunks all lie at or after the admission boundary.  The admission
+    pass yields bit-exact output rows ``[tr_start * T, n_rows)`` (the
+    suffix); the following pass yields rows ``[0, tr_start * T)`` (the
+    prefix) as soon as its boundary clock covers them."""
+    session: Session
+    col0: int
+    width: int
+    tr_start: int
+    admit_cs: int        # chunk_start of the admission boundary
+    admitted_pass: int   # scheduler pass number of the admission
+    suffix: Optional[np.ndarray] = None
 
 
 class SharedScanScheduler:
@@ -50,25 +102,63 @@ class SharedScanScheduler:
     the store (:class:`repro.distributed.shard_scan.ShardedSEMSpMM`):
     parallel partial scans + a row-block concatenation, bit-identical to the
     single-scan path.  Admission control and budgets stay on the unsharded
-    executor (the column budget is a property of the whole operator)."""
+    executor (the column budget is a property of the whole operator).
+
+    ``elastic=True`` turns on mid-pass admission (see module docstring);
+    ``capacity`` fixes the packed wave width (default: first demand plus
+    ``reserve_cols`` slack, clamped to the §3.6 budget).  ``boundary_probe``
+    is a test/bench hook ``probe(scheduler, PassBoundary)`` invoked at every
+    chunk-batch boundary — the deterministic way to inject mid-pass
+    arrivals."""
 
     def __init__(self, sem: SEMSpMM, *, use_cache: bool = True,
-                 sharded: int = 0):
+                 sharded: int = 0, elastic: bool = False,
+                 capacity: Optional[int] = None, reserve_cols: int = 4,
+                 boundary_probe=None):
         self.sem = sem
         self.batcher = Batcher(sem.n_cols)
         self.active: List[Session] = []
-        self.cache: Optional[HotChunkCache] = None
+        self.elastic = elastic
+        self.capacity = capacity
+        self.reserve_cols = reserve_cols
+        self.pass_no = 0
+        self.boundary_clock = 0      # chunk-batch boundaries seen, all passes
+        self._probe = boundary_probe
+        self._midpass: List[MidPassState] = []
+        self._slots: Dict[Session, Tuple[int, int]] = {}
+        self._row_first_chunk: Optional[np.ndarray] = None
+        want_shards = sharded if (sharded and sharded >= 2
+                                  and sem.mode == "sem") else 0
+        if elastic and want_shards:
+            raise ValueError(
+                "elastic admission needs one boundary clock per pass; "
+                "sharded= runs N concurrent scans.  Scale an elastic wave "
+                "with a ReplicaSet instead.")
+        self.cache = None
         if use_cache and sem.mode == "sem":
-            # adopt a cache already attached to the executor (e.g. pre-warmed
-            # via SEMSpMM(cache=...)) rather than clobbering it
-            self.cache = sem.cache if sem.cache is not None else \
-                HotChunkCache(0)
-            sem.cache = self.cache
+            if sem.cache is not None:
+                # adopt a cache already attached to the executor (e.g.
+                # pre-warmed via SEMSpMM(cache=...)) rather than clobbering it
+                self.cache = sem.cache
+            elif want_shards:
+                # per-shard budget slices: a fast shard's offers can never
+                # evict a slow shard's pins
+                self.cache = PartitionedHotChunkCache(want_shards)
+            else:
+                self.cache = HotChunkCache(0)
+            if not want_shards:
+                sem.cache = self.cache
         self.sharded = None
-        if sharded and sharded >= 2 and sem.mode == "sem":
+        if want_shards:
             from repro.distributed.shard_scan import ShardedSEMSpMM
-            self.sharded = ShardedSEMSpMM(sem.store, n_shards=sharded,
-                                          config=sem.cfg, cache=self.cache)
+            # a ReplicaSet behind a sharded scheduler contributes its copies
+            # as shard sources (shard i streams copy i mod N) — the scan
+            # bandwidth the copies were provisioned for is not left idle
+            extra = ([ex.store for ex in sem.execs[1:]]
+                     if hasattr(sem, "execs") else None)
+            self.sharded = ShardedSEMSpMM(sem.store, n_shards=want_shards,
+                                          config=sem.cfg, cache=self.cache,
+                                          replicas=extra)
         self.reports: List[PassReport] = []
 
     def close(self) -> None:
@@ -84,6 +174,8 @@ class SharedScanScheduler:
 
     # -- submission ----------------------------------------------------------
     def submit(self, session: Session) -> Session:
+        session.t_submit = time.monotonic()
+        session.submit_clock = self.boundary_clock
         return self.batcher.submit(session)
 
     def query(self, x: np.ndarray, tenant_id: str = "") -> MultiplyRequest:
@@ -102,6 +194,21 @@ class SharedScanScheduler:
                   + self.batcher.pending_columns())
         if demand == 0:
             return None
+        self.pass_no += 1
+        if self.elastic and not self._oversized_head_alone():
+            return self._run_pass_elastic(demand)
+        return self._run_pass_classic(demand)
+
+    def _oversized_head_alone(self) -> bool:
+        """An idle elastic wave facing a tenant wider than any capacity falls
+        back to the classic sliced path for that pass (paper §3.3)."""
+        if self.active or self._midpass or not self.batcher.pending:
+            return False
+        cap = self.capacity or self.sem.columns_that_fit(
+            self.batcher.peek().width)
+        return self.batcher.peek().width > cap
+
+    def _run_pass_classic(self, demand: int) -> Optional[PassReport]:
         col_budget = self.sem.columns_that_fit(demand)
         self.batcher.admit(self.active, col_budget)
         wave = self.batcher.pack(self.active)
@@ -118,37 +225,68 @@ class SharedScanScheduler:
 
         r0, h0, p0 = self._counters()
         y = self._scan(wave, col_budget)
-        self.batcher.scatter(wave, y)
+        for e in wave.entries:
+            self._deliver(e.session, y[:, e.col_offset:e.col_offset + e.width])
 
         still_active = [s for s in self.active if not s.done]
         report.retired = len(self.active) - len(still_active)
+        for s in self.active:
+            if s.done:  # a fallback pass may retire an elastic-slotted
+                self._slots.pop(s, None)  # tenant: free its columns too
         self.active = still_active
-        r1, h1, p1 = self._counters()
-        report.scan_passes = p1 - p0
-        report.bytes_read = r1 - r0
-        report.cache_hit_bytes = h1 - h0
-        self.reports.append(report)
+        self._finish_report(report, r0, h0, p0)
         return report
 
     def _counters(self):
         """(bytes_read, cache_hit_bytes, passes) of whichever executor the
         scans run on — shard-aggregated when the pass fans out."""
-        if self.sharded is not None:
-            st = self.sharded.io_stats
-            return st.bytes_read, st.cache_hit_bytes, self.sharded.passes
-        st = self.sem.store.stats
-        return st.bytes_read, st.cache_hit_bytes, self.sem.passes
+        op = self.sharded if self.sharded is not None else self.sem
+        st = op.io_stats
+        return st.bytes_read, st.cache_hit_bytes, op.passes
+
+    def _finish_report(self, report: PassReport, r0, h0, p0) -> None:
+        r1, h1, p1 = self._counters()
+        report.scan_passes = p1 - p0
+        report.bytes_read = r1 - r0
+        report.cache_hit_bytes = h1 - h0
+        self.reports.append(report)
+
+    def _deliver(self, session: Session, y: np.ndarray) -> None:
+        """Hand a tenant its product, stamping time-to-first-result.  The
+        slice is materialized contiguous so a session's own host-side
+        reductions (Rayleigh quotients, norms) see one memory layout
+        regardless of how the columns were packed or stitched — delivery is
+        bit-reproducible across admission modes."""
+        if session.t_first_result is None:
+            session.t_first_result = time.monotonic()
+            session.first_result_clock = self.boundary_clock
+        session.consume(np.ascontiguousarray(y))
 
     def _scan(self, wave: Wave, col_budget: int) -> np.ndarray:
         """One shared A @ X.  An oversized lone tenant is served by vertical
         partitioning: slice X to the column budget, one streaming pass per
-        slice (paper §3.3 / §3.6: passes = ceil(p / p_fit))."""
+        slice (paper §3.3 / §3.6: passes = ceil(p / p_fit)).  The probe
+        hook rides every slice too, so the boundary clock keeps its meaning
+        ("chunk-batch boundaries seen, all passes") across sliced scans."""
         op = self.sharded if self.sharded is not None else self.sem
+        hook = (self._probe_hook
+                if self._probe is not None and self.sharded is None else None)
+
+        def mult(x: np.ndarray) -> np.ndarray:
+            return op.multiply(x, boundary_hook=hook) if hook \
+                else op.multiply(x)
+
         if wave.width <= col_budget:
-            return op.multiply(wave.x)
-        slices = [op.multiply(wave.x[:, c0:c0 + col_budget])
+            return mult(wave.x)
+        slices = [mult(wave.x[:, c0:c0 + col_budget])
                   for c0 in range(0, wave.width, col_budget)]
         return np.concatenate(slices, axis=1)
+
+    def _probe_hook(self, boundary) -> None:
+        """Classic-path hook: just the clock and the probe (no admission) —
+        the apples-to-apples baseline for elastic benchmarks."""
+        self.boundary_clock += 1
+        self._probe(self, boundary)
 
     def run(self, max_passes: int = 10_000) -> List[PassReport]:
         """Serve until every submitted session is done (or the pass cap)."""
@@ -159,6 +297,191 @@ class SharedScanScheduler:
                 break
             done.append(rep)
         return done
+
+    # -- elastic mode --------------------------------------------------------
+    def _resolve_capacity(self, demand: int) -> int:
+        """Fix the packed wave width on first use: current demand plus slack
+        for mid-pass arrivals, clamped to the §3.6 budget.  Stable for the
+        scheduler's lifetime -> the whole serving run reuses one jit entry."""
+        if self.capacity is None:
+            want = max(1, demand) + self.reserve_cols
+            self.capacity = self.sem.columns_that_fit(want)
+        return self.capacity
+
+    def _row_starts(self) -> np.ndarray:
+        """First chunk index of every tile row (+ terminal n_chunks), from
+        the store's chunk layout — the tr_start <-> chunk_start bridge."""
+        if self._row_first_chunk is None:
+            trow = self.sem.store.chunk_tile_rows()
+            n_tile_rows = -(-self.sem.n_rows // self.sem.T)
+            self._row_first_chunk = np.searchsorted(
+                trow, np.arange(n_tile_rows + 1))
+            self._trow = trow
+        return self._row_first_chunk
+
+    def _tr_of(self, chunk_start: int) -> int:
+        """First tile row fully covered by chunks [chunk_start, n_chunks)."""
+        if chunk_start <= 0:
+            return 0
+        if chunk_start >= len(self._trow):
+            return -(-self.sem.n_rows // self.sem.T)
+        return int(self._trow[chunk_start - 1]) + 1
+
+    def _alloc_slot(self, width: int) -> Optional[int]:
+        """First-fit column slot inside the fixed capacity."""
+        pos = 0
+        for c0, w in sorted(self._slots.values()):
+            if c0 - pos >= width:
+                return pos
+            pos = c0 + w
+        return pos if self.capacity - pos >= width else None
+
+    def _admit_to_slot(self, session: Session) -> Optional[int]:
+        c0 = self._alloc_slot(session.width)
+        if c0 is None:
+            return None
+        self._slots[session] = (c0, session.width)
+        return c0
+
+    def _retire(self, session: Session, report: PassReport) -> None:
+        self._slots.pop(session, None)
+        if session in self.active:
+            self.active.remove(session)
+        report.retired += 1
+
+    def _run_pass_elastic(self, demand: int) -> Optional[PassReport]:
+        cap = self._resolve_capacity(demand)
+        self._row_starts()
+        # a slotless active tenant (admitted by a classic fallback pass, e.g.
+        # oversized) that cannot fit the fixed capacity keeps the classic
+        # path; _midpass is empty whenever this triggers (classic passes
+        # never run while partial-pass states are in flight)
+        for s in self.active:
+            if s not in self._slots and (s.width > cap
+                                         or self._admit_to_slot(s) is None):
+                return self._run_pass_classic(demand)
+        # between-pass admission: fill free slots FIFO, no overtaking
+        while self.batcher.pending:
+            head = self.batcher.peek()
+            if head.width > cap or self._admit_to_slot(head) is None:
+                break
+            self.active.append(self.batcher.pop())
+        if not self.active:
+            return None
+
+        x = np.zeros((self.sem.n_cols, cap), np.float32)
+        for s in self.active:
+            c0, w = self._slots[s]
+            cols = s.x_columns()
+            x[:, c0:c0 + w] = cols[:, None] if cols.ndim == 1 else cols
+
+        report = PassReport(wave_cols=sum(w for _, w in self._slots.values()),
+                            tenants=len(self.active), capacity=cap)
+        if self.cache is not None:
+            # the packed X physically holds `cap` columns all pass
+            leftover = self.sem.leftover_budget(cap)
+            self.cache.set_budget(leftover)
+            report.cache_budget = leftover
+
+        r0, h0, p0 = self._counters()
+        self._pass_report = report
+        y = self.sem.multiply(x, boundary_hook=self._elastic_hook)
+        self._pass_end(y, report)
+        self._finish_report(report, r0, h0, p0)
+        return report
+
+    def _elastic_hook(self, b) -> None:
+        """The elastic wave's batch-boundary protocol: heal a replica-retry
+        rewind, deliver completed partial passes, admit queued tenants."""
+        self.boundary_clock += 1
+        if self._probe is not None:
+            self._probe(self, b)
+        cs = b.chunk_start
+        report = self._pass_report
+        starts = self._row_first_chunk
+
+        # A replica failover restarts the pass from chunk 0: states admitted
+        # earlier in THIS pass lost their column writes with the dead
+        # replica's staged operand — re-write them at the retry's boundaries.
+        for st in self._midpass:
+            if (st.admitted_pass == self.pass_no and st.suffix is None
+                    and st.admit_cs >= cs):
+                b.write_columns(st.col0, st.session.x_columns())
+                st.admit_cs = cs
+                st.tr_start = self._tr_of(cs)
+
+        # completions: a carried tenant's prefix rows [0, tr_start) are all
+        # applied once the boundary clock reaches tr_start's first chunk
+        for st in list(self._midpass):
+            if st.admitted_pass >= self.pass_no or cs < starts[st.tr_start]:
+                continue
+            prefix = b.read_output(st.tr_start, st.col0, st.col0 + st.width)
+            self._midpass.remove(st)
+            report.completed_midpass += 1
+            self._deliver(st.session, np.concatenate([prefix, st.suffix]))
+            if st.session.done:
+                self._retire(st.session, report)
+            else:
+                # rolling wavefront: the next iterate enters right here
+                self._midpass_admit(st.session, b, report, count=False)
+
+        # admissions: queued tenants enter free slack at this boundary
+        while self.batcher.pending:
+            head = self.batcher.peek()
+            if (head.width > self.capacity
+                    or self._admit_to_slot(head) is None):
+                break
+            session = self.batcher.pop()
+            self.active.append(session)
+            self._midpass_admit(session, b, report)
+
+    def _midpass_admit(self, session: Session, b, report: PassReport,
+                       count: bool = True) -> None:
+        c0, w = self._slots[session]
+        b.write_columns(c0, session.x_columns())
+        self._midpass.append(MidPassState(
+            session, c0, w, self._tr_of(b.chunk_start), b.chunk_start,
+            self.pass_no))
+        if count:
+            report.admitted_midpass += 1
+
+    def _pass_end(self, y: np.ndarray, report: PassReport) -> None:
+        """Scatter at pass end: record suffixes for tenants admitted inside
+        this pass, complete carried tenants the boundary clock missed, and
+        deliver everyone who rode the whole pass.  ``handled`` collects
+        every session the partial-pass protocol touched — whether its state
+        is still carried or was just resolved here — so the plain scatter
+        below never delivers the same product a second time."""
+        T = self.sem.T
+        handled = set()
+        for st in list(self._midpass):
+            handled.add(st.session)
+            c0, c1 = st.col0, st.col0 + st.width
+            if st.admitted_pass == self.pass_no:
+                if st.tr_start == 0:  # admitted at boundary 0 == whole pass
+                    self._midpass.remove(st)
+                    self._deliver(st.session, y[:, c0:c1])
+                    if st.session.done:
+                        self._retire(st.session, report)
+                else:
+                    st.suffix = y[st.tr_start * T:, c0:c1].copy()
+            else:
+                # carried but the last boundary fell short of tr_start's
+                # first chunk: the finished pass covers the prefix anyway
+                self._midpass.remove(st)
+                report.completed_midpass += 1
+                prefix = y[: st.tr_start * T, c0:c1]
+                self._deliver(st.session,
+                              np.concatenate([prefix, st.suffix]))
+                if st.session.done:
+                    self._retire(st.session, report)
+        for s in list(self.active):
+            if s in handled:
+                continue
+            c0, w = self._slots[s]
+            self._deliver(s, y[:, c0:c0 + w])
+            if s.done:
+                self._retire(s, report)
 
     # -- accounting ----------------------------------------------------------
     def total_bytes_read(self) -> int:

@@ -27,6 +27,14 @@ class Session:
         self.iterations = 0
         self.done = False
         self.result: Optional[np.ndarray] = None
+        # Time-to-first-result accounting, stamped by the scheduler: wall
+        # clocks at submission and at the first delivered product, plus the
+        # same two instants on the scheduler's chunk-batch boundary clock
+        # (deterministic — what the elastic-admission benchmarks assert on).
+        self.t_submit: Optional[float] = None
+        self.t_first_result: Optional[float] = None
+        self.submit_clock: Optional[int] = None
+        self.first_result_clock: Optional[int] = None
 
     @property
     def width(self) -> int:

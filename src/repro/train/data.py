@@ -14,7 +14,7 @@ loop end-to-end without shipping a corpus.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

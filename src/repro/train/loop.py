@@ -16,9 +16,7 @@
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
-from functools import partial
 from typing import Dict, Optional
 
 import jax

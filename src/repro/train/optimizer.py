@@ -11,8 +11,7 @@ The cross-pod gradient-compression hook (int8 + error feedback) lives in
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

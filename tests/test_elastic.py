@@ -1,0 +1,435 @@
+"""Elastic wave tests: mid-pass admission (bit-identity vs between-pass
+admission, jit-entry stability, reduced time-to-first-result on the
+boundary clock, rolling iterative wavefront) and replica routing
+(bit-identity, bandwidth/queue-depth ranking, failure fallback mid-run,
+shard placement across replicas, header validation)."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core.formats import to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.distributed.shard_scan import ShardedSEMSpMM
+from repro.io.storage import TileStore, validate_replicas
+from repro.runtime import (MultiplyRequest, PowerIterationSession, ReplicaSet,
+                           SharedScanScheduler)
+
+BATCH = 16
+
+
+@pytest.fixture(scope="module")
+def store_path(small_valued, tmp_path_factory):
+    ct = to_chunked(small_valued, T=512, C=128)
+    path = str(tmp_path_factory.mktemp("elastic") / "g")
+    TileStore.write(path, ct)
+    return path
+
+
+@pytest.fixture(scope="module")
+def replica_paths(store_path, tmp_path_factory):
+    """Three byte-identical copies of the store (per-SSD paths)."""
+    root = tmp_path_factory.mktemp("replicas")
+    paths = [store_path]
+    for i in (1, 2):
+        p = str(root / f"copy{i}")
+        shutil.copy(store_path + ".bin", p + ".bin")
+        shutil.copy(store_path + ".json", p + ".json")
+        paths.append(p)
+    return paths
+
+
+def fresh_sem(store_path, **cfg):
+    return SEMSpMM(TileStore.open(store_path),
+                   SEMConfig(chunk_batch=BATCH, **cfg))
+
+
+def one_shot_probe(x, at_clock):
+    """A boundary probe that submits ``x`` once the global boundary clock
+    reaches ``at_clock`` — the deterministic mid-pass arrival."""
+    box = {"req": None}
+
+    def probe(sched, boundary):
+        if box["req"] is None and sched.boundary_clock >= at_clock:
+            box["req"] = sched.query(x, tenant_id="midpass")
+    return probe, box
+
+
+def serve_midpass(store_path, x, *, elastic, at_clock=4, n_cols=None,
+                  **sched_kw):
+    """One long-running tenant keeps passes flowing; ``x`` arrives mid-pass
+    via the probe.  Returns (request, scheduler)."""
+    rng = np.random.default_rng(11)
+    probe, box = one_shot_probe(x, at_clock)
+    sem = fresh_sem(store_path)
+    sched = SharedScanScheduler(sem, use_cache=False, elastic=elastic,
+                                boundary_probe=probe, **sched_kw)
+    sched.submit(PowerIterationSession(
+        rng.standard_normal(n_cols or sem.n_cols).astype(np.float32),
+        tol=0.0, max_iter=4))
+    sched.run()
+    return box["req"], sched
+
+
+# ---------------------------------------------------------------------------
+# Mid-pass admission
+# ---------------------------------------------------------------------------
+def test_midpass_admission_bit_identical(store_path, small_valued):
+    """A tenant admitted inside an in-flight pass gets the same bits as a
+    dedicated multiply (and hence as between-pass admission)."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x[:, None])[:, 0]
+    req, sched = serve_midpass(store_path, x, elastic=True)
+    assert req is not None and req.done
+    np.testing.assert_array_equal(req.result, want)
+    assert sum(r.admitted_midpass for r in sched.reports) == 1
+    assert sum(r.completed_midpass for r in sched.reports) == 1
+
+
+def test_midpass_beats_between_pass_on_the_boundary_clock(store_path,
+                                                          small_valued):
+    """Same arrival instant, same workload: the elastic delivery lands
+    strictly earlier on the (deterministic) chunk-batch boundary clock."""
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    req_e, _ = serve_midpass(store_path, x, elastic=True)
+    req_c, _ = serve_midpass(store_path, x, elastic=False)
+    assert req_e.submit_clock == req_c.submit_clock
+    np.testing.assert_array_equal(req_e.result, req_c.result)
+    assert req_e.first_result_clock < req_c.first_result_clock
+
+
+def test_midpass_widening_adds_no_jit_entries(store_path, small_valued):
+    """The fixed-capacity wave + shape-preserving column writes mean a whole
+    elastic serving run — including a mid-pass admission — compiles the
+    batch step exactly once."""
+    from repro.core import sem as sem_mod
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    before = sem_mod._batch_step._cache_size()
+    req, sched = serve_midpass(store_path, x, elastic=True, capacity=7)
+    assert req.done
+    assert sem_mod._batch_step._cache_size() - before == 1
+
+
+def test_rolling_iterative_session_matches_plain_run(store_path,
+                                                     small_valued):
+    """An iterative tenant injected mid-pass rolls through stitched partial
+    passes; its full trajectory (residuals, eigenvalue, result) is
+    bit-identical to a dedicated between-pass run."""
+    rng = np.random.default_rng(6)
+    x0 = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+
+    def run(elastic):
+        box = {"s": None}
+
+        def probe(sched, boundary):
+            if box["s"] is None and sched.boundary_clock >= 5:
+                box["s"] = sched.submit(PowerIterationSession(
+                    x0.copy(), tol=0.0, max_iter=3, tenant_id="rolling"))
+        sem = fresh_sem(store_path)
+        sched = SharedScanScheduler(sem, use_cache=False, elastic=elastic,
+                                    boundary_probe=probe)
+        sched.submit(PowerIterationSession(
+            np.ones(sem.n_cols, np.float32), tol=0.0, max_iter=6))
+        sched.run()
+        return box["s"]
+
+    rolled, plain = run(True), run(False)
+    assert rolled.done and plain.done
+    assert rolled.iterations == plain.iterations
+    assert rolled.residuals == plain.residuals
+    assert rolled.eigenvalue == plain.eigenvalue
+    np.testing.assert_array_equal(rolled.result, plain.result)
+
+
+def test_elastic_without_arrivals_matches_classic(store_path, small_valued):
+    """Elastic mode with no mid-pass traffic serves exactly what the classic
+    scheduler serves."""
+    rng = np.random.default_rng(7)
+    xs = [rng.standard_normal(small_valued.n_cols).astype(np.float32)
+          for _ in range(5)]
+
+    def run(elastic):
+        sched = SharedScanScheduler(fresh_sem(store_path), use_cache=False,
+                                    elastic=elastic)
+        reqs = [sched.query(x, tenant_id=str(i)) for i, x in enumerate(xs)]
+        sched.run()
+        return reqs
+
+    for a, b in zip(run(True), run(False)):
+        assert a.done and b.done
+        np.testing.assert_array_equal(a.result, b.result)
+
+
+def test_elastic_freed_slack_readmits_next_request(store_path, small_valued):
+    """A retiring mid-pass one-shot hands its slack to the next queued
+    request at a later boundary of the same run (the elastic ring)."""
+    rng = np.random.default_rng(8)
+    xs = [rng.standard_normal(small_valued.n_cols).astype(np.float32)
+          for _ in range(3)]
+    box = {"i": 0, "reqs": []}
+
+    def probe(sched, boundary):
+        # drip one request every 6 boundaries; capacity 2 forces them to
+        # recycle the single slack slot
+        if box["i"] < len(xs) and sched.boundary_clock >= 6 * (box["i"] + 1):
+            box["reqs"].append(sched.query(xs[box["i"]],
+                                           tenant_id=f"q{box['i']}"))
+            box["i"] += 1
+
+    sem = fresh_sem(store_path)
+    sched = SharedScanScheduler(sem, use_cache=False, elastic=True,
+                                capacity=2, boundary_probe=probe)
+    sched.submit(PowerIterationSession(np.ones(sem.n_cols, np.float32),
+                                       tol=0.0, max_iter=8))
+    sched.run()
+    dedicated = fresh_sem(store_path)
+    assert len(box["reqs"]) == 3
+    for x, r in zip(xs, box["reqs"]):
+        assert r.done
+        np.testing.assert_array_equal(r.result,
+                                      dedicated.multiply(x[:, None])[:, 0])
+    assert sum(r.admitted_midpass for r in sched.reports) >= 2
+
+
+@pytest.mark.parametrize("inject_clock_offset", [0, -1])
+def test_pass_end_completion_delivers_exactly_once(store_path, small_valued,
+                                                   inject_clock_offset):
+    """Regression: an iterative tenant whose partial pass resolves at PASS
+    END (admitted at the first boundary -> tr_start 0, or at the last
+    boundary -> completion past the final boundary clock) must not be
+    consumed a second time by the plain pass-end scatter — a double
+    consume advances two iterations on one product."""
+    rng = np.random.default_rng(14)
+    x0 = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    n_batches = fresh_sem(store_path).n_batches
+
+    def run(elastic):
+        # offset 0: inject at the first boundary of pass 2 (chunk_start 0);
+        # offset -1: inject at the last boundary of pass 1
+        at = n_batches + 1 if inject_clock_offset == 0 else n_batches
+        box = {"s": None}
+
+        def probe(sched, boundary):
+            if box["s"] is None and sched.boundary_clock >= at:
+                box["s"] = sched.submit(PowerIterationSession(
+                    x0.copy(), tol=0.0, max_iter=3))
+        sem = fresh_sem(store_path)
+        sched = SharedScanScheduler(sem, use_cache=False, elastic=elastic,
+                                    boundary_probe=probe)
+        sched.submit(PowerIterationSession(
+            np.ones(sem.n_cols, np.float32), tol=0.0, max_iter=6))
+        sched.run()
+        return box["s"]
+
+    rolled, plain = run(True), run(False)
+    assert rolled.done and plain.done
+    assert rolled.iterations == plain.iterations == 3
+    assert 0.0 not in rolled.residuals  # the double-consume fingerprint
+    assert rolled.residuals == plain.residuals
+    np.testing.assert_array_equal(rolled.result, plain.result)
+
+
+def test_classic_fallback_pass_frees_elastic_slots(store_path, small_valued):
+    """Regression: a tenant retired by a classic fallback pass (oversized
+    head) must release its column slot — a leaked slot would shrink the
+    elastic capacity forever."""
+    n = small_valued.n_cols
+    sem = fresh_sem(store_path)
+    sched = SharedScanScheduler(sem, use_cache=False, elastic=True,
+                                capacity=4)
+    wide = sched.submit(MultiplyRequest(np.ones((n, 6), np.float32)))
+    sched.run()          # oversized head alone -> classic sliced pass
+    assert wide.done and not sched._slots
+    reqs = [sched.query(np.ones(n, np.float32), tenant_id=str(i))
+            for i in range(4)]
+    sched.run()          # all four must fit the (unshrunk) capacity at once
+    assert all(r.done for r in reqs)
+    assert sched.reports[-1].wave_cols == 4 and not sched._slots
+
+
+def test_elastic_rejects_sharded(store_path):
+    with pytest.raises(ValueError, match="elastic"):
+        SharedScanScheduler(fresh_sem(store_path), elastic=True, sharded=2)
+
+
+def test_partial_pass_row_accounting(store_path):
+    """tr_start bookkeeping: the admission boundary's chunk_start maps to
+    the first tile row whose chunks all lie at or after it."""
+    sem = fresh_sem(store_path)
+    sched = SharedScanScheduler(sem, use_cache=False, elastic=True)
+    sched._row_starts()
+    trow = sem.store.chunk_tile_rows()
+    n_tile_rows = -(-sem.n_rows // sem.T)
+    assert sched._tr_of(0) == 0
+    assert sched._tr_of(len(trow)) == n_tile_rows
+    for cs in range(1, len(trow)):
+        tr = sched._tr_of(cs)
+        # every chunk of rows >= tr is at or after cs ...
+        assert np.all(np.nonzero(trow >= tr)[0] >= cs)
+        # ... and tr is minimal: row tr-1 has a chunk before cs
+        assert np.any(np.nonzero(trow == trow[cs - 1])[0] < cs)
+
+
+# ---------------------------------------------------------------------------
+# Replica routing
+# ---------------------------------------------------------------------------
+def test_replica_set_bit_identical(replica_paths, small_valued, store_path):
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((small_valued.n_cols, 4)).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x)
+    rs = ReplicaSet(TileStore.open_replicas(replica_paths),
+                    SEMConfig(chunk_batch=BATCH))
+    np.testing.assert_array_equal(rs.multiply(x), want)
+    assert rs.passes == 1
+
+
+def test_replica_failure_fallback_mid_run(replica_paths, small_valued,
+                                          store_path):
+    """A replica dying mid-scan is routed around: the multiply retries on
+    the next copy, returns identical bits, and the router marks the dead
+    replica unhealthy for subsequent waves."""
+    rng = np.random.default_rng(10)
+    x = rng.standard_normal((small_valued.n_cols, 2)).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x)
+    rs = ReplicaSet(TileStore.open_replicas(replica_paths),
+                    SEMConfig(chunk_batch=BATCH))
+    victim = rs.router.ranked()[0]
+    calls = {"n": 0}
+    real = rs.execs[victim].store.read_batch_raw
+
+    def dying(start, count):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise OSError("replica removed mid-run")
+        return real(start, count)
+
+    rs.execs[victim].store.read_batch_raw = dying
+    np.testing.assert_array_equal(rs.multiply(x), want)
+    assert not rs.router.states[victim].healthy
+    assert rs.router.states[victim].failures == 1
+    assert victim not in rs.router.ranked()
+    np.testing.assert_array_equal(rs.multiply(x), want)  # keeps serving
+    assert calls["n"] == 3  # the dead replica was never touched again
+    rs.router.restore(victim)
+    assert victim in rs.router.ranked()
+
+
+def test_replica_routing_prefers_fast_idle_copies(replica_paths):
+    rs = ReplicaSet(TileStore.open_replicas(replica_paths),
+                    SEMConfig(chunk_batch=BATCH))
+    nb = rs.store.nbytes
+    rs.router.complete(0, nb, 1.0)     # 1x bandwidth
+    rs.router.complete(1, nb, 0.25)    # 4x bandwidth -> best
+    rs.router.complete(2, nb, 0.5)     # 2x
+    assert rs.router.ranked() == [1, 2, 0]
+    rs.router.begin(1)                 # queue depth counts against it
+    rs.router.begin(1)
+    assert rs.router.ranked()[0] == 2
+    rs.router.end(1)
+    rs.router.end(1)
+
+
+def test_router_first_touch_measures_every_replica(replica_paths,
+                                                   small_valued, store_path):
+    """An unmeasured replica ranks first, so even a serial caller exercises
+    (and measures) every copy instead of pinning all traffic to replica 0."""
+    rng = np.random.default_rng(15)
+    x = rng.standard_normal((small_valued.n_cols, 2)).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x)
+    rs = ReplicaSet(TileStore.open_replicas(replica_paths),
+                    SEMConfig(chunk_batch=BATCH))
+    for _ in range(len(rs.execs)):
+        np.testing.assert_array_equal(rs.multiply(x), want)
+    assert all(s.scans == 1 and s.ewma_bps > 0 for s in rs.router.states)
+
+
+def test_sharded_scheduler_over_replica_set_uses_copies(replica_paths,
+                                                        small_valued,
+                                                        store_path):
+    """sharded=N over a ReplicaSet spreads the shards across the replica
+    copies (not N shards contending for the primary spindle) and still
+    serves the single-scan bits."""
+    rng = np.random.default_rng(16)
+    x = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x[:, None])[:, 0]
+    rs = ReplicaSet(TileStore.open_replicas(replica_paths),
+                    SEMConfig(chunk_batch=BATCH))
+    with SharedScanScheduler(rs, use_cache=False, sharded=3) as sched:
+        assert {s.path for s in sched.sharded.shards} == set(replica_paths)
+        req = sched.query(x)
+        sched.run()
+    np.testing.assert_array_equal(req.result, want)
+
+
+def test_boundary_clock_ticks_through_sliced_scans(store_path, small_valued):
+    """The probe hook rides vertical slices: an oversized tenant's
+    ceil(width/budget) passes all advance the boundary clock."""
+    n = small_valued.n_cols
+    sem = fresh_sem(store_path)
+    sem.cfg.memory_budget_bytes = (sem.stream_overhead_bytes()
+                                   + 3 * sem.column_bytes()
+                                   + sem.column_bytes() // 2)
+    seen = []
+    sched = SharedScanScheduler(sem, use_cache=False,
+                                boundary_probe=lambda s, b: seen.append(1))
+    req = sched.submit(MultiplyRequest(np.ones((n, 7), np.float32)))
+    rep = sched.run_pass()
+    assert rep.scan_passes == 3                      # ceil(7/3) slices
+    assert sched.boundary_clock == 3 * sem.n_batches == len(seen)
+    assert req.first_result_clock == sched.boundary_clock
+    np.testing.assert_array_equal(
+        req.result, fresh_sem(store_path).multiply(np.ones((n, 7),
+                                                           np.float32)))
+
+
+def test_replica_validation_rejects_mismatch(replica_paths, small_graph,
+                                             tmp_path):
+    other = to_chunked(small_graph, T=512, C=128)
+    other_path = str(tmp_path / "other")
+    TileStore.write(other_path, other, binary=True)
+    with pytest.raises(ValueError, match="header"):
+        TileStore.open_replicas([replica_paths[0], other_path])
+    validate_replicas(TileStore.open_replicas(replica_paths))  # sanity
+
+
+def test_scheduler_over_replica_set(replica_paths, small_valued, store_path):
+    """The serving scheduler runs unchanged over a ReplicaSet — including
+    elastic mid-pass admission through the routed executor."""
+    rng = np.random.default_rng(12)
+    x = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x[:, None])[:, 0]
+    probe, box = one_shot_probe(x, at_clock=4)
+    rs = ReplicaSet(TileStore.open_replicas(replica_paths),
+                    SEMConfig(chunk_batch=BATCH))
+    sched = SharedScanScheduler(rs, use_cache=False, elastic=True,
+                                boundary_probe=probe)
+    sched.submit(PowerIterationSession(
+        rng.standard_normal(rs.n_cols).astype(np.float32), tol=0.0,
+        max_iter=4))
+    sched.run()
+    req = box["req"]
+    assert req is not None and req.done
+    np.testing.assert_array_equal(req.result, want)
+    assert sum(r.completed_midpass for r in sched.reports) == 1
+
+
+def test_sharded_scan_over_replicas_bit_identical(replica_paths, small_valued,
+                                                  store_path):
+    """Shards of one wave fan out across replica copies (shard i streams
+    copy i mod N) and still concatenate to the single-scan bits."""
+    rng = np.random.default_rng(13)
+    x = rng.standard_normal((small_valued.n_cols, 3)).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x)
+    stores = TileStore.open_replicas(replica_paths)
+    with ShardedSEMSpMM(stores[0], n_shards=4,
+                        config=SEMConfig(chunk_batch=BATCH),
+                        replicas=stores[1:]) as sh:
+        np.testing.assert_array_equal(sh.multiply(x), want)
+        # the shards really did spread over the copies: the primary store's
+        # own counters only saw its share of the scan
+        assert {s.path for s in sh.shards} == set(replica_paths)
+        assert sh.io_stats.bytes_read == stores[0].nbytes

@@ -89,7 +89,6 @@ def test_semiring_min_plus(m, t):
         np.float32)
     ct = to_chunked(m, T=t, C=16)
     got = np.asarray(spmm_chunked(ct, jnp.asarray(x), semiring="min_plus"))
-    dense = m.to_dense(np.float32)
     want = np.full((m.n_rows, 2), np.inf, np.float32)
     for r, c, v in zip(m.rows, m.cols, m.vals):
         want[r] = np.minimum(want[r], v + x[c])

@@ -1,0 +1,78 @@
+"""The CI benchmark regression gate must trip on a synthetic >20%
+regression (acceptance criterion) and stay quiet inside the tolerance."""
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # benchmarks/ is a repo-root package, like the CI job
+from benchmarks.check_regression import compare, main  # noqa: E402
+
+
+def summary(speedup=1.6, h2d=26.0):
+    return {
+        "p": 8,
+        "engines": [
+            {"tier": t, "engine": e, "t_pass_ms": 100.0, "rows_per_s": 1e5,
+             "mb_streamed_per_pass": 21.6, "h2d_mb_per_pass": h2d,
+             "overlap_pct": 90.0, "passes": 5}
+            for t in ("page-cache", "emulated-ssd")
+            for e in ("serial", "overlapped", "sharded-4")],
+        "overlap_speedup_emulated": speedup,
+        "h2d_index_saving_mb": 11.0,
+    }
+
+
+def test_gate_passes_within_tolerance():
+    base = summary()
+    ok = summary(speedup=1.6 * 0.85, h2d=26.0 * 1.15)  # 15% drift: fine
+    assert compare(ok, base, tolerance=0.2) == []
+
+
+def test_gate_trips_on_speedup_regression():
+    problems = compare(summary(speedup=1.6 * 0.75), summary(), tolerance=0.2)
+    assert len(problems) == 1 and "overlap speedup" in problems[0]
+
+
+def test_gate_trips_on_h2d_regression():
+    problems = compare(summary(h2d=26.0 * 1.25), summary(), tolerance=0.2)
+    assert problems and all("h2d bytes/pass" in p for p in problems)
+    assert len(problems) == 6  # every engine row regressed
+
+
+def test_gate_ignores_new_engine_variants():
+    fresh = summary()
+    fresh["engines"].append(dict(fresh["engines"][0], engine="brand-new",
+                                 h2d_mb_per_pass=999.0))
+    assert compare(fresh, summary(), tolerance=0.2) == []
+
+
+def test_main_exit_codes_and_mode_matching(tmp_path):
+    base_path, fresh_path = tmp_path / "base.json", tmp_path / "fresh.json"
+    base_path.write_text(json.dumps({"quick": summary(),
+                                     "full": summary(speedup=2.0)}))
+
+    # >20% synthetic regression -> nonzero exit
+    fresh_path.write_text(json.dumps({"quick": summary(speedup=1.0)}))
+    assert main([str(fresh_path), str(base_path), "--mode", "quick"]) == 1
+    # healthy run -> zero exit
+    fresh_path.write_text(json.dumps({"quick": summary()}))
+    assert main([str(fresh_path), str(base_path), "--mode", "quick"]) == 0
+    # the quick run must not be judged against the full trajectory: 1.6
+    # would fail the full baseline (2.0) but compares against quick (1.6)
+    fresh_path.write_text(json.dumps({"quick": summary(speedup=1.6)}))
+    assert main([str(fresh_path), str(base_path), "--mode", "quick"]) == 0
+    # asking for a mode the baseline lacks is an explicit error
+    lonely = tmp_path / "lonely.json"
+    lonely.write_text(json.dumps({"full": summary()}))
+    with pytest.raises(SystemExit, match="quick"):
+        main([str(fresh_path), str(lonely), "--mode", "quick"])
+
+
+def test_legacy_flat_schema_reads_as_full(tmp_path):
+    base_path, fresh_path = tmp_path / "b.json", tmp_path / "f.json"
+    base_path.write_text(json.dumps(summary()))            # pre-mode schema
+    fresh_path.write_text(json.dumps({"full": summary(speedup=1.0)}))
+    assert main([str(fresh_path), str(base_path), "--mode", "full"]) == 1
+    fresh_path.write_text(json.dumps({"full": summary()}))
+    assert main([str(fresh_path), str(base_path), "--mode", "full"]) == 0

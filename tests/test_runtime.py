@@ -309,6 +309,50 @@ def test_prewarmed_cache_survives_budget_squeeze():
     assert cache.get((2, 1)) == ("c",)
 
 
+def test_partitioned_cache_isolates_shard_budgets():
+    """A fast shard hammering its slice can never evict a slow shard's
+    pins: budgets are per-shard, not shared."""
+    from repro.runtime import PartitionedHotChunkCache
+    part = PartitionedHotChunkCache(2, budget_bytes=200)  # 100 per shard
+    slow, fast = part.shard(0), part.shard(1)
+    cold = ("slow-batch",)
+    slow.get((0, 1))
+    assert slow.offer((0, 1), cold, 90)
+    # the fast shard gets arbitrarily hot; its offers compete only with its
+    # own (empty) slice and must not touch the slow shard's pin
+    for _ in range(50):
+        fast.get((9, 1))
+    assert fast.offer((9, 1), ("hot",), 150) is False  # over ITS 100-byte slice
+    assert fast.offer((9, 1), ("hot",), 80)
+    assert slow.get((0, 1)) is cold
+    assert part.pinned_bytes == 170 and len(part) == 2
+    part.set_budget(160)  # 80 each: both shards squeeze independently
+    assert slow.get((0, 1)) is None          # 90 > 80 -> evicted
+    assert fast.get((9, 1)) == ("hot",)      # 80 <= 80 -> survives
+
+
+def test_sharded_scheduler_uses_partitioned_cache(store_path, small_valued):
+    """The sharded serving path splits the hot-chunk budget per shard and
+    still serves bit-identical results with cache hits on a repeat pass."""
+    from repro.runtime import PartitionedHotChunkCache
+    rng = np.random.default_rng(21)
+    x0 = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    sem = fresh_sem(store_path)
+    sem.cfg.memory_budget_bytes = 1 << 30
+    with SharedScanScheduler(sem, use_cache=True, sharded=2) as sched:
+        assert isinstance(sched.cache, PartitionedHotChunkCache)
+        s = sched.submit(PowerIterationSession(x0.copy(), tol=0.0,
+                                               max_iter=4))
+        sched.run()
+        assert sched.cache.stats.hits > 0
+        st = sched.sharded.io_stats
+        assert st.cache_hit_bytes > 0
+    plain = SharedScanScheduler(fresh_sem(store_path), use_cache=False)
+    p = plain.submit(PowerIterationSession(x0.copy(), tol=0.0, max_iter=4))
+    plain.run()
+    np.testing.assert_array_equal(s.result, p.result)
+
+
 def test_scheduler_adopts_prewarmed_cache(store_path, small_valued):
     """A cache attached via SEMSpMM(cache=...) is reused, not clobbered."""
     from repro.core.sem import SEMConfig

@@ -94,7 +94,7 @@ def test_buffer_pool_reuse():
     b2 = pool.get(50)  # reused, not reallocated
     assert b2 is b1
     assert pool.allocations == 1
-    b3 = pool.get(200)  # too small -> resized (new allocation), paper §3.5
+    pool.get(200)  # too small -> resized (new allocation), paper §3.5
     assert pool.allocations == 2
 
 
