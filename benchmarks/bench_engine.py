@@ -18,7 +18,9 @@ Asserted claims:
   quick mode, where the pass is only a handful of batches);
 * host->device *index* bytes exactly halved by the device-side uint16
   decode (IOStats.h2d_bytes delta == 4 bytes/lane * lanes streamed);
-* 4-way sharded scans are bit-identical to the single-scan pass.
+* 4-way sharded scans AND the Pallas wave-kernel backend (``engine:
+  pallas`` rows — gather variant, interpret mode on this container) are
+  bit-identical to the single-scan pass.
 
 ``REPRO_BENCH_QUICK=1`` (set by ``benchmarks.run --quick``) shrinks the
 graph and batch sizes to a seconds-long run — the CI regression gate's
@@ -53,6 +55,11 @@ else:
 
 SERIAL = dict(decode_on_device=False, overlap=False, fixed_shape=False,
               use_async=False)
+# The Pallas wave-kernel backend, pinned to the gather variant (what
+# pick_variant chooses at the paper's 16K tiles, and the variant that is
+# bit-identical to the _batch_step engine) so full and quick modes measure
+# the same code path; interpret mode per the CPU-container protocol.
+PALLAS = dict(use_pallas=True, pallas_variant="gather")
 
 
 class EmulatedSSDStore(TileStore):
@@ -112,6 +119,7 @@ def bench() -> List[Dict]:
         for name, cfg_kw, sharded in (
                 ("serial", SERIAL, 0),
                 ("overlapped", {}, 0),
+                ("pallas", PALLAS, 0),
                 ("sharded-4", {}, 4)):
             st = _open(path, emulated, spb)
             cfg = SEMConfig(chunk_batch=BATCH, **cfg_kw)
@@ -159,10 +167,12 @@ def bench() -> List[Dict]:
     saved = st_i32.stats.h2d_bytes - st_u16.stats.h2d_bytes
     assert saved == 4 * lanes, (saved, 4 * lanes)
 
-    # sharded bit-identity (both tiers)
+    # sharded + pallas bit-identity (both tiers)
     for tier in ("page-cache", "emulated-ssd"):
-        a, b = results[(tier, "overlapped")], results[(tier, "sharded-4")]
-        np.testing.assert_array_equal(a["out"], b["out"])
+        a = results[(tier, "overlapped")]
+        for other in ("sharded-4", "pallas"):
+            np.testing.assert_array_equal(a["out"],
+                                          results[(tier, other)]["out"])
 
     for r in rows:
         r["overlap_speedup_emulated"] = speedup

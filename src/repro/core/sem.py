@@ -34,7 +34,17 @@ carried through every stage, not just the disk read):
   ``overlap_batches`` expose the traffic and overlap for benchmarks;
 * **fixed-shape batches** — the tail batch is padded to ``chunk_batch``
   with zero-nnz chunks so each jitted step compiles exactly once per
-  (C, T, p).
+  (C, T, p);
+* **pluggable device step** — ``use_pallas=True`` swaps the scan-based
+  batch step for the Pallas wave kernel
+  (:func:`repro.kernels.ops.spmm_pallas_batch`): first-of-tile-row flags
+  are recomputed in-kernel from the scalar-prefetched meta, tail pads are
+  skipped via a staged ``n_valid`` count, and the kernel accumulates
+  straight into the donated output blocks it aliases — the gather variant
+  is bit-identical to the scan step, and both share the same staging,
+  overlap, h2d accounting, boundary hooks, and sharding.
+  ``pallas_variant`` picks gather/VPU vs densify/MXU (``pick_variant`` by
+  default); ``pallas_interpret=False`` compiles for a real TPU.
 
 The pass is *elastic*: ``multiply(x, boundary_hook=...)`` invokes the hook
 at every chunk-batch boundary with a :class:`PassBoundary` through which a
@@ -63,7 +73,11 @@ class SEMConfig:
     chunk_batch: int = 256        # chunks per I/O (large sequential reads)
     prefetch: int = 2             # async prefetch depth
     use_async: bool = True        # paper's async I/O + polling
-    use_pallas: bool = False      # interpret-mode Pallas kernel (slow on CPU)
+    use_pallas: bool = False      # Pallas wave kernel as the engine backend
+    pallas_variant: Optional[str] = None  # "gather" | "mxu";
+    #                               None -> kernels.ops.pick_variant(T)
+    pallas_interpret: bool = True  # interpret mode (the CPU container's
+    #                               protocol); False compiles for the TPU
     decode_on_device: bool = True  # ship uint16 indices, upcast on device
     overlap: bool = True          # stage batch k+1 while batch k computes
     fixed_shape: bool = True      # pad the tail batch to chunk_batch
@@ -217,18 +231,34 @@ class SEMSpMM:
             self.store.stats.add_h2d(x_pad.nbytes)
         return x_pad
 
+    def _lane_pad(self, p: int) -> int:
+        """Extra dense columns needed to lane-align the Pallas operand:
+        the compiled TPU target wants the block width to be a multiple of
+        the 128-lane register width, while interpret mode (and the scan
+        step) accept any p.  Applied on device, once per pass — the padding
+        columns are zeros, contribute zeros, and are sliced off before the
+        result leaves the engine, so they are invisible to callers (and to
+        ``IOStats``: nothing extra crosses the host->device boundary)."""
+        if not self.cfg.use_pallas or self.cfg.pallas_interpret:
+            return 0
+        from repro.kernels.ops import LANE
+        return (-p) % LANE
+
     def _pad_tail(self, batches: Iterator[Tuple[np.ndarray, ...]]
-                  ) -> Iterator[Tuple[np.ndarray, ...]]:
+                  ) -> Iterator[Tuple[Tuple[np.ndarray, ...], int]]:
         """Pad a short tail batch to ``chunk_batch`` chunks so every jitted
-        step sees one shape.  Pad chunks replicate the last chunk's tile
-        coordinates with nnz = 0 and zero entries — their contribution is
-        identically zero and no first-of-tile-row flag is disturbed."""
+        step sees one shape; yields ``(batch, n_valid)`` with the real chunk
+        count.  Pad chunks replicate the last chunk's tile coordinates with
+        nnz = 0 and zero entries — their contribution is identically zero,
+        no first-of-tile-row flag is disturbed, and (the Pallas kernel's
+        window invariant) they never open an output block the batch's real
+        chunks did not."""
         B = self.cfg.chunk_batch
         for batch in batches:
             meta = batch[0]
             n = meta.shape[0]
             if n == B or n == 0:
-                yield batch
+                yield batch, n
                 continue
             meta_p = np.zeros((B, 4), meta.dtype)
             meta_p[:n] = meta
@@ -243,46 +273,62 @@ class SEMSpMM:
                 a_p = np.zeros((B,) + a.shape[1:], a.dtype)
                 a_p[:n] = a
                 padded.append(a_p)
-            yield tuple(padded)
+            yield tuple(padded), n
 
-    def _stage(self, batch: Tuple[np.ndarray, ...]) -> tuple:
+    @staticmethod
+    def _with_valid(batches: Iterator[Tuple[np.ndarray, ...]]
+                    ) -> Iterator[Tuple[Tuple[np.ndarray, ...], int]]:
+        """No tail padding: every chunk of every batch is valid."""
+        for batch in batches:
+            yield batch, batch[0].shape[0]
+
+    def _stage(self, batch: Tuple[np.ndarray, ...], n_valid: int) -> tuple:
         """Issue the host->device transfer for one batch (async — returns
         immediately; overlapped with the in-flight kernel when the engine
         runs a batch ahead).  Counts the actual bytes shipped: uint16
         indices cost half the decoded int32, binary matrices ship no
-        values.  The Pallas step consumes the *host* meta (it recomputes
-        first-flags on the CPU), so meta is not staged on that path."""
+        values.  ``meta`` is staged like every other plane on every path;
+        the Pallas step additionally ships the batch's valid-chunk count
+        (one int32 — its 4 bytes are counted too, so ``IOStats.h2d_bytes``
+        stays equal to what actually crossed to the device)."""
         meta, rest = batch[0], batch[1:]
         dev_rest = tuple(None if a is None else jax.device_put(a, self.device)
                          for a in rest)
+        dev_meta = jax.device_put(meta, self.device)
         if self.cfg.use_pallas:
-            staged, shipped = (meta,) + dev_rest, dev_rest
+            nv = jax.device_put(np.asarray([n_valid], np.int32), self.device)
+            staged = (dev_meta, nv) + dev_rest
         else:
-            dev_meta = jax.device_put(meta, self.device)
-            staged = shipped = (dev_meta,) + dev_rest
+            staged = (dev_meta,) + dev_rest
         self.store.stats.add_h2d(
-            sum(a.nbytes for a in shipped if a is not None))
+            sum(a.nbytes for a in staged if a is not None))
         return staged
 
     def _make_step(self, binary_raw: bool):
-        """Bind the kernel for this pass: Pallas wave kernel, binary raw
-        step (no values), or the general scan step.  ``x_pad`` is threaded
-        through per call (a boundary hook may swap in a same-shape update
-        mid-pass without touching the jit entry)."""
+        """Bind the kernel for this pass: Pallas wave kernel (gather or MXU
+        variant, ``pick_variant`` by default), binary raw step (no values),
+        or the general scan step.  ``x_pad`` is threaded through per call
+        (a boundary hook may swap in a same-shape update mid-pass without
+        touching the jit entry).  Every path consumes only staged device
+        arrays — the Pallas step recomputes first-flags in-kernel, so no
+        host meta survives past :meth:`_stage`."""
         if self.cfg.use_pallas:
-            from repro.kernels.ops import spmm_pallas_batch
+            from repro.kernels.ops import pick_variant, spmm_pallas_batch
+            variant = self.cfg.pallas_variant or pick_variant(self.T)
+            interpret = self.cfg.pallas_interpret
 
-            def step(staged, host_meta, x_pad, out):
-                _, rows, cols, vals = staged
-                return spmm_pallas_batch(host_meta, rows, cols, vals,
-                                         x_pad, out, self.T)
+            def step(staged, x_pad, out):
+                meta, nv, rows, cols, vals = staged
+                return spmm_pallas_batch(meta, nv, rows, cols, vals,
+                                         x_pad, out, T=self.T,
+                                         variant=variant, interpret=interpret)
         elif binary_raw:
-            def step(staged, host_meta, x_pad, out):
+            def step(staged, x_pad, out):
                 meta, rows, cols, _ = staged
                 return _batch_step_binary(meta, rows, cols, x_pad, out,
                                           self.T)
         else:
-            def step(staged, host_meta, x_pad, out):
+            def step(staged, x_pad, out):
                 meta, rows, cols, vals = staged
                 return _batch_step(meta, rows, cols, vals, x_pad, out, self.T)
         return step
@@ -307,30 +353,30 @@ class SEMSpMM:
                                      prefetch=self.cfg.prefetch,
                                      use_async=self.cfg.use_async,
                                      cache=self.cache, raw=raw))
-        if self.cfg.fixed_shape:
-            batches = self._pad_tail(batches)
+        batches = (self._pad_tail(batches) if self.cfg.fixed_shape
+                   else self._with_valid(batches))
         binary_raw = raw and self.store.header["binary"]
         step = self._make_step(binary_raw)
         stats = self.store.stats
         B = self.cfg.chunk_batch
         if not self.cfg.overlap:
-            for i, batch in enumerate(batches):
+            for i, (batch, nv) in enumerate(batches):
                 x_pad = self._boundary(hook, i * B, x_pad, out)
-                out = step(self._stage(batch), batch[0], x_pad, out)
+                out = step(self._stage(batch, nv), x_pad, out)
         else:
             pending = None
-            for i, batch in enumerate(batches):
-                staged = self._stage(batch)  # stage k+1 ...
+            for i, (batch, nv) in enumerate(batches):
+                staged = self._stage(batch, nv)  # stage k+1 ...
                 if pending is not None:
-                    j, st_j, meta_j = pending
+                    j, st_j = pending
                     x_pad = self._boundary(hook, j * B, x_pad, out)
-                    out = step(st_j, meta_j, x_pad, out)  # ... while k stages
+                    out = step(st_j, x_pad, out)  # ... while k stages
                     stats.add_overlap()
-                pending = (i, staged, batch[0])
+                pending = (i, staged)
             if pending is not None:
-                j, st_j, meta_j = pending
+                j, st_j = pending
                 x_pad = self._boundary(hook, j * B, x_pad, out)
-                out = step(st_j, meta_j, x_pad, out)
+                out = step(st_j, x_pad, out)
         self.passes += 1
         return out
 
@@ -352,15 +398,18 @@ class SEMSpMM:
         pays the zero-fill)."""
         p = x.shape[1]
         x_pad = self._prepare_x(x)
-        if acc is None or acc.shape[2] != p:
-            acc = jnp.zeros((self.n_tile_rows, self.T, p), jnp.float32)
+        pw = p + self._lane_pad(p)
+        if pw != p:
+            x_pad = jnp.pad(x_pad, ((0, 0), (0, pw - p)))
+        if acc is None or acc.shape[2] != pw:
+            acc = jnp.zeros((self.n_tile_rows, self.T, pw), jnp.float32)
             if self.device is not None:
                 acc = jax.device_put(acc, self.device)
         else:
             acc = _zero_acc(acc)
         out = self._stream_pass(x_pad, acc, hook=boundary_hook)
         out.block_until_ready()   # only here — never inside the pass
-        result = np.asarray(out.reshape(-1, p)[: self.n_rows])
+        result = np.asarray(out.reshape(-1, pw)[: self.n_rows, :p])
         return result, out
 
     # -- regime 3: vertical partitioning ------------------------------------

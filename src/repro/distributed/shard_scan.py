@@ -26,6 +26,13 @@ wave across N copies of the matrix (per-SSD/per-NUMA paths — each shard
 streams a different spindle), and a partitioned hot-chunk cache
 (``cache.shard(i)``) gives every shard its own pin budget so a fast shard
 cannot evict a slow shard's hot batches.
+
+The per-shard compute step is whatever the shared :class:`SEMConfig`
+selects — including ``use_pallas=True``, where every shard drives its own
+Pallas wave kernel over its rebased tile rows (the shard's meta is already
+in shard-frame coordinates, so the kernel's accumulator covers exactly the
+shard's row blocks); the concatenated result stays bit-identical to the
+single-scan Pallas pass.
 """
 from __future__ import annotations
 
@@ -92,9 +99,18 @@ class ShardedSEMSpMM:
     def n_shards(self) -> int:
         return len(self.execs)
 
-    def multiply(self, x: np.ndarray) -> np.ndarray:
+    def multiply(self, x: np.ndarray, *, boundary_hook=None) -> np.ndarray:
         """A @ X as ``n_shards`` concurrent partial scans; the per-shard row
-        blocks concatenate (in partition order) to the full result."""
+        blocks concatenate (in partition order) to the full result.
+
+        ``boundary_hook`` is rejected loudly: shards run their chunk-batch
+        boundaries concurrently, so there is no single pass-wide boundary
+        clock for an elastic hook to hang off (scale an elastic wave with
+        replicas instead — see the scheduler docstring)."""
+        if boundary_hook is not None:
+            raise ValueError(
+                "ShardedSEMSpMM cannot run a boundary_hook: shards stream "
+                "concurrently; use a ReplicaSet for elastic waves")
         # Pad and stage X once; every shard's ``_prepare_x`` then takes the
         # already-on-device skip path (and merely re-pins to its own device
         # when sharded over devices — the one transfer that must repeat).

@@ -1,15 +1,16 @@
 """jit'd wrappers and per-tile dispatch for the SpMM Pallas kernels."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.formats import ChunkedTiles
-from repro.kernels.sem_spmm import spmm_tiles
+from repro.kernels.sem_spmm import spmm_tiles, spmm_tiles_acc
 
-LANE = 128  # TPU lane width; interpret mode accepts any p, the TPU target
-SUBLANE = 8  # wants p padded to a lane multiple.
+LANE = 128   # TPU lane width: the compiled target wants p padded to it.
+SUBLANE = 8  # Interpret mode accepts any p; pad to the sublane only.
 
 
 def _pad_p(x: jax.Array, multiple: int) -> jax.Array:
@@ -18,7 +19,7 @@ def _pad_p(x: jax.Array, multiple: int) -> jax.Array:
     return x if pad == 0 else jnp.pad(x, ((0, 0), (0, pad)))
 
 
-def pick_variant(ct: ChunkedTiles) -> str:
+def pick_variant(T: int) -> str:
     """Per-matrix execution-path dispatch (the SCSR/COO hybrid analogue).
 
     Napkin math (v5e-class numbers): the MXU path spends ``2*C*T*p`` MACs per
@@ -27,17 +28,20 @@ def pick_variant(ct: ChunkedTiles) -> str:
     ~16 elem/cycle on the VPU -> ``C*p / 16`` cycles.  Crossover:
     ``2*T / 1e5 = 1/16``  =>  ``T ~ 3000``.  So the densify/MXU path wins for
     small tiles and the gather path for the paper's 16K tiles.  Threshold set
-    at 2048 (hardware-aligned); re-measured structurally in §Perf."""
-    return "mxu" if ct.T <= 2048 else "gather"
+    at 2048 (hardware-aligned); re-measured structurally in §Perf and in
+    EXPERIMENTS.md §"Gather vs MXU".  Takes the tile size ``T`` (the only
+    statistic the decision needs) so both the one-shot path (a ChunkedTiles
+    in memory) and the streaming engine (a TileStore header) can dispatch."""
+    return "mxu" if T <= 2048 else "gather"
 
 
 def spmm_pallas(ct: ChunkedTiles, x: jax.Array, variant: str | None = None,
                 interpret: bool = True) -> jax.Array:
     """out = A @ X via the Pallas kernel; A as ChunkedTiles, X (n, p)."""
-    variant = variant or pick_variant(ct)
+    variant = variant or pick_variant(ct.T)
     p = x.shape[1]
     x_pad = jnp.zeros((ct.padded_cols, p), x.dtype).at[: x.shape[0]].set(x)
-    x_pad = _pad_p(x_pad, SUBLANE)
+    x_pad = _pad_p(x_pad, SUBLANE if interpret else LANE)
     out = spmm_tiles(jnp.asarray(ct.meta), jnp.asarray(ct.row_local),
                      jnp.asarray(ct.col_local), jnp.asarray(ct.vals, x.dtype),
                      x_pad, T=ct.T, n_tile_rows=ct.n_tile_rows,
@@ -45,35 +49,25 @@ def spmm_pallas(ct: ChunkedTiles, x: jax.Array, variant: str | None = None,
     return out[: ct.n_rows, :p]
 
 
-def spmm_pallas_batch(meta: np.ndarray, rows, cols, vals,
-                      x_pad: jax.Array, out_blocks: jax.Array,
-                      T: int, variant: str = "gather") -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("T", "variant", "interpret"),
+                   donate_argnums=(6,))
+def spmm_pallas_batch(meta, n_valid, rows, cols, vals, x_pad, out_blocks,
+                      *, T: int, variant: str = "gather",
+                      interpret: bool = True) -> jax.Array:
     """SEM-streaming step: apply one chunk batch read from the slow tier and
-    accumulate into ``out_blocks`` (n_tile_rows, T, p).
+    accumulate into the donated ``out_blocks`` (n_tile_rows, T, p).
 
-    A batch may start mid-tile-row, so first-flags are recomputed within the
-    batch (on the host ``meta`` copy) and only tile rows present in the batch
-    are merged back.  ``rows``/``cols`` may be uint16 (host views or already
-    staged device arrays) — the upcast happens inside :func:`spmm_tiles`;
-    ``vals is None`` denotes a binary matrix, whose lane mask is synthesized
-    on device from the chunk nnz instead of being streamed.
-    """
+    The whole step is device-resident — the engine stages ``meta`` and the
+    batch's valid-chunk count ``n_valid`` like any other plane, and the
+    kernel (:func:`repro.kernels.sem_spmm.spmm_tiles_acc`) recomputes
+    first-of-tile-row flags, skips fixed-shape tail pads, seeds every
+    touched output window from the accumulator it aliases, and leaves
+    untouched tile rows alone.  ``rows``/``cols`` may be uint16 (upcast on
+    device); ``vals is None`` denotes a binary matrix whose lane mask is
+    synthesized on device from chunk nnz."""
     n_tile_rows, _, p = out_blocks.shape
-    meta = np.asarray(meta).copy()
-    meta[0, 2] = 1
-    meta[1:, 2] = (meta[1:, 0] != meta[:-1, 0]).astype(meta.dtype)
-    present = np.zeros(n_tile_rows, dtype=bool)
-    present[meta[:, 0]] = True
-
-    if vals is None:
-        C = rows.shape[1]
-        vals = (jnp.arange(C)[None, :]
-                < jnp.asarray(meta[:, 3:4])).astype(x_pad.dtype)
-    else:
-        vals = jnp.asarray(vals, x_pad.dtype)
-    res = spmm_tiles(jnp.asarray(meta), jnp.asarray(rows), jnp.asarray(cols),
-                     vals, x_pad, T=T,
-                     n_tile_rows=n_tile_rows, variant=variant)
-    res = res.reshape(n_tile_rows, T, p)
-    mask = jnp.asarray(present)[:, None, None]
-    return out_blocks + jnp.where(mask, res, 0.0)
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape(1)
+    acc = out_blocks.reshape(n_tile_rows * T, p)
+    out = spmm_tiles_acc(meta, n_valid, rows, cols, vals, x_pad, acc,
+                         T=T, variant=variant, interpret=interpret)
+    return out.reshape(n_tile_rows, T, p)

@@ -26,6 +26,27 @@ merged-write discipline, enforced by the pipeline structure.  The scalar-
 prefetched ``meta`` array is the static schedule that replaces the paper's
 dynamic task queue (DESIGN.md §2: LPT-balanced at build time).
 
+Each variant exists in two forms:
+
+* the **one-shot** kernels (:func:`spmm_tiles`) compute ``A @ X`` for a whole
+  matrix in one call.  The stored first-of-tile-row flag (``meta[:, 2]``)
+  zero-initializes each output block, so the output needs no prior content.
+* the **streaming accumulate** kernels (:func:`spmm_tiles_acc`) apply ONE
+  chunk batch of the semi-external pass and fold it into a running
+  accumulator.  Everything the engine's host shim used to do per batch now
+  happens inside the kernel: first-of-tile-row flags are recomputed from the
+  scalar-prefetched ``meta`` (a batch may start mid-tile-row, so the stored
+  flag is wrong and ``meta[:, 2]`` is ignored), the accumulator is both an
+  input (block-indexed like the output) and aliased to the output
+  (``input_output_aliases`` — tile rows the batch never touches keep their
+  accumulated content, visited rows start from it), padded tail chunks are
+  skipped via the scalar-prefetched ``n_valid`` count, and a binary matrix's
+  value lanes are synthesized from the chunk nnz (``meta[:, 3]``) instead of
+  being streamed at all.  ``n_valid`` — not a per-chunk nnz test — is the
+  pad gate because an *empty tile row's* real chunk also has nnz == 0 yet
+  must still run: it opens that row's output window, which must be
+  initialized from the accumulator before the pipeline writes it back.
+
 Lowering notes (TPU target): the gather (``jnp.take``) and scatter
 (``.at[].add``) on VMEM blocks lower to per-sublane dynamic gathers; on
 older TPU generations where arbitrary in-VMEM scatter is unsupported, the
@@ -43,6 +64,36 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 # ---------------------------------------------------------------------------
+# Per-chunk compute cores (shared by the one-shot and streaming bodies,
+# which differ only in how they scatter/merge the contribution)
+# ---------------------------------------------------------------------------
+def _gather_contrib(cols, x_ref, vals=None, mask=None):
+    """One chunk's (C, p) scaled gather: rows of the X block by column
+    index, scaled by values — or masked to the live lanes when a binary
+    matrix synthesizes its values on device."""
+    gathered = jnp.take(x_ref[...], cols, axis=0)     # (C, p) VMEM gather
+    if mask is not None:
+        return jnp.where(mask[:, None], gathered, 0.0)
+    return vals[:, None] * gathered
+
+
+def _mxu_blk(rows, cols, vals, x_ref, T: int):
+    """One chunk's dense (T, p) contribution on the MXU:
+    ``E_rᵀ · diag(v) · E_c @ X`` as two one-hot matmuls.  Padding lanes
+    carry val 0, so they contribute nothing."""
+    C = cols.shape[0]
+    # One-hot gather on the MXU: (C, T) @ (T, p).
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (C, T), 1)
+    e_c = (cols[:, None] == iota_t).astype(x_ref.dtype)
+    gathered = jnp.dot(e_c, x_ref[...],
+                       preferred_element_type=jnp.float32)
+    scaled = vals[:, None] * gathered
+    # One-hot scatter on the MXU: (T, C) @ (C, p).
+    e_r = (rows[:, None] == iota_t).astype(x_ref.dtype)
+    return jnp.dot(e_r.T, scaled, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # Kernel bodies
 # ---------------------------------------------------------------------------
 def _gather_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref):
@@ -52,12 +103,8 @@ def _gather_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    cols = cols_ref[0]                                # (C,) int32
-    rows = rows_ref[0]
-    vals = vals_ref[0]
-    gathered = jnp.take(x_ref[...], cols, axis=0)     # (C, p) VMEM gather
-    contrib = vals[:, None] * gathered
-    out_ref[...] = out_ref[...].at[rows].add(contrib)  # VMEM scatter-add
+    contrib = _gather_contrib(cols_ref[0], x_ref, vals=vals_ref[0])
+    out_ref[...] = out_ref[...].at[rows_ref[0]].add(contrib)  # VMEM scatter
 
 
 def _mxu_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref, *,
@@ -68,21 +115,82 @@ def _mxu_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    cols = cols_ref[0]
-    rows = rows_ref[0]
-    vals = vals_ref[0]
-    C = cols.shape[0]
-    # One-hot gather on the MXU: (C, T) @ (T, p). Padding lanes have val 0.
-    iota_t = jax.lax.broadcasted_iota(jnp.int32, (C, T), 1)
-    e_c = (cols[:, None] == iota_t).astype(x_ref.dtype)
-    gathered = jnp.dot(e_c, x_ref[...],
-                       preferred_element_type=jnp.float32)
-    scaled = vals[:, None] * gathered
-    # One-hot scatter on the MXU: (T, C) @ (C, p).
-    e_r = (rows[:, None] == iota_t).astype(x_ref.dtype)
-    out_ref[...] = out_ref[...] + jnp.dot(
-        e_r.T, scaled, preferred_element_type=jnp.float32
-    ).astype(out_ref.dtype)
+    blk = _mxu_blk(rows_ref[0], cols_ref[0], vals_ref[0], x_ref, T)
+    out_ref[...] = out_ref[...] + blk.astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Streaming accumulate kernel bodies (one chunk batch of the SEM pass)
+# ---------------------------------------------------------------------------
+def _in_batch_first(meta_ref, g):
+    """First-of-tile-row flag *within this batch*, recomputed on device from
+    the scalar-prefetched meta: the stored flag (``meta[:, 2]``) describes
+    the whole-matrix chunk sequence, but a streaming batch may start
+    mid-tile-row — its first chunk opens a window regardless."""
+    prev = meta_ref[jnp.maximum(g - 1, 0), 0]
+    return jnp.logical_or(g == 0, meta_ref[g, 0] != prev)
+
+
+def _merge_block(meta_ref, g, acc_ref, out_ref, blk):
+    """Fold one chunk's (T, p) contribution into the output window.  At the
+    first chunk of a tile row the window is seeded from the accumulator
+    block (``out_ref`` holds garbage until written — the alias guarantees
+    HBM content, not VMEM content); afterwards it accumulates in place,
+    mirroring the engine's ``out.at[m[0]].add(blk)`` bit for bit."""
+    first = _in_batch_first(meta_ref, g)
+
+    @pl.when(first)
+    def _seed():
+        out_ref[...] = acc_ref[...] + blk
+
+    @pl.when(jnp.logical_not(first))
+    def _accum():
+        out_ref[...] = out_ref[...] + blk
+
+
+def _live_lanes(meta_ref, g, C):
+    """Binary-matrix lane mask, synthesized on device: a lane is live iff
+    its index < the chunk's nnz (``meta[:, 3]``) — no value plane is ever
+    streamed or staged (TPU note: iota must be >= 2D, hence broadcasted)."""
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (C, 1), 0)[:, 0]
+    return lanes < meta_ref[g, 3]
+
+
+def _stream_gather_body(meta_ref, nv_ref, *refs, binary: bool):
+    if binary:
+        rows_ref, cols_ref, x_ref, acc_ref, out_ref = refs
+        vals_ref = None
+    else:
+        rows_ref, cols_ref, vals_ref, x_ref, acc_ref, out_ref = refs
+    g = pl.program_id(0)
+
+    @pl.when(g < nv_ref[0])
+    def _step():
+        cols = cols_ref[0]
+        if binary:
+            contrib = _gather_contrib(
+                cols, x_ref, mask=_live_lanes(meta_ref, g, cols.shape[0]))
+        else:
+            contrib = _gather_contrib(cols, x_ref, vals=vals_ref[0])
+        blk = jnp.zeros_like(out_ref).at[rows_ref[0]].add(contrib)
+        _merge_block(meta_ref, g, acc_ref, out_ref, blk)
+
+
+def _stream_mxu_body(meta_ref, nv_ref, *refs, T: int, binary: bool):
+    if binary:
+        rows_ref, cols_ref, x_ref, acc_ref, out_ref = refs
+        vals_ref = None
+    else:
+        rows_ref, cols_ref, vals_ref, x_ref, acc_ref, out_ref = refs
+    g = pl.program_id(0)
+
+    @pl.when(g < nv_ref[0])
+    def _step():
+        cols = cols_ref[0]
+        vals = (_live_lanes(meta_ref, g, cols.shape[0]).astype(x_ref.dtype)
+                if binary else vals_ref[0])
+        blk = _mxu_blk(rows_ref[0], cols, vals, x_ref, T)
+        _merge_block(meta_ref, g, acc_ref, out_ref, blk.astype(out_ref.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -102,6 +210,15 @@ def _grid_spec(n_chunks: int, C: int, T: int, p: int):
     )
 
 
+def _check_variant(variant: str) -> None:
+    """Fail loudly on a typo'd variant: the dispatch below would otherwise
+    silently fall through to the MXU path (and a caller expecting the
+    gather path's bit-exactness would chase float drift instead)."""
+    if variant not in ("gather", "mxu"):
+        raise ValueError(f"unknown kernel variant {variant!r}: "
+                         "expected 'gather' or 'mxu'")
+
+
 @functools.partial(jax.jit, static_argnames=("T", "n_tile_rows", "variant",
                                              "interpret"))
 def spmm_tiles(meta, row_local, col_local, vals, x_pad, *, T: int,
@@ -109,6 +226,7 @@ def spmm_tiles(meta, row_local, col_local, vals, x_pad, *, T: int,
                interpret: bool = True):
     """Run the chunked SpMM kernel.  ``x_pad`` is (n_tile_cols * T, p) with
     p padded to the lane width by the caller; returns (n_tile_rows * T, p)."""
+    _check_variant(variant)
     n_chunks, C = row_local.shape
     p = x_pad.shape[1]
     # Device-side decode: the engine ships the SCSR uint16 indices as-is;
@@ -124,3 +242,60 @@ def spmm_tiles(meta, row_local, col_local, vals, x_pad, *, T: int,
         out_shape=jax.ShapeDtypeStruct((n_tile_rows * T, p), x_pad.dtype),
         interpret=interpret,
     )(meta, row_local, col_local, vals, x_pad)
+
+
+def _stream_grid_spec(n_chunks: int, C: int, T: int, p: int, binary: bool):
+    """Like :func:`_grid_spec` plus a second scalar-prefetch operand
+    (``n_valid``) and the accumulator input, block-indexed exactly like the
+    output it aliases.  A binary matrix has no value plane at all."""
+    lane_spec = pl.BlockSpec((1, C), lambda g, m, nv: (g, 0))
+
+    def blk_of(col):
+        return pl.BlockSpec((T, p), lambda g, m, nv: (m[g, col], 0))
+    in_specs = [lane_spec, lane_spec]                    # rows, cols
+    if not binary:
+        in_specs.append(lane_spec)                       # vals
+    in_specs += [blk_of(1), blk_of(0)]                   # X block, acc block
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_chunks,),
+        in_specs=in_specs,
+        out_specs=blk_of(0),
+    )
+
+
+def spmm_tiles_acc(meta, n_valid, row_local, col_local, vals, x_pad, acc, *,
+                   T: int, variant: str = "gather", interpret: bool = True):
+    """One SEM chunk batch, fully device-resident: ``acc (n_tile_rows*T, p)
+    += A_batch @ x_pad``, returned with only the batch's tile rows changed.
+
+    ``meta`` is the scalar-prefetched schedule (stored first-flags ignored —
+    recomputed in-kernel), ``n_valid (1,) int32`` the count of real chunks
+    (the rest are the engine's fixed-shape tail pads, skipped entirely; a
+    pad replicates the last real chunk's tile coordinates so it never opens
+    an unseeded output window).  ``vals is None`` denotes a binary matrix
+    whose lanes are synthesized from chunk nnz; uint16 ``row_local`` /
+    ``col_local`` are upcast here, on device.  ``acc`` is aliased to the
+    output: callers hand it over (donate it) and use the result instead."""
+    _check_variant(variant)
+    n_chunks, C = row_local.shape
+    p = x_pad.shape[1]
+    row_local = row_local.astype(jnp.int32)
+    col_local = col_local.astype(jnp.int32)
+    binary = vals is None
+    body = (functools.partial(_stream_gather_body, binary=binary)
+            if variant == "gather"
+            else functools.partial(_stream_mxu_body, T=T, binary=binary))
+    operands = (meta, n_valid, row_local, col_local)
+    if not binary:
+        operands += (vals,)
+    operands += (x_pad, acc)
+    # The alias index counts the scalar-prefetch operands: acc is the last
+    # of `operands`.
+    return pl.pallas_call(
+        body,
+        grid_spec=_stream_grid_spec(n_chunks, C, T, p, binary),
+        out_shape=jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+        input_output_aliases={len(operands) - 1: 0},
+        interpret=interpret,
+    )(*operands)

@@ -47,6 +47,10 @@ The executor behind the scheduler may be a single :class:`SEMSpMM`, a
 copies — elastic mode composes with replicas (the hook survives replica
 failover) but not with ``sharded=`` (shards run their boundaries
 concurrently; use replicas to scale scan bandwidth for an elastic wave).
+The engine's compute step is equally interchangeable: a wave served
+through the Pallas wave kernel (``SEMConfig(use_pallas=True)``) delivers
+bit-identical results across all of the above, including mid-pass
+admission (``tests/test_elastic.py``).
 """
 from __future__ import annotations
 

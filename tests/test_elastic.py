@@ -57,12 +57,12 @@ def one_shot_probe(x, at_clock):
 
 
 def serve_midpass(store_path, x, *, elastic, at_clock=4, n_cols=None,
-                  **sched_kw):
+                  sem_cfg=None, **sched_kw):
     """One long-running tenant keeps passes flowing; ``x`` arrives mid-pass
     via the probe.  Returns (request, scheduler)."""
     rng = np.random.default_rng(11)
     probe, box = one_shot_probe(x, at_clock)
-    sem = fresh_sem(store_path)
+    sem = fresh_sem(store_path, **(sem_cfg or {}))
     sched = SharedScanScheduler(sem, use_cache=False, elastic=elastic,
                                 boundary_probe=probe, **sched_kw)
     sched.submit(PowerIterationSession(
@@ -143,6 +143,27 @@ def test_rolling_iterative_session_matches_plain_run(store_path,
     assert rolled.residuals == plain.residuals
     assert rolled.eigenvalue == plain.eigenvalue
     np.testing.assert_array_equal(rolled.result, plain.result)
+
+
+def test_midpass_admission_bit_identical_on_pallas(store_path, small_valued):
+    """The elastic wave rides the Pallas engine backend unchanged: a tenant
+    admitted inside an in-flight Pallas pass (stitched prefix + suffix) gets
+    the same bits as the _batch_step engine's elastic path and as a
+    dedicated multiply — the PassBoundary protocol (shape-preserving column
+    writes, blocking accumulator prefix reads) is backend-agnostic."""
+    pallas_cfg = dict(use_pallas=True, pallas_variant="gather")
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x[:, None])[:, 0]
+    req_p, sched_p = serve_midpass(store_path, x, elastic=True,
+                                   sem_cfg=pallas_cfg)
+    req_d, _ = serve_midpass(store_path, x, elastic=True)
+    assert req_p is not None and req_p.done
+    np.testing.assert_array_equal(req_p.result, want)
+    np.testing.assert_array_equal(req_p.result, req_d.result)
+    assert req_p.first_result_clock == req_d.first_result_clock
+    assert sum(r.admitted_midpass for r in sched_p.reports) == 1
+    assert sum(r.completed_midpass for r in sched_p.reports) == 1
 
 
 def test_elastic_without_arrivals_matches_classic(store_path, small_valued):

@@ -205,6 +205,168 @@ def test_overlap_batches_counted(valued_path, x8):
     assert serial.store.stats.overlap_batches == 0
 
 
+# -- the Pallas engine backend ------------------------------------------------
+def pfresh(path, **cfg):
+    """A Pallas-backed engine pinned to the gather variant — the one that is
+    bit-identical to the ``_batch_step`` oracle (the MXU variant reassociates
+    sums through its matmuls, so it gets allclose coverage instead)."""
+    cfg.setdefault("pallas_variant", "gather")
+    return fresh(path, use_pallas=True, **cfg)
+
+
+def test_pallas_engine_bit_exact_valued(valued_path, x8):
+    """use_pallas=True is a drop-in engine backend: same bits as the
+    _batch_step engine (and hence the oracle) on the default pipeline —
+    overlap + device decode + fixed-shape padded tail."""
+    np.testing.assert_array_equal(pfresh(valued_path).multiply(x8),
+                                  fresh(valued_path).multiply(x8))
+
+
+def test_pallas_engine_feature_matrix(valued_path, x8):
+    """Bit-identity holds across every engine ablation axis the PR 2/3
+    stack serves through: overlap on/off, fixed-shape tail on/off, host
+    decode, sync reads."""
+    want = fresh(valued_path).multiply(x8)
+    for kw in (dict(overlap=False), dict(fixed_shape=False),
+               dict(decode_on_device=False), dict(use_async=False)):
+        np.testing.assert_array_equal(pfresh(valued_path, **kw).multiply(x8),
+                                      want, err_msg=repr(kw))
+
+
+def test_pallas_engine_bit_exact_binary(binary_path, x8):
+    """Binary raw path: the kernel synthesizes the lane mask from chunk nnz
+    on device — no value plane is streamed, staged, or materialized."""
+    np.testing.assert_array_equal(pfresh(binary_path).multiply(x8),
+                                  fresh(binary_path).multiply(x8))
+
+
+def test_pallas_padded_tail_leaves_foreign_rows_alone(valued_path, x8):
+    """Regression (the padded-tail ``present`` bug): a short tail batch's
+    pad chunks must not touch any tile row its real chunks do not — in
+    particular not tile row 0, which the old host-side present-mask path
+    could mark for every short tail.  The tail batch here covers only the
+    store's last tile rows, so row 0's block must come out bit-identical."""
+    sem = pfresh(valued_path)
+    n, B = sem.store.n_chunks, BATCH
+    tail_rows = np.unique(
+        sem.store.chunk_tile_rows()[(n // B) * B:])
+    assert n % B != 0 and 0 not in tail_rows  # the premise
+    want = fresh(valued_path).multiply(x8)
+    got = sem.multiply(x8)
+    np.testing.assert_array_equal(got[: sem.T], want[: sem.T])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_mxu_variant_allclose(valued_path, ct, x8):
+    """The densify/MXU variant reassociates per-chunk sums through two
+    matmuls — allclose, not bit-equal.  T=512 is also what pick_variant
+    selects by default at this tile size."""
+    from repro.kernels.ops import pick_variant
+    assert pick_variant(T) == "mxu"
+    oracle = np.asarray(spmm_chunked(ct, jnp.asarray(x8)))
+    got = fresh(valued_path, use_pallas=True).multiply(x8)  # default variant
+    np.testing.assert_allclose(got, oracle, atol=2e-4)
+
+
+def test_pallas_h2d_accounting_parity(valued_path, binary_path, x8):
+    """The Pallas path stages meta like any other plane (no uncounted
+    ``jnp.asarray(meta)`` re-ship per step); the only delta vs the
+    _batch_step engine is the 4-byte n_valid scalar per batch."""
+    for path in (valued_path, binary_path):
+        dense = fresh(path)
+        dense.multiply(x8)
+        pal = pfresh(path)
+        pal.multiply(x8)
+        n_batches = -(-dense.store.n_chunks // BATCH)
+        assert (pal.store.stats.h2d_bytes
+                == dense.store.stats.h2d_bytes + 4 * n_batches)
+        # same disk traffic, same overlap behavior
+        assert pal.store.stats.bytes_read == dense.store.stats.bytes_read
+        assert (pal.store.stats.overlap_batches
+                == dense.store.stats.overlap_batches == n_batches - 1)
+
+
+def test_pallas_step_compiles_once_per_pass(valued_path, x8):
+    """Fixed shapes + the traced n_valid scalar: a whole pass (padded tail
+    included) adds exactly one jit entry for the Pallas step, and a second
+    pass adds none."""
+    from repro.kernels import ops as ops_mod
+    x6 = x8[:, :6]  # a p no other test uses -> fresh jit-cache shapes
+    before = ops_mod.spmm_pallas_batch._cache_size()
+    pfresh(valued_path).multiply(x6)
+    assert ops_mod.spmm_pallas_batch._cache_size() - before == 1
+    pfresh(valued_path).multiply(x6)
+    assert ops_mod.spmm_pallas_batch._cache_size() - before == 1
+
+
+def test_pallas_boundary_hook_bit_identical(valued_path, x8):
+    """A mid-pass column swap through PassBoundary lands identically on
+    both engine backends: tile rows streamed after the boundary see the new
+    column, rows before it the old one — bit for bit."""
+    new_col = np.arange(x8.shape[0], dtype=np.float32) / x8.shape[0]
+    results = {}
+    for name, mk in (("dense", fresh), ("pallas", pfresh)):
+        sem = mk(valued_path)
+        seen = {"prefix": None}
+
+        def hook(b, sem=sem, seen=seen):
+            if b.chunk_start == 2 * BATCH:     # third boundary, mid-pass
+                b.write_columns(3, new_col)
+                seen["prefix"] = b.read_output(1, 0, 2)  # blocks, then reads
+        results[name] = (sem.multiply(x8, boundary_hook=hook), seen["prefix"])
+    np.testing.assert_array_equal(results["dense"][0], results["pallas"][0])
+    np.testing.assert_array_equal(results["dense"][1], results["pallas"][1])
+    # and the swap really took: column 3 differs from the no-hook pass
+    assert not np.array_equal(results["pallas"][0][:, 3],
+                              fresh(valued_path).multiply(x8)[:, 3])
+
+
+def test_pallas_rejects_unknown_variant(valued_path, x8):
+    """A typo'd pallas_variant must fail loudly, not silently fall through
+    to the MXU path (whose float drift would masquerade as an engine bug)."""
+    with pytest.raises(ValueError, match="unknown kernel variant"):
+        fresh(valued_path, use_pallas=True,
+              pallas_variant="vpu").multiply(x8)
+
+
+def test_pallas_compiled_mode_lane_aligns_p(valued_path):
+    """pallas_interpret=False targets real TPU lowering, which requires the
+    dense width to be a multiple of the 128 lane register width; the engine
+    pads the operand/accumulator on device and slices the result back.
+    (The compiled lowering itself cannot run on this container — this pins
+    the alignment arithmetic that feeds it.)"""
+    from repro.kernels.ops import LANE
+    compiled = fresh(valued_path, use_pallas=True, pallas_interpret=False)
+    assert [compiled._lane_pad(p) for p in (1, 8, 128, 130)] \
+        == [127, 120, 0, 126]
+    assert all((p + compiled._lane_pad(p)) % LANE == 0 for p in range(1, 300))
+    # interpret mode (this container's protocol) and the scan step pad nothing
+    assert pfresh(valued_path)._lane_pad(8) == 0
+    assert fresh(valued_path)._lane_pad(8) == 0
+
+
+def test_pallas_sharded_scan_bit_identical(valued_path, x8):
+    """ShardedSEMSpMM drives the Pallas step per shard (rebased shard-frame
+    meta, per-shard accumulator) and still concatenates to the single-scan
+    bits."""
+    single = fresh(valued_path).multiply(x8)
+    cfg = SEMConfig(chunk_batch=BATCH, use_pallas=True,
+                    pallas_variant="gather")
+    with ShardedSEMSpMM(TileStore.open(valued_path), n_shards=2,
+                        config=cfg) as sh:
+        np.testing.assert_array_equal(sh.multiply(x8), single)
+        assert sh.io_stats.bytes_read == sh.store.nbytes
+
+
+def test_sharded_scan_rejects_boundary_hook(valued_path, x8):
+    """Shards stream their boundaries concurrently — an elastic hook has no
+    single clock to ride, so the sharded executor refuses it loudly."""
+    with ShardedSEMSpMM(TileStore.open(valued_path), n_shards=2,
+                        config=SEMConfig(chunk_batch=BATCH)) as sh:
+        with pytest.raises(ValueError, match="boundary_hook"):
+            sh.multiply(x8, boundary_hook=lambda b: None)
+
+
 # -- sharded parallel scans ---------------------------------------------------
 @pytest.mark.parametrize("n_shards", [2, 4])
 def test_sharded_scan_bit_identical(valued_path, x8, n_shards):

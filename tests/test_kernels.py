@@ -60,8 +60,11 @@ def test_kernel_property(n, nnz, p, t, variant, seed):
     np.testing.assert_allclose(out, _ref(ct, x), atol=1e-3)
 
 
-def test_batch_accumulation(small_valued):
-    """SEM streaming: applying chunk batches sequentially == one-shot."""
+@pytest.mark.parametrize("variant", ["gather", "mxu"])
+def test_batch_accumulation(small_valued, variant):
+    """SEM streaming: applying chunk batches sequentially == one-shot.
+    Batches start and end mid-tile-row, so this exercises the in-kernel
+    first-flag recompute and the aliased-accumulator seeding."""
     ct = to_chunked(small_valued, T=256, C=64)
     rng = np.random.default_rng(1)
     x = rng.standard_normal((small_valued.n_cols, 3)).astype(np.float32)
@@ -70,15 +73,63 @@ def test_batch_accumulation(small_valued):
     B = 7
     for s in range(0, ct.n_chunks, B):
         e = min(s + B, ct.n_chunks)
-        out = spmm_pallas_batch(ct.meta[s:e], ct.row_local[s:e],
+        out = spmm_pallas_batch(ct.meta[s:e], e - s, ct.row_local[s:e],
                                 ct.col_local[s:e], ct.vals[s:e], x_pad, out,
-                                ct.T)
+                                T=ct.T, variant=variant)
     got = np.asarray(out.reshape(-1, 3)[: ct.n_rows])
     np.testing.assert_allclose(got, _ref(ct, x), atol=5e-4)
 
 
+def test_batch_skips_tail_pads(small_valued):
+    """Chunks past ``n_valid`` are skipped outright: poisoned pad planes
+    (wild indices, NaN values, foreign meta rows) must not leak into the
+    accumulator — the engine's fixed-shape tail relies on this."""
+    ct = to_chunked(small_valued, T=256, C=64)
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((small_valued.n_cols, 3)).astype(np.float32)
+    x_pad = jnp.zeros((ct.padded_cols, 3)).at[: x.shape[0]].set(x)
+    want = spmm_pallas_batch(ct.meta, ct.n_chunks, ct.row_local,
+                             ct.col_local, ct.vals, x_pad,
+                             jnp.zeros((ct.n_tile_rows, ct.T, 3)), T=ct.T)
+    pad = 5
+    meta_p = np.concatenate([ct.meta, np.repeat(ct.meta[-1:], pad, 0)])
+    meta_p[-pad:, 3] = 0
+    rows_p = np.concatenate([ct.row_local,
+                             np.full((pad, 64), 7, ct.row_local.dtype)])
+    cols_p = np.concatenate([ct.col_local,
+                             np.full((pad, 64), 7, ct.col_local.dtype)])
+    vals_p = np.concatenate([ct.vals, np.full((pad, 64), np.nan, np.float32)])
+    got = spmm_pallas_batch(meta_p, ct.n_chunks, rows_p, cols_p, vals_p,
+                            x_pad, jnp.zeros((ct.n_tile_rows, ct.T, 3)),
+                            T=ct.T)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batch_preserves_untouched_tile_rows(small_valued):
+    """Tile rows a batch never visits keep their accumulated content (the
+    output aliases the accumulator; there is no present-mask to get wrong)."""
+    ct = to_chunked(small_valued, T=256, C=64)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((small_valued.n_cols, 3)).astype(np.float32)
+    x_pad = jnp.zeros((ct.padded_cols, 3)).at[: x.shape[0]].set(x)
+    acc0 = rng.standard_normal((ct.n_tile_rows, ct.T, 3)).astype(np.float32)
+    # a mid-matrix batch: rows below/above its range must ride through
+    s, e = ct.n_chunks // 3, 2 * ct.n_chunks // 3
+    out = np.asarray(spmm_pallas_batch(
+        ct.meta[s:e], e - s, ct.row_local[s:e], ct.col_local[s:e],
+        ct.vals[s:e], x_pad, jnp.asarray(acc0), T=ct.T))
+    touched = np.unique(ct.meta[s:e, 0])
+    untouched = np.setdiff1d(np.arange(ct.n_tile_rows), touched)
+    assert untouched.size > 0
+    np.testing.assert_array_equal(out[untouched], acc0[untouched])
+    assert not np.array_equal(out[touched], acc0[touched])
+
+
 def test_variant_dispatch():
+    assert pick_variant(512) == "mxu"
+    assert pick_variant(2048) == "mxu"   # threshold is hardware-aligned
+    assert pick_variant(16384) == "gather"  # the paper's tile size
     small_tiles = to_chunked(rmat(10, 2, seed=0), T=512, C=128)
-    assert pick_variant(small_tiles) == "mxu"
     paper_tiles = to_chunked(rmat(10, 2, seed=0), T=16384, C=2048)
-    assert pick_variant(paper_tiles) == "gather"
+    assert pick_variant(small_tiles.T) == "mxu"
+    assert pick_variant(paper_tiles.T) == "gather"
