@@ -1,6 +1,6 @@
 """Serving-runtime benchmark: I/O amortization of the shared-scan scheduler,
-time-to-first-result of elastic mid-pass admission, and replica scan
-scaling.
+time-to-first-result of elastic mid-pass admission, replica scan scaling,
+and aggregate throughput of the concurrent-wave fleet.
 
 Serves N concurrent single-vector queries and a multi-tenant PageRank
 workload three ways — naive per-request passes, shared-scan batching, and
@@ -17,6 +17,22 @@ without mid-pass admission, on two clocks: chunk-batch boundaries
 spindle throttle making passes slow enough for the saving to dominate
 jitter).  The replica section streams a 2-way sharded wave from one
 spindle vs from two replica copies — scan bandwidth scaling with spindles.
+
+The fleet section is the scale-OUT claim: one (unsharded) serving wave
+streams from one spindle at a time, so on a 2-replica deployment a lone
+scheduler leaves a spindle idle every pass.  A wave is provisioned at a
+fixed capacity (one jit entry, one §3.6 wave's worth of column memory);
+``ServingFleet`` runs N such waves concurrently over the shared
+``ReplicaSet``, whose in-flight routing spreads simultaneous passes across
+the copies.  Aggregate throughput (served columns / wall second) for a
+query backlog of 4x one wave's capacity: fleet-of-2 must clear 1.3x the
+single wide wave (it measures ~2x — both spindles busy), and fleet-of-4
+shows the ceiling is the spindle count, not the wave count.
+
+``REPRO_BENCH_QUICK=1`` (the CI regression gate, via ``benchmarks.run
+--quick``) shrinks the graph and the spindle throttle to a seconds-long
+run; ``benchmarks.run --json`` distills the trajectory numbers into
+repo-root ``BENCH_runtime.json`` (see ``check_regression.py``).
 """
 from __future__ import annotations
 
@@ -29,21 +45,29 @@ import time
 import numpy as np
 
 from benchmarks.common import print_csv, save, timeit
-from repro.apps.pagerank import (build_operator, dangling_vertices,
-                                 pagerank_session)
+from repro.apps.pagerank import build_operator, pagerank_session
 from repro.core.formats import to_chunked
 from repro.core.sem import SEMConfig, SEMSpMM
 from repro.distributed.shard_scan import ShardedSEMSpMM
 from repro.io.storage import TileStore
-from repro.runtime import SharedScanScheduler
+from repro.runtime import ReplicaSet, ServingFleet, SharedScanScheduler
 from repro.sparse.generate import rmat
 
-N_REQ = 16
+QUICK = os.environ.get("REPRO_BENCH_QUICK") == "1"
+
+# (rmat scale, chunk_batch, one-shot requests, PR tenants, PR iters,
+#  spindle pass seconds, fleet wave capacity)
+SCALE = 12 if QUICK else 13
+CHUNK_BATCH = 32 if QUICK else 128
+N_REQ = 8 if QUICK else 16
+PR_TENANTS, PR_ITERS = (4, 8) if QUICK else (8, 15)
+PASS_SECONDS = 0.08 if QUICK else 0.25
+FLEET_CAPACITY = 4
 
 
 def _sem(path: str, budget: int = 1 << 30) -> SEMSpMM:
     return SEMSpMM(TileStore.open(path), SEMConfig(
-        memory_budget_bytes=budget, chunk_batch=128))
+        memory_budget_bytes=budget, chunk_batch=CHUNK_BATCH))
 
 
 class SpindleStore(TileStore):
@@ -51,18 +75,24 @@ class SpindleStore(TileStore):
     to bytes, serialized by a per-spindle lock — shard views of the same
     spindle contend for it, replica copies each get their own.  (The
     bench_engine EmulatedSSDStore models latency; this models *bandwidth
-    ownership*, which is what replica routing buys.)"""
+    ownership*, which is what replica routing buys.)  The throttled window
+    is bracketed by the in-flight gauge, so ``IOStats.max_reads_inflight``
+    records how many concurrent waves actually queued on this spindle."""
 
     seconds_per_byte = 0.0
     spindle_lock = None
 
     def read_batch_raw(self, start, count):
         delay = self.seconds_per_byte * self.header["record"] * count
-        if self.spindle_lock is not None:
-            with self.spindle_lock:
+        self.stats.begin_read()
+        try:
+            if self.spindle_lock is not None:
+                with self.spindle_lock:
+                    time.sleep(delay)
+            else:
                 time.sleep(delay)
-        else:
-            time.sleep(delay)
+        finally:
+            self.stats.end_read()
         return super().read_batch_raw(start, count)
 
     def partition_rows(self, n_shards):
@@ -91,19 +121,91 @@ def _ttfr(path: str, adj, elastic: bool, inject_at: int):
         if box["req"] is None and sched.boundary_clock >= inject_at:
             box["req"] = sched.query(x, tenant_id="late-arrival")
 
-    sem = SEMSpMM(_spindle(path, 0.25), SEMConfig(chunk_batch=128))
-    sched = SharedScanScheduler(sem, use_cache=False, elastic=elastic,
-                                boundary_probe=probe)
-    sched.submit(pagerank_session(adj, max_iter=4, tenant_id="resident"))
-    sched.run()
+    sem = SEMSpMM(_spindle(path, PASS_SECONDS), SEMConfig(
+        chunk_batch=CHUNK_BATCH))
+    with SharedScanScheduler(sem, use_cache=False, elastic=elastic,
+                             boundary_probe=probe) as sched:
+        sched.submit(pagerank_session(adj, max_iter=4, tenant_id="resident"))
+        sched.run()
     req = box["req"]
     assert req is not None and req.done
     return (req.first_result_clock - req.submit_clock,
             req.t_first_result - req.t_submit)
 
 
-def main() -> None:
-    adj = rmat(13, 16, seed=3)
+def _fleet_section(path: str, replica_path: str, n: int, rows) -> dict:
+    """Aggregate throughput: one wide wave vs a fleet of 2/4 concurrent
+    waves, all on the same 2-spindle ReplicaSet, same per-wave capacity.
+    Returns {mode: cols_per_s}."""
+    cap = FLEET_CAPACITY
+    n_req = 4 * cap * 2        # 4 passes' worth of backlog per 2 waves
+    rng = np.random.default_rng(23)
+    xs = [rng.standard_normal(n).astype(np.float32) for _ in range(n_req)]
+    cfg = SEMConfig(chunk_batch=CHUNK_BATCH)
+
+    # warm the (C, T, cap) jit entry so no config pays compile time
+    with TileStore.open(path) as warm_store:
+        SEMSpMM(warm_store, cfg).multiply(
+            np.zeros((n, cap), np.float32))
+
+    def spindle_rs() -> ReplicaSet:
+        return ReplicaSet([_spindle(path, PASS_SECONDS),
+                           _spindle(replica_path, PASS_SECONDS)], cfg)
+
+    throughput = {}
+
+    def record(mode, seconds, rs, waves):
+        agg = rs.io_stats
+        throughput[mode] = n_req / seconds
+        rows.append(dict(
+            workload="fleet_aggregate", mode=mode, passes=0,
+            bytes_read=agg.bytes_read, cache_hit_bytes=0, amortization=0.0,
+            boundaries_to_result=0, seconds_to_result=seconds,
+            waves=waves, capacity=cap, cols_per_s=throughput[mode],
+            max_spindle_queue=agg.max_reads_inflight,
+            replica_scans=[s.scans for s in rs.router.states]))
+
+    # one wide wave: a lone scheduler packs `cap` columns per pass but
+    # streams one spindle at a time — the other replica idles
+    rs = spindle_rs()
+    with rs, SharedScanScheduler(rs, use_cache=False, elastic=True,
+                                 capacity=cap) as sched:
+        t0 = time.perf_counter()
+        wide_reqs = [sched.query(x, tenant_id=f"w{i}")
+                     for i, x in enumerate(xs)]
+        sched.run()
+        record("wide-1-wave", time.perf_counter() - t0, rs, 1)
+        assert all(r.done for r in wide_reqs)
+
+    for n_waves in (2, 4):
+        rs = spindle_rs()
+        with ServingFleet(rs, n_waves=n_waves, use_cache=False,
+                          capacity=cap) as fleet:
+            t0 = time.perf_counter()
+            reqs = [fleet.query(x, tenant_id=f"f{i}")
+                    for i, x in enumerate(xs)]
+            fleet.drain(timeout=600)
+            record(f"fleet-{n_waves}-waves", time.perf_counter() - t0, rs,
+                   n_waves)
+            assert all(r.done for r in reqs)
+            if n_waves == 2:
+                # both spindles actually served concurrent waves
+                assert all(s.scans > 0 for s in rs.router.states)
+
+    speedup2 = throughput["fleet-2-waves"] / throughput["wide-1-wave"]
+    speedup4 = throughput["fleet-4-waves"] / throughput["wide-1-wave"]
+    print(f"# fleet aggregate throughput: wide "
+          f"{throughput['wide-1-wave']:.1f} cols/s, fleet-2 "
+          f"{throughput['fleet-2-waves']:.1f} ({speedup2:.2f}x), fleet-4 "
+          f"{throughput['fleet-4-waves']:.1f} ({speedup4:.2f}x)")
+    # the acceptance bar: concurrent waves must beat the lone wave by >=1.3x
+    # on 2 emulated spindles (measured ~2x: both spindles busy)
+    assert speedup2 >= 1.3, throughput
+    return throughput
+
+
+def main():
+    adj = rmat(SCALE, 16, seed=3)
     p_op = build_operator(adj)
     ct = to_chunked(p_op, T=1024, C=256)
     path = os.path.join(tempfile.mkdtemp(prefix="bench_runtime_"), "g")
@@ -123,52 +225,50 @@ def main() -> None:
 
     for use_cache, mode in ((False, "shared"), (True, "shared+cache")):
         sem = _sem(path)
-        sched = SharedScanScheduler(sem, use_cache=use_cache)
-        for i, x in enumerate(xs):
-            sched.query(x, tenant_id=f"q{i}")
-        sched.run()
-        st = sem.store.stats
-        p_fit = sem.columns_that_fit(N_REQ)
-        bound = -(-N_REQ // p_fit)
-        assert sched.total_scan_passes() <= bound, (sched.total_scan_passes(),
-                                                    bound)
+        with SharedScanScheduler(sem, use_cache=use_cache) as sched:
+            for i, x in enumerate(xs):
+                sched.query(x, tenant_id=f"q{i}")
+            sched.run()
+            st = sem.store.stats
+            p_fit = sem.columns_that_fit(N_REQ)
+            bound = -(-N_REQ // p_fit)
+            assert sched.total_scan_passes() <= bound, (
+                sched.total_scan_passes(), bound)
         rows.append(dict(workload="oneshot", mode=mode, passes=sem.passes,
                          bytes_read=st.bytes_read,
                          cache_hit_bytes=st.cache_hit_bytes,
                          amortization=naive / max(1, st.bytes_read)))
 
     # -- multi-tenant PageRank: per-tenant runs vs one shared scan -----------
-    n_tenants, iters = 8, 15
-
     sem = _sem(path)
-    dedicated = SharedScanScheduler(sem, use_cache=False)
-    for i in range(n_tenants):  # sequential = naive: one tenant at a time
-        dedicated.submit(pagerank_session(adj, max_iter=iters,
-                                          tenant_id=f"pr{i}"))
-        dedicated.run()
+    with SharedScanScheduler(sem, use_cache=False) as dedicated:
+        for i in range(PR_TENANTS):  # sequential = naive: one at a time
+            dedicated.submit(pagerank_session(adj, max_iter=PR_ITERS,
+                                              tenant_id=f"pr{i}"))
+            dedicated.run()
     naive_pr = sem.store.stats.bytes_read
 
     for use_cache, mode in ((False, "shared"), (True, "shared+cache")):
         sem = _sem(path)
-        sched = SharedScanScheduler(sem, use_cache=use_cache)
-        tenants = [sched.submit(pagerank_session(adj, max_iter=iters,
-                                                 tenant_id=f"pr{i}"))
-                   for i in range(n_tenants)]
-        sched.run()
+        with SharedScanScheduler(sem, use_cache=use_cache) as sched:
+            tenants = [sched.submit(pagerank_session(adj, max_iter=PR_ITERS,
+                                                     tenant_id=f"pr{i}"))
+                       for i in range(PR_TENANTS)]
+            sched.run()
         assert all(t.done for t in tenants)
         st = sem.store.stats
         # N tenants iterating together: passes ~ iterations, not N * iters
-        assert sem.passes <= iters + 1, sem.passes
-        rows.append(dict(workload="pagerank_x8", mode=mode, passes=sem.passes,
-                         bytes_read=st.bytes_read,
+        assert sem.passes <= PR_ITERS + 1, sem.passes
+        rows.append(dict(workload=f"pagerank_x{PR_TENANTS}", mode=mode,
+                         passes=sem.passes, bytes_read=st.bytes_read,
                          cache_hit_bytes=st.cache_hit_bytes,
                          amortization=naive_pr / max(1, st.bytes_read)))
-    rows.insert(3, dict(workload="pagerank_x8", mode="naive",
-                        passes=n_tenants * iters, bytes_read=naive_pr,
+    rows.insert(3, dict(workload=f"pagerank_x{PR_TENANTS}", mode="naive",
+                        passes=PR_TENANTS * PR_ITERS, bytes_read=naive_pr,
                         cache_hit_bytes=0, amortization=1.0))
 
     # -- time-to-first-result: mid-pass vs between-pass admission ------------
-    n_batches = -(-TileStore.open(path).n_chunks // 128)
+    n_batches = -(-TileStore.open(path).n_chunks // CHUNK_BATCH)
     inject_at = max(1, n_batches // 3)   # arrive a third into pass 1
     ttfr = {}
     for elastic, mode in ((False, "between-pass"), (True, "mid-pass")):
@@ -191,12 +291,13 @@ def main() -> None:
     shutil.copy(path + ".bin", replica_path + ".bin")
     shutil.copy(path + ".json", replica_path + ".json")
     xw = rng.standard_normal((n, 8)).astype(np.float32)
-    cfg = SEMConfig(chunk_batch=128)
+    cfg = SEMConfig(chunk_batch=CHUNK_BATCH)
     replica_t = {}
     for n_spindles, mode in ((1, "sharded-1-spindle"),
                              (2, "sharded-2-replicas")):
-        src = _spindle(path, 0.25)
-        reps = [_spindle(replica_path, 0.25)] if n_spindles == 2 else None
+        src = _spindle(path, PASS_SECONDS)
+        reps = ([_spindle(replica_path, PASS_SECONDS)]
+                if n_spindles == 2 else None)
         with ShardedSEMSpMM(src, n_shards=2, config=cfg,
                             replicas=reps) as sh:
             t = timeit(lambda: sh.multiply(xw), repeat=2)
@@ -209,6 +310,9 @@ def main() -> None:
     print(f"# replica scan speedup (2 spindles / 1): {speedup:.2f}x")
     assert speedup > 1.2, replica_t
 
+    # -- concurrent waves: fleet-of-N vs one wide wave -----------------------
+    _fleet_section(path, replica_path, n, rows)
+
     save("runtime_serving", rows)
     print_csv("runtime_serving", rows)
     shared = [r for r in rows if r["mode"] == "shared"]
@@ -216,6 +320,7 @@ def main() -> None:
     cached = [r for r in rows if r["mode"] == "shared+cache"]
     assert all(r["amortization"] >= s["amortization"]
                for r, s in zip(cached, shared))
+    return rows
 
 
 if __name__ == "__main__":

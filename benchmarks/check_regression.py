@@ -1,8 +1,10 @@
-"""Benchmark regression gate: fail CI when the streaming engine loses the
-wins the trajectory file records.
+"""Benchmark regression gate: fail CI when the streaming engine or the
+serving runtime loses the wins the trajectory files record.
 
   PYTHONPATH=src python benchmarks/check_regression.py FRESH.json \\
-      [BASELINE.json] [--mode quick] [--tolerance 0.2]
+      [BASELINE.json] [--runtime FRESH_RUNTIME.json] \\
+      [--runtime-baseline BENCH_runtime.json] \\
+      [--mode quick] [--tolerance 0.2]
 
 Compares a fresh ``benchmarks.run --json`` summary against the committed
 ``BENCH_engine.json`` and exits nonzero when, beyond ``--tolerance``
@@ -12,6 +14,14 @@ Compares a fresh ``benchmarks.run --json`` summary against the committed
   stream behind compute), or
 * any engine variant's host->device bytes per pass grow (a decode/staging
   win regressed — e.g. the uint16 device decode fell back to int32).
+
+With ``--runtime``, a fresh serving-runtime summary is additionally diffed
+against the committed ``BENCH_runtime.json``:
+
+* elastic admission's boundaries-to-first-result grow (mid-pass delivery
+  lost its head-start), or mid-pass stops beating between-pass outright;
+* the fleet's aggregate-throughput speedup over one wide wave drops — or
+  falls below the 1.3x acceptance floor on 2 emulated spindles.
 
 Comparisons are mode-matched (``full`` vs ``full``, ``quick`` vs
 ``quick``): quick-mode sizes are different, so cross-mode deltas are
@@ -24,6 +34,8 @@ import argparse
 import json
 import sys
 from typing import Dict, List
+
+FLEET_SPEEDUP_FLOOR = 1.3   # the acceptance bar on 2 emulated spindles
 
 
 def _load_mode(path: str, mode: str) -> Dict:
@@ -38,7 +50,7 @@ def _load_mode(path: str, mode: str) -> Dict:
 
 
 def compare(fresh: Dict, baseline: Dict, tolerance: float) -> List[str]:
-    """Regression messages (empty == gate passes)."""
+    """Engine regression messages (empty == gate passes)."""
     problems: List[str] = []
 
     speed_f = fresh["overlap_speedup_emulated"]
@@ -63,11 +75,51 @@ def compare(fresh: Dict, baseline: Dict, tolerance: float) -> List[str]:
     return problems
 
 
+def compare_runtime(fresh: Dict, baseline: Dict,
+                    tolerance: float) -> List[str]:
+    """Serving-runtime regression messages (empty == gate passes)."""
+    problems: List[str] = []
+
+    b_f = fresh["boundaries_to_first_result"]
+    b_b = baseline["boundaries_to_first_result"]
+    mid_f, mid_b = b_f["mid-pass"], b_b["mid-pass"]
+    if mid_f > mid_b * (1.0 + tolerance):
+        problems.append(
+            f"mid-pass boundaries-to-first-result regressed: {mid_f} vs "
+            f"baseline {mid_b} (ceiling {mid_b * (1 + tolerance):.1f})")
+    if mid_f >= b_f["between-pass"]:
+        problems.append(
+            f"mid-pass admission no longer beats between-pass on the "
+            f"boundary clock: {mid_f} >= {b_f['between-pass']}")
+
+    fl_f, fl_b = fresh["fleet"], baseline["fleet"]
+    s_f = fl_f["fleet2_speedup_vs_wide"]
+    s_b = fl_b["fleet2_speedup_vs_wide"]
+    if s_f < s_b * (1.0 - tolerance):
+        problems.append(
+            f"fleet-of-2 aggregate-throughput speedup regressed: "
+            f"{s_f:.3f}x vs baseline {s_b:.3f}x "
+            f"(floor {s_b * (1 - tolerance):.3f}x)")
+    if s_f < FLEET_SPEEDUP_FLOOR:
+        problems.append(
+            f"fleet-of-2 speedup {s_f:.3f}x is below the "
+            f"{FLEET_SPEEDUP_FLOOR}x acceptance floor on "
+            f"{fl_f.get('spindles', 2)} emulated spindles")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", help="BENCH_engine.json from this run")
     ap.add_argument("baseline", nargs="?", default="BENCH_engine.json",
                     help="committed trajectory (default: BENCH_engine.json)")
+    ap.add_argument("--runtime", default=None, metavar="PATH",
+                    help="BENCH_runtime.json from this run (adds the "
+                         "serving-runtime gate)")
+    ap.add_argument("--runtime-baseline", default="BENCH_runtime.json",
+                    metavar="PATH",
+                    help="committed runtime trajectory "
+                         "(default: BENCH_runtime.json)")
     ap.add_argument("--mode", default="quick", choices=("full", "quick"),
                     help="which trajectory to compare (default: quick, "
                          "what CI runs)")
@@ -78,14 +130,22 @@ def main(argv=None) -> int:
     fresh = _load_mode(args.fresh, args.mode)
     baseline = _load_mode(args.baseline, args.mode)
     problems = compare(fresh, baseline, args.tolerance)
+    gates = [f"overlap speedup {fresh['overlap_speedup_emulated']:.2f}x, "
+             f"{len(fresh['engines'])} engine rows"]
+    if args.runtime is not None:
+        fresh_rt = _load_mode(args.runtime, args.mode)
+        base_rt = _load_mode(args.runtime_baseline, args.mode)
+        problems += compare_runtime(fresh_rt, base_rt, args.tolerance)
+        mid = fresh_rt["boundaries_to_first_result"]["mid-pass"]
+        fleet2 = fresh_rt["fleet"]["fleet2_speedup_vs_wide"]
+        gates.append(f"mid-pass ttfr {mid} boundaries, "
+                     f"fleet-2 {fleet2:.2f}x")
     if problems:
         for p in problems:
             print(f"[regression] {p}")
         return 1
-    print(f"[regression] gate passed ({args.mode}: overlap speedup "
-          f"{fresh['overlap_speedup_emulated']:.2f}x, "
-          f"{len(fresh['engines'])} engine rows within "
-          f"{args.tolerance:.0%} of baseline)")
+    print(f"[regression] gate passed ({args.mode}: {'; '.join(gates)}; "
+          f"within {args.tolerance:.0%} of baseline)")
     return 0
 
 

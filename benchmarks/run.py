@@ -7,17 +7,21 @@ Writes results/bench/<name>.json per bench and prints CSVs.  Asserts inside
 each bench validate the paper's claims (byte formulas, balance bounds,
 convergence) — a failed claim fails the run.
 
-``--json`` additionally writes repo-root ``BENCH_engine.json`` — the
-machine-readable perf trajectory of the streaming engine (rows/s, bytes
-streamed, overlap %, pass counts per engine variant) tracked across PRs.
-The file holds one summary per mode (``full`` and ``quick``); a run
-updates its own mode's block and leaves the other untouched.
+``--json`` additionally writes the machine-readable perf trajectories
+tracked across PRs: repo-root ``BENCH_engine.json`` when the engine bench
+runs (rows/s, bytes streamed, overlap %, pass counts per engine variant)
+and repo-root ``BENCH_runtime.json`` when the serving-runtime bench runs
+(boundaries/seconds to first result of elastic admission, fleet aggregate
+throughput vs one wide wave, replica scan speedup).  Each file holds one
+summary per mode (``full`` and ``quick``); a run updates its own mode's
+block and leaves the other untouched.
 
 ``--quick`` exports ``REPRO_BENCH_QUICK=1`` before the benches import:
 emulated-SSD sizes shrink to a seconds-long run (the CI regression gate's
 mode — see ``benchmarks/check_regression.py``).  ``--json-out`` redirects
 the summary (CI writes a scratch file and diffs it against the committed
-trajectory instead of overwriting it)."""
+trajectory instead of overwriting it); it names one output file, so use it
+with a single trajectory bench selected via ``--only``."""
 from __future__ import annotations
 
 import argparse
@@ -44,10 +48,24 @@ BENCHES = [
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def _merge_mode_json(summary, path, quick) -> str:
+    """Write ``summary`` under the running mode's key — a quick run never
+    clobbers the full-size trajectory and vice versa."""
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+        if "full" not in merged and "quick" not in merged:
+            merged = {"full": merged}  # legacy flat schema
+    merged["quick" if quick else "full"] = summary
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1)
+    return path
+
+
 def write_engine_json(rows, out_path=None, quick=False) -> str:
     """Distill the engine ablation into BENCH_engine.json (the cross-PR perf
-    trajectory file), under the running mode's key — a quick run never
-    clobbers the full-size trajectory and vice versa."""
+    trajectory file)."""
     summary = {
         "p": rows[0]["p"],
         "engines": [
@@ -59,16 +77,42 @@ def write_engine_json(rows, out_path=None, quick=False) -> str:
         "h2d_index_saving_mb": rows[0]["h2d_index_saving_mb"],
     }
     path = out_path or os.path.join(REPO_ROOT, "BENCH_engine.json")
-    merged = {}
-    if os.path.exists(path):
-        with open(path) as f:
-            merged = json.load(f)
-        if "full" not in merged and "quick" not in merged:
-            merged = {"full": merged}  # legacy flat schema
-    merged["quick" if quick else "full"] = summary
-    with open(path, "w") as f:
-        json.dump(merged, f, indent=1)
-    return path
+    return _merge_mode_json(summary, path, quick)
+
+
+def write_runtime_json(rows, out_path=None, quick=False) -> str:
+    """Distill the serving-runtime bench into BENCH_runtime.json: the
+    elastic-admission time-to-first-result and the fleet's aggregate
+    throughput vs one wide wave — the serving trajectory the CI gate
+    (``check_regression.py --runtime``) holds across PRs."""
+    ttfr = {r["mode"]: r for r in rows
+            if r["workload"] == "ttfr_late_arrival"}
+    fleet = {r["mode"]: r for r in rows
+             if r["workload"] == "fleet_aggregate"}
+    rep = {r["mode"]: r["seconds_to_result"] for r in rows
+           if r["workload"] == "replica_scan"}
+    wide = fleet["wide-1-wave"]["cols_per_s"]
+    summary = {
+        "boundaries_to_first_result": {
+            m: ttfr[m]["boundaries_to_result"] for m in ttfr},
+        "seconds_to_first_result": {
+            m: ttfr[m]["seconds_to_result"] for m in ttfr},
+        "fleet": {
+            "spindles": 2,
+            "capacity": fleet["wide-1-wave"]["capacity"],
+            "wide_cols_per_s": wide,
+            "fleet2_cols_per_s": fleet["fleet-2-waves"]["cols_per_s"],
+            "fleet4_cols_per_s": fleet["fleet-4-waves"]["cols_per_s"],
+            "fleet2_speedup_vs_wide":
+                fleet["fleet-2-waves"]["cols_per_s"] / wide,
+            "fleet4_speedup_vs_wide":
+                fleet["fleet-4-waves"]["cols_per_s"] / wide,
+        },
+        "replica_scan_speedup":
+            rep["sharded-1-spindle"] / rep["sharded-2-replicas"],
+    }
+    path = out_path or os.path.join(REPO_ROOT, "BENCH_runtime.json")
+    return _merge_mode_json(summary, path, quick)
 
 
 def main(argv=None) -> int:
@@ -97,6 +141,9 @@ def main(argv=None) -> int:
             rows = mod.main()
             if args.json and name == "engine" and rows:
                 out = write_engine_json(rows, args.json_out, args.quick)
+                print(f"[bench] wrote {out}")
+            if args.json and name == "runtime_serving" and rows:
+                out = write_runtime_json(rows, args.json_out, args.quick)
                 print(f"[bench] wrote {out}")
             print(f"[bench] {name}: ok ({time.time() - t0:.1f}s)\n")
         except Exception as e:  # noqa: BLE001

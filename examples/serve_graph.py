@@ -1,8 +1,8 @@
 """Example: elastic multi-tenant graph-query serving over replicated
-on-"SSD" copies of one graph.
+on-"SSD" copies of one graph — optionally as a concurrent-wave fleet.
 
   PYTHONPATH=src python examples/serve_graph.py [--scale 12] [--tenants 6]
-                                                [--replicas 2]
+                                                [--replicas 2] [--waves 1]
 
 Usage note: the serving runtime turns the paper's Fig-5 crossover into a
 scheduler.  Build the sparse operator once (``TileStore.write``), copy it
@@ -19,15 +19,24 @@ immediately and is delivered from a stitched partial pass roughly half a
 pass earlier than between-pass admission — with bit-identical results.
 Leftover memory budget still pins hot chunk batches.
 
-This demo drips one-shot queries in mid-pass (via the scheduler's boundary
-probe, so the run is deterministic) and prints each pass's mid-pass
-admissions/completions plus every late query's time-to-first-result in
-chunk-batch boundaries.
+With ``--waves N`` (N >= 2) the same tenants are served by a
+``ServingFleet`` instead: N elastic schedulers run concurrently over the
+shared ``ReplicaSet``, the front door routes each session to the wave with
+the least estimated backlog (live columns x measured pass time), and the
+global column/hot-chunk budget is arbitrated across waves.  On a
+deployment with as many replica spindles as waves, aggregate throughput
+scales with the wave count (see ``benchmarks/bench_runtime.py``).
+
+The single-wave demo drips one-shot queries in mid-pass (via the
+scheduler's boundary probe, so the run is deterministic) and prints each
+pass's mid-pass admissions/completions plus every late query's
+time-to-first-result in chunk-batch boundaries.
 """
 import argparse
 import os
 import shutil
 import tempfile
+import time
 
 import numpy as np
 
@@ -35,18 +44,12 @@ from repro.apps.pagerank import build_operator, pagerank_session
 from repro.core.formats import to_chunked
 from repro.core.sem import SEMConfig
 from repro.io.storage import TileStore
-from repro.runtime import (PowerIterationSession, ReplicaSet,
+from repro.runtime import (PowerIterationSession, ReplicaSet, ServingFleet,
                            SharedScanScheduler)
 from repro.sparse.generate import rmat
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", type=int, default=12)
-    ap.add_argument("--tenants", type=int, default=6)
-    ap.add_argument("--replicas", type=int, default=2)
-    args = ap.parse_args()
-
+def build_replicas(args):
     adj = rmat(args.scale, 16, seed=1)
     print(f"graph: {adj.n_rows} vertices, {adj.nnz} edges")
     ct = to_chunked(build_operator(adj), T=1024, C=256)
@@ -61,14 +64,32 @@ def main() -> int:
         paths.append(p)
     print(f"operator on slow tier: {store.nbytes / 1e6:.1f} MB "
           f"x {len(paths)} replica(s)")
-
     # small chunk batches -> many boundaries per pass: more mid-pass
     # admission points for the demo's late arrivals
-    replicas = ReplicaSet(TileStore.open_replicas(paths),
-                          SEMConfig(memory_budget_bytes=256 << 20,
-                                    chunk_batch=32))
+    return adj, ReplicaSet(TileStore.open_replicas(paths),
+                           SEMConfig(memory_budget_bytes=256 << 20,
+                                     chunk_batch=32))
 
-    # Drip 4 late one-shot queries in mid-pass, 9 boundaries apart.
+
+def submit_tenants(target, adj, n_tenants, rng):
+    tenants = [target.submit(pagerank_session(
+        adj, max_iter=10 + 3 * i, tenant_id=f"pagerank-{i}"))
+        for i in range(n_tenants)]
+    tenants.append(target.submit(PowerIterationSession(
+        rng.standard_normal(adj.n_rows).astype(np.float32), max_iter=25,
+        tenant_id="spectral")))
+    return tenants
+
+
+def print_replica_states(replicas):
+    for st in replicas.router.states:
+        print(f"replica {st.replica_id}: {st.scans} scans, "
+              f"{st.ewma_bps / 1e6:.0f} MB/s, "
+              f"{'healthy' if st.healthy else 'DOWN'}")
+
+
+def serve_single_wave(adj, replicas, args) -> int:
+    """The elastic single-scheduler demo: late arrivals admitted mid-pass."""
     rng = np.random.default_rng(0)
     n = adj.n_rows
     late = {"queries": [], "xs": [rng.standard_normal(n).astype(np.float32)
@@ -80,47 +101,86 @@ def main() -> int:
             late["queries"].append(
                 sched.query(late["xs"][i], tenant_id=f"late-{i}"))
 
-    sched = SharedScanScheduler(replicas, elastic=True, reserve_cols=2,
-                                boundary_probe=drip)
-    tenants = [sched.submit(pagerank_session(
-        adj, max_iter=10 + 3 * i, tenant_id=f"pagerank-{i}"))
-        for i in range(args.tenants)]
-    tenants.append(sched.submit(PowerIterationSession(
-        rng.standard_normal(n).astype(np.float32), max_iter=25,
-        tenant_id="spectral")))
-
     read0 = replicas.io_stats.bytes_read
-    for i, rep in enumerate(sched.run(), 1):
-        print(f"pass {i:3d}: cols={rep.wave_cols:3d}/{rep.capacity} "
-              f"tenants={rep.tenants} retired={rep.retired} "
-              f"mid-pass +{rep.admitted_midpass}/-{rep.completed_midpass} "
-              f"read={rep.bytes_read / 1e6:7.2f}MB "
-              f"cache_hit={rep.cache_hit_bytes / 1e6:7.2f}MB")
+    with SharedScanScheduler(replicas, elastic=True, reserve_cols=2,
+                             boundary_probe=drip) as sched:
+        tenants = submit_tenants(sched, adj, args.tenants, rng)
+        for i, rep in enumerate(sched.run(), 1):
+            print(f"pass {i:3d}: cols={rep.wave_cols:3d}/{rep.capacity} "
+                  f"tenants={rep.tenants} retired={rep.retired} "
+                  f"mid-pass +{rep.admitted_midpass}/-{rep.completed_midpass} "
+                  f"read={rep.bytes_read / 1e6:7.2f}MB "
+                  f"cache_hit={rep.cache_hit_bytes / 1e6:7.2f}MB")
 
-    n_batches = replicas.n_batches
-    print("\nlate arrivals (admitted inside a running pass):")
-    for q in late["queries"]:
-        waited = q.first_result_clock - q.submit_clock
-        print(f"  {q.tenant_id}: result after {waited} boundaries "
-              f"= {waited / n_batches:.2f} passes "
-              f"({(q.t_first_result - q.t_submit) * 1e3:.0f} ms)")
+        n_batches = replicas.n_batches
+        print("\nlate arrivals (admitted inside a running pass):")
+        for q in late["queries"]:
+            waited = q.first_result_clock - q.submit_clock
+            print(f"  {q.tenant_id}: result after {waited} boundaries "
+                  f"= {waited / n_batches:.2f} passes "
+                  f"({(q.t_first_result - q.t_submit) * 1e3:.0f} ms)")
 
-    total = replicas.io_stats.bytes_read - read0
-    served = sum(t.iterations for t in tenants) + len(late["queries"])
-    naive = served * store.nbytes
-    print(f"\nserved {len(tenants)} iterative tenants "
-          f"({sum(t.iterations for t in tenants)} operator applications) "
-          f"+ {len(late['queries'])} mid-pass one-shot queries")
-    print(f"slow-tier reads: {total / 1e6:.1f} MB "
-          f"(naive per-request serving: {naive / 1e6:.1f} MB, "
-          f"amortization {naive / max(1, total):.1f}x)")
-    if sched.cache is not None:
-        print(f"hot-chunk cache: hit rate {sched.cache.stats.hit_rate:.0%}")
-    for st in replicas.router.states:
-        print(f"replica {st.replica_id}: {st.scans} scans, "
-              f"{st.ewma_bps / 1e6:.0f} MB/s, "
-              f"{'healthy' if st.healthy else 'DOWN'}")
+        total = replicas.io_stats.bytes_read - read0
+        served = sum(t.iterations for t in tenants) + len(late["queries"])
+        naive = served * replicas.store.nbytes
+        print(f"\nserved {len(tenants)} iterative tenants "
+              f"({sum(t.iterations for t in tenants)} operator applications) "
+              f"+ {len(late['queries'])} mid-pass one-shot queries")
+        print(f"slow-tier reads: {total / 1e6:.1f} MB "
+              f"(naive per-request serving: {naive / 1e6:.1f} MB, "
+              f"amortization {naive / max(1, total):.1f}x)")
+        if sched.cache is not None:
+            print(f"hot-chunk cache: hit rate "
+                  f"{sched.cache.stats.hit_rate:.0%}")
+        print_replica_states(replicas)
     return 0
+
+
+def serve_fleet(adj, replicas, args) -> int:
+    """Concurrent-wave serving: the same tenant mix dispatched across
+    ``--waves`` elastic schedulers over the shared replica set."""
+    rng = np.random.default_rng(0)
+    n = adj.n_rows
+    read0 = replicas.io_stats.bytes_read
+    with ServingFleet(replicas, n_waves=args.waves) as fleet:
+        t0 = time.perf_counter()
+        tenants = submit_tenants(fleet, adj, args.tenants, rng)
+        bursts = [fleet.query(rng.standard_normal(n).astype(np.float32),
+                              tenant_id=f"burst-{i}") for i in range(8)]
+        fleet.drain()
+        wall = time.perf_counter() - t0
+
+    sessions = tenants + bursts
+    ops = sum(t.iterations for t in sessions)
+    print(f"\nfleet of {args.waves} waves served {len(sessions)} tenants "
+          f"({ops} operator applications) in {wall:.2f}s")
+    for w in fleet.waves:
+        mine = [s.tenant_id for s in sessions if s.wave_id == w.wave_id]
+        print(f"  wave {w.wave_id}: {w.passes_served} passes, "
+              f"ewma pass {w.ewma_pass_s * 1e3:.0f} ms, "
+              f"{len(mine)} tenants: {', '.join(mine)}")
+    total = fleet.io_stats.bytes_read - read0
+    agg = fleet.io_stats
+    print(f"slow-tier reads: {total / 1e6:.1f} MB; peak concurrent reads "
+          f"on one replica: {agg.max_reads_inflight}")
+    print_replica_states(replicas)
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--tenants", type=int, default=6)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--waves", type=int, default=1,
+                    help=">= 2 serves through a concurrent-wave "
+                         "ServingFleet instead of one scheduler")
+    args = ap.parse_args()
+    adj, replicas = build_replicas(args)
+    with replicas:
+        if args.waves >= 2:
+            return serve_fleet(adj, replicas, args)
+        return serve_single_wave(adj, replicas, args)
 
 
 if __name__ == "__main__":

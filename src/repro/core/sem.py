@@ -57,6 +57,7 @@ streamed after that boundary accumulate its partial first result.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from functools import partial
 from typing import Iterator, Optional, Tuple
 
@@ -65,6 +66,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.io.storage import DenseStore, IOStats, TileStore
+
+# Sentinel for "no per-pass cache override": callers that share one executor
+# (the serving fleet's waves) pass their own budget slice per multiply;
+# ``None`` must stay expressible as "explicitly uncached".
+_CACHE_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -203,7 +209,11 @@ class SEMSpMM:
         self.cache = cache
         # ``passes`` counts streaming passes over the sparse matrix (the
         # serving scheduler's amortization accounting builds on it).
+        # Concurrent serving waves may multiply through one executor at
+        # once, so the increment is lock-protected like the IOStats
+        # counters (a bare += can drop a pass under that interleaving).
         self.passes = 0
+        self._passes_lock = threading.Lock()
         if mode == "im":  # IM-SpMM: sparse matrix resident in memory
             self._cached = list(store.stream(self.cfg.chunk_batch,
                                              use_async=False))
@@ -344,15 +354,18 @@ class SEMSpMM:
         return b.x_pad
 
     def _stream_pass(self, x_pad: jax.Array, out: jax.Array,
-                     hook=None) -> jax.Array:
+                     hook=None, cache=_CACHE_UNSET) -> jax.Array:
         """One full streaming pass of the sparse matrix, accumulated into the
-        donated ``out`` blocks."""
+        donated ``out`` blocks.  ``cache`` overrides the executor-attached
+        hot-chunk cache for this pass only (the fleet's waves share one
+        executor but each reads through its own budget slice)."""
         raw = self._use_raw()
+        pass_cache = self.cache if cache is _CACHE_UNSET else cache
         batches = (iter(self._cached) if self._cached is not None else
                    self.store.stream(self.cfg.chunk_batch,
                                      prefetch=self.cfg.prefetch,
                                      use_async=self.cfg.use_async,
-                                     cache=self.cache, raw=raw))
+                                     cache=pass_cache, raw=raw))
         batches = (self._pad_tail(batches) if self.cfg.fixed_shape
                    else self._with_valid(batches))
         binary_raw = raw and self.store.header["binary"]
@@ -377,19 +390,24 @@ class SEMSpMM:
                 j, st_j = pending
                 x_pad = self._boundary(hook, j * B, x_pad, out)
                 out = step(st_j, x_pad, out)
-        self.passes += 1
+        with self._passes_lock:
+            self.passes += 1
         return out
 
     # -- regime 1/2: X in memory ------------------------------------------
-    def multiply(self, x: np.ndarray, *, boundary_hook=None) -> np.ndarray:
+    def multiply(self, x: np.ndarray, *, boundary_hook=None,
+                 cache=_CACHE_UNSET) -> np.ndarray:
         """A @ X with X (n, p) in memory; returns in-memory result.
         ``boundary_hook`` (optional) is called with a :class:`PassBoundary`
-        before each chunk batch — the elastic-admission entry point."""
-        out, _ = self._multiply(x, boundary_hook=boundary_hook)
+        before each chunk batch — the elastic-admission entry point.
+        ``cache`` (optional) overrides the attached hot-chunk cache for this
+        pass — how concurrent serving waves sharing one executor each read
+        through their own arbitrated budget slice (``None`` = uncached)."""
+        out, _ = self._multiply(x, boundary_hook=boundary_hook, cache=cache)
         return out
 
     def _multiply(self, x: np.ndarray, acc: Optional[jax.Array] = None,
-                  boundary_hook=None
+                  boundary_hook=None, cache=_CACHE_UNSET
                   ) -> Tuple[np.ndarray, Optional[jax.Array]]:
         """multiply() plus accumulator reuse: a caller looping over slices of
         equal width passes back the returned ``acc`` (still holding the
@@ -407,7 +425,7 @@ class SEMSpMM:
                 acc = jax.device_put(acc, self.device)
         else:
             acc = _zero_acc(acc)
-        out = self._stream_pass(x_pad, acc, hook=boundary_hook)
+        out = self._stream_pass(x_pad, acc, hook=boundary_hook, cache=cache)
         out.block_until_ready()   # only here — never inside the pass
         result = np.asarray(out.reshape(-1, pw)[: self.n_rows, :p])
         return result, out

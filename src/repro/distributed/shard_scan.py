@@ -134,7 +134,13 @@ class ShardedSEMSpMM:
         return IOStats.aggregate(ex.store.stats for ex in self.execs)
 
     def close(self) -> None:
+        """Release the scan thread pool and the shard views' file mappings
+        (each shard holds its own memmap of the backing file; a serving run
+        that never closed them leaked one mapping per shard per wave).
+        Idempotent — safe from both an exception path and a normal exit."""
         self._pool.shutdown(wait=True)
+        for s in self.shards:
+            s.close()
 
     def __enter__(self) -> "ShardedSEMSpMM":
         return self

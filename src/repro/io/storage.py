@@ -40,6 +40,21 @@ from repro.core.formats import ChunkedTiles
 
 @dataclasses.dataclass
 class IOStats:
+    """Per-store I/O counters.
+
+    Thread-safe: one store (a replica, or a shard view of it) is read by
+    every serving wave that streams it, concurrently — a fleet of
+    schedulers over one :class:`~repro.runtime.replica.ReplicaSet` updates
+    these counters from N wave threads plus their prefetch threads, so
+    every mutation takes the instance lock (a plain ``+=`` would drop
+    increments under that interleaving).
+
+    ``reads_inflight`` / ``max_reads_inflight`` are the per-replica
+    in-flight accounting shared across waves: how many slow-tier reads this
+    store is serving *right now* (a gauge), and the high-water mark — the
+    direct evidence of whether concurrent waves actually overlapped on this
+    spindle or were serialized somewhere above it.
+    """
     bytes_read: int = 0
     bytes_written: int = 0
     reads: int = 0
@@ -49,33 +64,64 @@ class IOStats:
                                # instead of the slow tier
     h2d_bytes: int = 0         # host->device bytes staged by the engine
     overlap_batches: int = 0   # batches whose staging overlapped compute
+    reads_inflight: int = 0    # slow-tier reads running right now (gauge)
+    max_reads_inflight: int = 0  # high-water mark of the gauge
+
+    def __post_init__(self):
+        # not a dataclass field: locks are identity objects, not counters —
+        # they must stay out of aggregate()'s field walk
+        self._lock = threading.Lock()
+
+    def begin_read(self) -> None:
+        """Mark a slow-tier read as in flight (call :meth:`end_read` when it
+        completes, whatever the outcome)."""
+        with self._lock:
+            self.reads_inflight += 1
+            if self.reads_inflight > self.max_reads_inflight:
+                self.max_reads_inflight = self.reads_inflight
+
+    def end_read(self) -> None:
+        with self._lock:
+            self.reads_inflight -= 1
 
     def add_read(self, n: int) -> None:
-        self.bytes_read += n
-        self.reads += 1
+        with self._lock:
+            self.bytes_read += n
+            self.reads += 1
 
     def add_write(self, n: int) -> None:
-        self.bytes_written += n
-        self.writes += 1
+        with self._lock:
+            self.bytes_written += n
+            self.writes += 1
 
     def add_cache_hit(self, n: int) -> None:
-        self.cache_hits += 1
-        self.cache_hit_bytes += n
+        with self._lock:
+            self.cache_hits += 1
+            self.cache_hit_bytes += n
 
     def add_h2d(self, n: int) -> None:
-        self.h2d_bytes += n
+        with self._lock:
+            self.h2d_bytes += n
 
     def add_overlap(self, n: int = 1) -> None:
-        self.overlap_batches += n
+        with self._lock:
+            self.overlap_batches += n
 
     @classmethod
     def aggregate(cls, stats: "Iterator[IOStats]") -> "IOStats":
         """Point-in-time field-wise sum (every field, so counters added
-        later aggregate without edits at the call sites)."""
+        later aggregate without edits at the call sites).  High-water marks
+        (``max_*`` fields) take the max instead — summing per-store peaks
+        would fabricate a concurrency level no single spindle ever saw."""
         agg = cls()
         for st in stats:
             for f in dataclasses.fields(cls):
-                setattr(agg, f.name, getattr(agg, f.name) + getattr(st, f.name))
+                if f.name.startswith("max_"):
+                    setattr(agg, f.name,
+                            max(getattr(agg, f.name), getattr(st, f.name)))
+                else:
+                    setattr(agg, f.name,
+                            getattr(agg, f.name) + getattr(st, f.name))
         return agg
 
 
@@ -185,6 +231,19 @@ class TileStore:
             self._mm = np.memmap(self.path + ".bin", dtype=np.uint8, mode="r")
         return self._mm
 
+    def close(self) -> None:
+        """Drop the persistent memmap (the file mapping, and with it the
+        page-cache pin on the backing file).  Safe to call on a live store:
+        the next read lazily remaps — close() releases resources, it does
+        not poison the handle."""
+        self._mm = None
+
+    def __enter__(self) -> "TileStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def read_batch_raw(self, start: int, count: int
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                   Optional[np.ndarray]]:
@@ -207,8 +266,14 @@ class TileStore:
             # the prefetch thread under stream()), not lazily at staging
             # time.  The strided walk can step over the final page when
             # ``off`` is not page-aligned — touch the last byte explicitly.
-            int(np.add.reduce(mm[off:off + nbytes:4096], dtype=np.int64))
-            int(mm[off + nbytes - 1])
+            # The in-flight gauge brackets exactly this window: it is the
+            # slow-tier access concurrent waves contend over.
+            self.stats.begin_read()
+            try:
+                int(np.add.reduce(mm[off:off + nbytes:4096], dtype=np.int64))
+                int(mm[off + nbytes - 1])
+            finally:
+                self.stats.end_read()
         self.stats.add_read(nbytes)
         meta = np.ndarray((count, 4), np.int32, buffer=mm, offset=off,
                           strides=(rec, 4)).copy()

@@ -7,11 +7,15 @@ pass and delivered from stitched partial passes (scheduler).  Iterative
 per-tenant sessions advance one operator application per pass (session),
 leftover memory budget pins hot chunk batches (cache, per-shard budget
 slices when the scan is sharded), and replica routing (replica) spreads
-waves across copies of the on-SSD matrix with failure fallback.
+waves across copies of the on-SSD matrix with failure fallback.  When
+traffic outgrows one wave, a ServingFleet (fleet) runs N elastic waves
+concurrently over one ReplicaSet with a least-backlog front-door
+dispatcher and cross-wave arbitration of the column + hot-chunk budgets.
 """
 from repro.runtime.batcher import Batcher, Wave, WaveEntry
 from repro.runtime.cache import (CacheStats, HotChunkCache,
                                  PartitionedHotChunkCache)
+from repro.runtime.fleet import FleetWave, ServingFleet
 from repro.runtime.replica import ReplicaRouter, ReplicaSet, ReplicaState
 from repro.runtime.scheduler import (MidPassState, PassReport,
                                      SharedScanScheduler)
@@ -21,7 +25,8 @@ from repro.runtime.session import (LabelPropagationSession, MultiplyRequest,
 
 __all__ = [
     "Batcher", "Wave", "WaveEntry", "CacheStats", "HotChunkCache",
-    "PartitionedHotChunkCache", "ReplicaRouter", "ReplicaSet", "ReplicaState",
+    "PartitionedHotChunkCache", "FleetWave", "ServingFleet",
+    "ReplicaRouter", "ReplicaSet", "ReplicaState",
     "MidPassState", "PassReport", "SharedScanScheduler",
     "LabelPropagationSession", "MultiplyRequest", "PageRankSession",
     "PowerIterationSession", "Session",

@@ -17,6 +17,7 @@ behind it).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
 from typing import Deque, List, Optional
 
@@ -45,11 +46,18 @@ class Wave:
 
 
 class Batcher:
-    """FIFO request queue + column packer up to a per-wave column budget."""
+    """FIFO request queue + column packer up to a per-wave column budget.
+
+    Submission is thread-safe: in a serving fleet, the front-door dispatcher
+    enqueues from its caller's thread while this batcher's wave thread pops
+    at pass (and chunk-batch) boundaries — the lock keeps the deque walk in
+    ``pending_columns`` consistent with a concurrent append, and admission
+    atomic with respect to new arrivals."""
 
     def __init__(self, n_operand_rows: int):
         self.n_operand_rows = n_operand_rows  # n_cols of the sparse operator
         self._queue: Deque[Session] = deque()
+        self._lock = threading.Lock()
         self.admitted_total = 0
 
     def submit(self, session: Session) -> Session:
@@ -61,7 +69,8 @@ class Batcher:
         if session.width < 1:
             raise ValueError("session contributes no columns; a zero-width "
                              "tenant can never be served")
-        self._queue.append(session)
+        with self._lock:
+            self._queue.append(session)
         return session
 
     @property
@@ -69,7 +78,8 @@ class Batcher:
         return len(self._queue)
 
     def pending_columns(self) -> int:
-        return sum(s.width for s in self._queue)
+        with self._lock:
+            return sum(s.width for s in self._queue)
 
     def peek(self) -> Session:
         """The queue head (the only admission candidate — FIFO, no
@@ -77,24 +87,26 @@ class Batcher:
         return self._queue[0]
 
     def pop(self) -> Session:
-        return self._queue.popleft()
+        with self._lock:
+            return self._queue.popleft()
 
     def admit(self, active: List[Session], col_budget: int) -> List[Session]:
         """Move queued sessions into ``active`` while the wave still has
         column budget.  FIFO, no overtaking — except that a session wider
         than the whole budget is admitted *alone* (the scheduler then serves
         it with vertical partitioning, paper §3.3)."""
-        while self._queue:
-            head = self._queue[0]
-            used = sum(s.width for s in active)
-            if head.width > col_budget and not active:
+        with self._lock:
+            while self._queue:
+                head = self._queue[0]
+                used = sum(s.width for s in active)
+                if head.width > col_budget and not active:
+                    active.append(self._queue.popleft())
+                    self.admitted_total += 1
+                    break  # oversized tenant gets a dedicated (sliced) wave
+                if used + head.width > col_budget:
+                    break
                 active.append(self._queue.popleft())
                 self.admitted_total += 1
-                break  # oversized tenant gets a dedicated (sliced) wave
-            if used + head.width > col_budget:
-                break
-            active.append(self._queue.popleft())
-            self.admitted_total += 1
         return active
 
     @staticmethod

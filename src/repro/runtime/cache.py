@@ -135,8 +135,8 @@ class HotChunkCache:
 
 
 class PartitionedHotChunkCache:
-    """Shard-aware budget split: one child :class:`HotChunkCache` per shard,
-    each owning an equal slice of the total budget.
+    """Shard-aware budget split: one child :class:`HotChunkCache` per slice,
+    each owning its own portion of the total budget.
 
     A sharded scan hits the cache from every shard's prefetch thread at
     once; with one shared budget a fast shard (small byte range, quick
@@ -145,13 +145,20 @@ class PartitionedHotChunkCache:
     per shard makes eviction pressure local: shard i's offers compete only
     against shard i's pins.  The scheduler resizes the whole partition each
     pass (``set_budget``) and reads aggregated stats; executors read/write
-    through their own ``shard(i)`` slice."""
+    through their own ``shard(i)`` slice.
+
+    The slices need not be equal: the serving fleet gives each wave one
+    slice, which the wave's scheduler resizes every pass (``set_budget`` on
+    its adopted shard) with its arbitrated share of the global leftover,
+    and the fleet zeroes through ``set_slice_budget`` when a wave drains —
+    so slices rebalance continuously (a retired wave's slice shrinks to
+    zero and the freed bytes reappear in the survivors' shares).
+    ``budget_bytes`` always reports the live sum of the slices."""
 
     def __init__(self, n_shards: int, budget_bytes: int = 0):
         if n_shards < 1:
             raise ValueError("need at least one shard")
         self.shards = [HotChunkCache(0) for _ in range(n_shards)]
-        self.budget_bytes = 0
         self.set_budget(budget_bytes)
 
     def shard(self, i: int) -> HotChunkCache:
@@ -161,13 +168,22 @@ class PartitionedHotChunkCache:
     def n_shards(self) -> int:
         return len(self.shards)
 
+    @property
+    def budget_bytes(self) -> int:
+        """Total live budget: the sum of the (possibly unequal) slices."""
+        return sum(c.budget_bytes for c in self.shards)
+
     def set_budget(self, budget_bytes: int) -> None:
         """Split the total budget equally; each child evicts down to its own
         slice (a squeeze on one shard never touches another's pins)."""
-        self.budget_bytes = max(0, int(budget_bytes))
-        per = self.budget_bytes // len(self.shards)
+        per = max(0, int(budget_bytes)) // len(self.shards)
         for c in self.shards:
             c.set_budget(per)
+
+    def set_slice_budget(self, i: int, budget_bytes: int) -> None:
+        """Resize slice ``i`` alone (evicting it down if squeezed); the
+        other slices' budgets and pins are untouched."""
+        self.shards[i].set_budget(budget_bytes)
 
     @property
     def pinned_bytes(self) -> int:

@@ -34,7 +34,7 @@ from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.sem import SEMConfig, SEMSpMM
+from repro.core.sem import _CACHE_UNSET, SEMConfig, SEMSpMM
 from repro.io.storage import IOStats, TileStore, validate_replicas
 
 
@@ -183,18 +183,35 @@ class ReplicaSet:
     def io_stats(self) -> IOStats:
         return IOStats.aggregate(ex.store.stats for ex in self.execs)
 
+    def close(self) -> None:
+        """Release every replica's persistent file mapping.  Safe on a live
+        set (stores remap lazily on the next read) — this is the symmetric
+        cleanup the scheduler/fleet context managers call, so an exception
+        path never leaks N memmaps per serving run."""
+        for ex in self.execs:
+            ex.store.close()
+
+    def __enter__(self) -> "ReplicaSet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- the routed scan -----------------------------------------------------
-    def multiply(self, x: np.ndarray, *, boundary_hook=None) -> np.ndarray:
+    def multiply(self, x: np.ndarray, *, boundary_hook=None,
+                 cache=_CACHE_UNSET) -> np.ndarray:
         """A @ X on the best-ranked healthy replica, falling back in rank
         order on replica failure.  Bit-identical across replicas (same
-        bytes, same engine, same jit entries)."""
+        bytes, same engine, same jit entries).  ``cache`` rides through to
+        the chosen replica's pass (the fleet's per-wave budget slice);
+        unset, each replica uses its own attached cache."""
         last_exc: Optional[BaseException] = None
         for rid in self.router.ranked():
             ex = self.execs[rid]
             self.router.begin(rid)
             t0 = time.perf_counter()
             try:
-                y = ex.multiply(x, boundary_hook=boundary_hook)
+                y = ex.multiply(x, boundary_hook=boundary_hook, cache=cache)
             except OSError as e:
                 self.router.fail(rid, e)
                 last_exc = e

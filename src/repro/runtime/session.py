@@ -35,6 +35,10 @@ class Session:
         self.t_first_result: Optional[float] = None
         self.submit_clock: Optional[int] = None
         self.first_result_clock: Optional[int] = None
+        # Which serving wave the fleet dispatcher routed this session to
+        # (None when served by a lone scheduler) — the observable the
+        # routing tests and per-wave load reports key on.
+        self.wave_id: Optional[int] = None
 
     @property
     def width(self) -> int:

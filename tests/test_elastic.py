@@ -111,7 +111,10 @@ def test_midpass_widening_adds_no_jit_entries(store_path, small_valued):
     before = sem_mod._batch_step._cache_size()
     req, sched = serve_midpass(store_path, x, elastic=True, capacity=7)
     assert req.done
-    assert sem_mod._batch_step._cache_size() - before == 1
+    # at most the run's own (C, T, capacity) entry — 0 when another test in
+    # the session already compiled that shape; the claim under test is that
+    # the mid-pass widening adds no SECOND entry
+    assert sem_mod._batch_step._cache_size() - before <= 1
 
 
 def test_rolling_iterative_session_matches_plain_run(store_path,

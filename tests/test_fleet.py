@@ -1,0 +1,330 @@
+"""Concurrent-wave fleet tests: bit-identity of a fleet-of-N vs a single
+scheduler on the same tenant mix, least-backlog dispatcher routing under
+skewed load, cross-wave budget arbitration (column slices + cache-slice
+rebalance after a wave drains), per-replica in-flight accounting shared
+across waves, and clean shutdown with a wave mid-pass."""
+import shutil
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.formats import to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.io.storage import IOStats, TileStore
+from repro.runtime import (PowerIterationSession, ReplicaSet, ServingFleet,
+                           SharedScanScheduler)
+
+BATCH = 16
+
+
+@pytest.fixture(scope="module")
+def store_path(small_valued, tmp_path_factory):
+    ct = to_chunked(small_valued, T=512, C=128)
+    path = str(tmp_path_factory.mktemp("fleet") / "g")
+    TileStore.write(path, ct)
+    return path
+
+
+@pytest.fixture(scope="module")
+def replica_paths(store_path, tmp_path_factory):
+    root = tmp_path_factory.mktemp("fleet_replicas")
+    paths = [store_path]
+    for i in (1, 2):
+        p = str(root / f"copy{i}")
+        shutil.copy(store_path + ".bin", p + ".bin")
+        shutil.copy(store_path + ".json", p + ".json")
+        paths.append(p)
+    return paths
+
+
+def fresh_sem(store_path, **cfg):
+    return SEMSpMM(TileStore.open(store_path),
+                   SEMConfig(chunk_batch=BATCH, **cfg))
+
+
+def replica_set(paths, n=2, **cfg):
+    return ReplicaSet(TileStore.open_replicas(paths[:n]),
+                      SEMConfig(chunk_batch=BATCH, **cfg))
+
+
+def tenant_mix(n_cols, rng):
+    """The shared workload for identity tests: one-shot vectors plus
+    iterative power-iteration tenants."""
+    xs = [rng.standard_normal(n_cols).astype(np.float32) for _ in range(6)]
+    x0s = [rng.standard_normal(n_cols).astype(np.float32) for _ in range(3)]
+    return xs, x0s
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: a fleet-of-N serves the same bits as one scheduler
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_waves", [2, 3])
+def test_fleet_bit_identical_to_single_scheduler(replica_paths, store_path,
+                                                 small_valued, n_waves):
+    rng = np.random.default_rng(3)
+    xs, x0s = tenant_mix(small_valued.n_cols, rng)
+
+    with SharedScanScheduler(fresh_sem(store_path), use_cache=False) as lone:
+        lone_reqs = [lone.query(x, tenant_id=f"q{i}")
+                     for i, x in enumerate(xs)]
+        lone_pis = [lone.submit(PowerIterationSession(
+            x0.copy(), tol=0.0, max_iter=4)) for x0 in x0s]
+        lone.run()
+
+    with ServingFleet(replica_set(replica_paths, n=3), n_waves=n_waves,
+                      use_cache=False) as fleet:
+        reqs = [fleet.query(x, tenant_id=f"q{i}") for i, x in enumerate(xs)]
+        pis = [fleet.submit(PowerIterationSession(
+            x0.copy(), tol=0.0, max_iter=4)) for x0 in x0s]
+        fleet.drain(timeout=120)
+        for lr, fr in zip(lone_reqs, reqs):
+            assert fr.done
+            np.testing.assert_array_equal(fr.result, lr.result)
+        for lp, fp in zip(lone_pis, pis):
+            assert fp.done and fp.iterations == lp.iterations
+            assert fp.residuals == lp.residuals
+            assert fp.eigenvalue == lp.eigenvalue
+            np.testing.assert_array_equal(fp.result, lp.result)
+
+
+def test_fleet_with_cache_bit_identical(replica_paths, store_path,
+                                        small_valued):
+    """Arbitrated cache slices change I/O, never bits: a cached fleet run
+    equals the uncached lone-scheduler run and records cache hits."""
+    rng = np.random.default_rng(4)
+    x0 = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    want = None
+    with SharedScanScheduler(fresh_sem(store_path), use_cache=False) as lone:
+        s = lone.submit(PowerIterationSession(x0.copy(), tol=0.0, max_iter=5))
+        lone.run()
+        want = s
+    with ServingFleet(replica_set(replica_paths), n_waves=2,
+                      use_cache=True) as fleet:
+        pis = [fleet.submit(PowerIterationSession(
+            x0.copy(), tol=0.0, max_iter=5)) for _ in range(2)]
+        fleet.drain(timeout=120)
+        assert fleet.cache.stats.hits > 0
+        for p in pis:
+            assert p.done
+            assert p.residuals == want.residuals
+            np.testing.assert_array_equal(p.result, want.result)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher routing
+# ---------------------------------------------------------------------------
+def test_dispatcher_routes_around_skewed_load(replica_paths, small_valued):
+    """A wave saddled with a long iterative tenant is routed around: the
+    follow-up burst lands on the idle wave (least estimated backlog =
+    live columns x measured pass time)."""
+    rng = np.random.default_rng(5)
+    n = small_valued.n_cols
+    with ServingFleet(replica_set(replica_paths), n_waves=2,
+                      use_cache=False) as fleet:
+        heavy = fleet.submit(PowerIterationSession(
+            rng.standard_normal(n).astype(np.float32), tol=0.0, max_iter=30))
+        # give the heavy wave a measured pass time and a visible backlog
+        while fleet.waves[heavy.wave_id].ewma_pass_s == 0.0:
+            time.sleep(0.01)
+        burst = [fleet.query(rng.standard_normal(n).astype(np.float32),
+                             tenant_id=f"b{i}") for i in range(3)]
+        assert all(b.wave_id != heavy.wave_id for b in burst)
+        fleet.drain(timeout=120)
+        assert heavy.done and all(b.done for b in burst)
+
+
+def test_dispatcher_spreads_a_cold_burst(replica_paths, small_valued):
+    """With no measurements yet, ties break on live columns, so a cold
+    burst is spread across waves instead of piling onto wave 0."""
+    rng = np.random.default_rng(6)
+    n = small_valued.n_cols
+    with ServingFleet(replica_set(replica_paths), n_waves=2,
+                      use_cache=False) as fleet:
+        reqs = [fleet.query(rng.standard_normal(n).astype(np.float32))
+                for _ in range(4)]
+        assert sorted({r.wave_id for r in reqs}) == [0, 1]
+        fleet.drain(timeout=120)
+
+
+# ---------------------------------------------------------------------------
+# Cross-wave budget arbitration
+# ---------------------------------------------------------------------------
+def test_column_budget_sliced_per_wave(replica_paths, small_valued):
+    """Each wave's admission budget is the global §3.6 fit divided by the
+    number of waves — the fleet's X's are all resident at once."""
+    rs = replica_set(replica_paths)
+    fit8 = (rs.stream_overhead_bytes() + rs.column_bytes() * 8
+            + rs.column_bytes() // 2)
+    rs.cfg.memory_budget_bytes = fit8
+    with ServingFleet(rs, n_waves=2, use_cache=False) as fleet:
+        assert rs.columns_that_fit(64) == 8
+        for w in fleet.waves:
+            assert w.executor.columns_that_fit(64) == 4
+
+
+def test_cache_slices_rebalance_after_wave_drains(replica_paths,
+                                                  small_valued):
+    """While both waves hold columns each gets half the leftover; once one
+    wave drains, the survivor's arbitrated leftover (and hence its cache
+    slice budget) grows, and the drained wave's slice is released."""
+    class SlowStore(TileStore):
+        """~40ms passes: both waves' early passes reliably overlap, so the
+        survivor's first reports see the shared (halved) leftover."""
+        def read_batch_raw(self, start, count):
+            time.sleep(0.003)
+            return super().read_batch_raw(start, count)
+
+    stores = [SlowStore(p, TileStore.open(p).header)
+              for p in replica_paths[:2]]
+    rs = ReplicaSet(stores, SEMConfig(chunk_batch=BATCH))
+    rng = np.random.default_rng(7)
+    n = small_valued.n_cols
+    with ServingFleet(rs, n_waves=2, use_cache=True, capacity=2) as fleet:
+        long_s = fleet.submit(PowerIterationSession(
+            rng.standard_normal(n).astype(np.float32), tol=0.0, max_iter=16))
+        short_s = fleet.submit(PowerIterationSession(
+            rng.standard_normal(n).astype(np.float32), tol=0.0, max_iter=2))
+        assert long_s.wave_id != short_s.wave_id
+        fleet.drain(timeout=120)
+        assert long_s.done and short_s.done
+        long_wave = fleet.waves[long_s.wave_id]
+        budgets = [r.cache_budget for r in long_wave.scheduler.reports]
+        # at least one early pass shared the leftover with the short wave;
+        # after it drained the survivor's slice roughly doubled
+        assert budgets[-1] > min(budgets[:4]) * 1.5, budgets
+        # the drained wave's slice was zeroed on idle
+        deadline = time.monotonic() + 5
+        drained_slice = fleet.cache.shard(short_s.wave_id)
+        while drained_slice.budget_bytes and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert drained_slice.budget_bytes == 0
+        assert drained_slice.pinned_bytes == 0
+
+
+def test_arbiter_splits_leftover_across_busy_waves(replica_paths):
+    rs = replica_set(replica_paths)
+    with ServingFleet(rs, n_waves=2, use_cache=False) as fleet:
+        # both waves holding 4 columns: each sees half the global leftover
+        both = fleet._wave_leftover(0, 4)
+        both = fleet._wave_leftover(1, 4)  # second call sees both claims
+        assert both == rs.leftover_budget(8) // 2
+        # wave 0 drains: wave 1 now sees the whole leftover after 4 cols
+        fleet._set_wave_cols(0, 0)
+        assert fleet._wave_leftover(1, 4) == rs.leftover_budget(4)
+
+
+# ---------------------------------------------------------------------------
+# Shared in-flight accounting (io/storage.py)
+# ---------------------------------------------------------------------------
+def test_inflight_read_accounting_is_shared_and_thread_safe(store_path):
+    """Two threads reading one store overlap: the gauge peaks at 2 and
+    settles back to 0; byte counters lose nothing to the interleaving."""
+    class SlowStore(TileStore):
+        def read_batch_raw(self, start, count):
+            self.stats.begin_read()
+            try:
+                time.sleep(0.15)
+            finally:
+                self.stats.end_read()
+            return super().read_batch_raw(start, count)
+
+    st = SlowStore(store_path, TileStore.open(store_path).header)
+    barrier = threading.Barrier(2)
+
+    def scan():
+        barrier.wait()
+        st.read_batch_raw(0, 4)
+
+    threads = [threading.Thread(target=scan) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert st.stats.max_reads_inflight == 2
+    assert st.stats.reads_inflight == 0
+    assert st.stats.reads == 2
+    rec = st.header["record"]
+    assert st.stats.bytes_read == 2 * 4 * rec
+
+
+def test_iostats_aggregate_maxes_highwater_and_sums_counters():
+    a, b = IOStats(), IOStats()
+    a.add_read(10), b.add_read(30)
+    a.max_reads_inflight, b.max_reads_inflight = 3, 2
+    a.reads_inflight, b.reads_inflight = 1, 1
+    agg = IOStats.aggregate([a, b])
+    assert agg.bytes_read == 40 and agg.reads == 2
+    assert agg.max_reads_inflight == 3      # max, not 5
+    assert agg.reads_inflight == 2          # gauge sums point-in-time
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle
+# ---------------------------------------------------------------------------
+def test_clean_shutdown_with_wave_midpass(replica_paths, small_valued,
+                                          tmp_path):
+    """close() while a pass is in flight: the pass completes, threads join,
+    queued work is abandoned without a hang or an exception."""
+    class CrawlStore(TileStore):
+        def read_batch_raw(self, start, count):
+            time.sleep(0.02)
+            return super().read_batch_raw(start, count)
+
+    stores = [CrawlStore(p, TileStore.open(p).header)
+              for p in replica_paths[:2]]
+    rs = ReplicaSet(stores, SEMConfig(chunk_batch=BATCH))
+    rng = np.random.default_rng(8)
+    n = small_valued.n_cols
+    fleet = ServingFleet(rs, n_waves=2, use_cache=False)
+    sessions = [fleet.submit(PowerIterationSession(
+        rng.standard_normal(n).astype(np.float32), tol=0.0, max_iter=50))
+        for _ in range(2)]
+    # wait until a pass is genuinely in flight, then pull the plug
+    deadline = time.monotonic() + 10
+    while not any(w.in_pass for w in fleet.waves):
+        assert time.monotonic() < deadline
+        time.sleep(0.005)
+    t0 = time.monotonic()
+    fleet.close()
+    assert time.monotonic() - t0 < 30
+    assert all(not w.thread.is_alive() for w in fleet.waves)
+    assert not all(s.done for s in sessions)  # abandoned, not served
+    fleet.close()  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        fleet.query(np.ones(n, np.float32))
+
+
+def test_drain_surfaces_wave_failure(replica_paths, small_valued):
+    """Every replica failing kills the wave's pass; drain() re-raises
+    instead of hanging on a wave that will never go idle."""
+    rs = replica_set(replica_paths, n=2)
+    for ex in rs.execs:
+        ex.store.read_batch_raw = lambda s, c: (_ for _ in ()).throw(
+            OSError("spindle gone"))
+    fleet = ServingFleet(rs, n_waves=2, use_cache=False)
+    try:
+        fleet.submit(PowerIterationSession(
+            np.ones(small_valued.n_cols, np.float32), tol=0.0, max_iter=3))
+        with pytest.raises(RuntimeError, match="wave"):
+            fleet.drain(timeout=60)
+    finally:
+        fleet.close()
+
+
+def test_fleet_of_one_degenerates_to_single_scheduler(replica_paths,
+                                                      store_path,
+                                                      small_valued):
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x[:, None])[:, 0]
+    with ServingFleet(replica_set(replica_paths), n_waves=1,
+                      use_cache=False) as fleet:
+        r = fleet.query(x)
+        fleet.drain(timeout=60)
+        np.testing.assert_array_equal(r.result, want)
+        assert r.wave_id == 0
+
+    with pytest.raises(ValueError, match="at least one wave"):
+        ServingFleet(replica_set(replica_paths), n_waves=0)

@@ -1,12 +1,14 @@
 """The CI benchmark regression gate must trip on a synthetic >20%
-regression (acceptance criterion) and stay quiet inside the tolerance."""
+regression (acceptance criterion) and stay quiet inside the tolerance —
+for both the streaming-engine and the serving-runtime trajectories."""
 import json
 import sys
 
 import pytest
 
 sys.path.insert(0, ".")  # benchmarks/ is a repo-root package, like the CI job
-from benchmarks.check_regression import compare, main  # noqa: E402
+from benchmarks.check_regression import (compare, compare_runtime,  # noqa: E402
+                                         main)
 
 
 def summary(speedup=1.6, h2d=26.0):
@@ -20,6 +22,23 @@ def summary(speedup=1.6, h2d=26.0):
             for e in ("serial", "overlapped", "sharded-4")],
         "overlap_speedup_emulated": speedup,
         "h2d_index_saving_mb": 11.0,
+    }
+
+
+def runtime_summary(mid=3, between=7, fleet2=1.9):
+    return {
+        "boundaries_to_first_result": {"mid-pass": mid,
+                                       "between-pass": between},
+        "seconds_to_first_result": {"mid-pass": 0.19, "between-pass": 0.41},
+        "fleet": {
+            "spindles": 2, "capacity": 4,
+            "wide_cols_per_s": 15.0,
+            "fleet2_cols_per_s": 15.0 * fleet2,
+            "fleet4_cols_per_s": 30.2,
+            "fleet2_speedup_vs_wide": fleet2,
+            "fleet4_speedup_vs_wide": 2.0,
+        },
+        "replica_scan_speedup": 1.8,
     }
 
 
@@ -67,6 +86,62 @@ def test_main_exit_codes_and_mode_matching(tmp_path):
     lonely.write_text(json.dumps({"full": summary()}))
     with pytest.raises(SystemExit, match="quick"):
         main([str(fresh_path), str(lonely), "--mode", "quick"])
+
+
+def test_runtime_gate_passes_within_tolerance():
+    base = runtime_summary()
+    ok = runtime_summary(mid=3, fleet2=1.9 * 0.85)  # 15% drift: fine
+    assert compare_runtime(ok, base, tolerance=0.2) == []
+
+
+def test_runtime_gate_trips_on_ttfr_regression():
+    # 3 -> 5 boundaries is a >20% loss of the mid-pass head start
+    problems = compare_runtime(runtime_summary(mid=5), runtime_summary(),
+                               tolerance=0.2)
+    assert len(problems) == 1 and "boundaries-to-first-result" in problems[0]
+
+
+def test_runtime_gate_trips_when_midpass_stops_winning():
+    problems = compare_runtime(runtime_summary(mid=7, between=7),
+                               runtime_summary(mid=7, between=7),
+                               tolerance=0.2)
+    assert any("no longer beats" in p for p in problems)
+
+
+def test_runtime_gate_trips_on_fleet_speedup_regression():
+    problems = compare_runtime(runtime_summary(fleet2=1.9 * 0.75),
+                               runtime_summary(), tolerance=0.2)
+    assert len(problems) == 1 and "fleet-of-2" in problems[0]
+
+
+def test_runtime_gate_enforces_absolute_fleet_floor():
+    # a baseline that itself decayed cannot ratchet the floor below 1.3x
+    problems = compare_runtime(runtime_summary(fleet2=1.2),
+                               runtime_summary(fleet2=1.25), tolerance=0.2)
+    assert any("acceptance floor" in p for p in problems)
+
+
+def test_main_gates_runtime_alongside_engine(tmp_path):
+    eng = tmp_path / "eng.json"
+    eng.write_text(json.dumps({"quick": summary()}))
+    rt_base = tmp_path / "rt_base.json"
+    rt_base.write_text(json.dumps({"quick": runtime_summary()}))
+
+    healthy = tmp_path / "rt_ok.json"
+    healthy.write_text(json.dumps({"quick": runtime_summary()}))
+    assert main([str(eng), str(eng), "--runtime", str(healthy),
+                 "--runtime-baseline", str(rt_base),
+                 "--mode", "quick"]) == 0
+
+    # a runtime-only regression must fail the combined gate
+    sick = tmp_path / "rt_sick.json"
+    sick.write_text(json.dumps({"quick": runtime_summary(fleet2=1.0)}))
+    assert main([str(eng), str(eng), "--runtime", str(sick),
+                 "--runtime-baseline", str(rt_base),
+                 "--mode", "quick"]) == 1
+
+    # without --runtime the engine-only contract is unchanged
+    assert main([str(eng), str(eng), "--mode", "quick"]) == 0
 
 
 def test_legacy_flat_schema_reads_as_full(tmp_path):
