@@ -21,7 +21,11 @@ against the committed ``BENCH_runtime.json``:
 * elastic admission's boundaries-to-first-result grow (mid-pass delivery
   lost its head-start), or mid-pass stops beating between-pass outright;
 * the fleet's aggregate-throughput speedup over one wide wave drops — or
-  falls below the 1.3x acceptance floor on 2 emulated spindles.
+  falls below the 1.3x acceptance floor on 2 emulated spindles;
+* (when the summaries carry a ``cluster`` section, written by the
+  ``net_cluster`` bench) the 2-host/1-host cross-host speedup drops
+  beyond tolerance or falls below the 1.5x acceptance floor, or the
+  kill-host-mid-pass failover lost a tenant / broke bit-identity.
 
 Comparisons are mode-matched (``full`` vs ``full``, ``quick`` vs
 ``quick``): quick-mode sizes are different, so cross-mode deltas are
@@ -35,7 +39,8 @@ import json
 import sys
 from typing import Dict, List
 
-FLEET_SPEEDUP_FLOOR = 1.3   # the acceptance bar on 2 emulated spindles
+FLEET_SPEEDUP_FLOOR = 1.3     # the acceptance bar on 2 emulated spindles
+CLUSTER_SPEEDUP_FLOOR = 1.5   # 2 localhost hosts vs 1, disjoint spindles
 
 
 def _load_mode(path: str, mode: str) -> Dict:
@@ -108,6 +113,47 @@ def compare_runtime(fresh: Dict, baseline: Dict,
     return problems
 
 
+def compare_cluster(fresh: Dict, baseline: Dict,
+                    tolerance: float) -> List[str]:
+    """Cross-host tier regression messages (empty == gate passes).  The
+    fresh summary must carry the ``cluster`` section (CI runs the
+    ``net_cluster`` bench into the same --json-out); a baseline without one
+    predates the tier, so only the absolute floors apply."""
+    problems: List[str] = []
+    cl_f = fresh.get("cluster")
+    if cl_f is None:
+        return ["fresh runtime summary has no 'cluster' section — "
+                "run the net_cluster bench into the same --json-out"]
+
+    s_f = cl_f["hosts2_speedup_vs_1"]
+    cl_b = baseline.get("cluster")
+    if cl_b is not None:
+        s_b = cl_b["hosts2_speedup_vs_1"]
+        if s_f < s_b * (1.0 - tolerance):
+            problems.append(
+                f"2-host cluster speedup regressed: {s_f:.3f}x vs "
+                f"baseline {s_b:.3f}x (floor {s_b * (1 - tolerance):.3f}x)")
+    if s_f < CLUSTER_SPEEDUP_FLOOR:
+        problems.append(
+            f"2-host cluster speedup {s_f:.3f}x is below the "
+            f"{CLUSTER_SPEEDUP_FLOOR}x acceptance floor (disjoint "
+            f"emulated spindles)")
+
+    fo = cl_f["failover"]
+    if fo["completed"] != fo["tenants"]:
+        problems.append(
+            f"kill-host failover lost tenants: {fo['completed']}/"
+            f"{fo['tenants']} completed")
+    if not fo.get("bit_identical", False):
+        problems.append("failover results were not bit-identical to the "
+                        "lone in-process fleet")
+    if fo.get("resubmits", 0) < 1 or fo.get("evicted", 0) < 1:
+        problems.append(
+            f"kill-host phase exercised no failover path "
+            f"(evicted={fo.get('evicted')}, resubmits={fo.get('resubmits')})")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", help="BENCH_engine.json from this run")
@@ -136,10 +182,17 @@ def main(argv=None) -> int:
         fresh_rt = _load_mode(args.runtime, args.mode)
         base_rt = _load_mode(args.runtime_baseline, args.mode)
         problems += compare_runtime(fresh_rt, base_rt, args.tolerance)
+        problems += compare_cluster(fresh_rt, base_rt, args.tolerance)
         mid = fresh_rt["boundaries_to_first_result"]["mid-pass"]
         fleet2 = fresh_rt["fleet"]["fleet2_speedup_vs_wide"]
         gates.append(f"mid-pass ttfr {mid} boundaries, "
                      f"fleet-2 {fleet2:.2f}x")
+        cl = fresh_rt.get("cluster")
+        if cl:
+            gates.append(
+                f"2-host cluster {cl['hosts2_speedup_vs_1']:.2f}x, "
+                f"failover {cl['failover']['completed']}/"
+                f"{cl['failover']['tenants']} tenants")
     if problems:
         for p in problems:
             print(f"[regression] {p}")

@@ -42,6 +42,7 @@ BENCHES = [
     ("table2_convert", "benchmarks.bench_convert"),
     ("fig14_16_apps", "benchmarks.bench_apps"),
     ("runtime_serving", "benchmarks.bench_runtime"),
+    ("net_cluster", "benchmarks.bench_net"),
     ("engine", "benchmarks.bench_engine"),
 ]
 
@@ -115,6 +116,43 @@ def write_runtime_json(rows, out_path=None, quick=False) -> str:
     return _merge_mode_json(summary, path, quick)
 
 
+def write_net_json(rows, out_path=None, quick=False) -> str:
+    """Distill the cross-host cluster bench into the ``cluster`` section of
+    BENCH_runtime.json's mode block — merged *into* the block (the
+    runtime_serving bench writes the rest of it, possibly in the same run
+    via a shared ``--json-out``), never clobbering it."""
+    thr = {r["mode"]: r for r in rows
+           if r["workload"] == "cluster_throughput"}
+    fo = next(r for r in rows if r["workload"] == "cluster_failover")
+    one = thr["hosts-1"]["col_passes_per_s"]
+    two = thr["hosts-2"]["col_passes_per_s"]
+    summary = {
+        "tenants": thr["hosts-1"]["tenants"],
+        "hosts1_col_passes_per_s": one,
+        "hosts2_col_passes_per_s": two,
+        "hosts2_speedup_vs_1": two / one,
+        "failover": {
+            "tenants": fo["tenants"],
+            "completed": fo["completed"],
+            "resubmits": fo["resubmits"],
+            "evicted": fo["evicted"],
+            "bit_identical": bool(fo["bit_identical"]),
+        },
+    }
+    path = out_path or os.path.join(REPO_ROOT, "BENCH_runtime.json")
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+        if "full" not in merged and "quick" not in merged:
+            merged = {"full": merged}
+    block = merged.setdefault("quick" if quick else "full", {})
+    block["cluster"] = summary
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1)
+    return path
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -144,6 +182,9 @@ def main(argv=None) -> int:
                 print(f"[bench] wrote {out}")
             if args.json and name == "runtime_serving" and rows:
                 out = write_runtime_json(rows, args.json_out, args.quick)
+                print(f"[bench] wrote {out}")
+            if args.json and name == "net_cluster" and rows:
+                out = write_net_json(rows, args.json_out, args.quick)
                 print(f"[bench] wrote {out}")
             print(f"[bench] {name}: ok ({time.time() - t0:.1f}s)\n")
         except Exception as e:  # noqa: BLE001

@@ -27,6 +27,17 @@ global column/hot-chunk budget is arbitrated across waves.  On a
 deployment with as many replica spindles as waves, aggregate throughput
 scales with the wave count (see ``benchmarks/bench_runtime.py``).
 
+With ``--hosts N`` (N >= 2) the demo goes cross-host: it spawns N local
+``python -m repro.net.host`` processes — each one a full HostServer
+wrapping its own ServingFleet over its own store copy — and serves the
+tenant mix through a ``ClusterFrontDoor`` speaking the length-prefixed
+wire protocol over localhost sockets.  The front door routes each tenant
+to the least-estimated-backlog host (fed by heartbeat gauges), arbitrates
+the global memory budget across hosts, and — because sessions are
+deterministic replays — would resubmit a dead host's tenants to the
+survivors bit-identically (see ``tests/test_net.py`` and
+``benchmarks/bench_net.py`` for the kill-host drill).
+
 The single-wave demo drips one-shot queries in mid-pass (via the
 scheduler's boundary probe, so the run is deterministic) and prints each
 pass's mid-pass admissions/completions plus every late query's
@@ -35,17 +46,21 @@ time-to-first-result in chunk-batch boundaries.
 import argparse
 import os
 import shutil
+import subprocess
+import sys
 import tempfile
 import time
 
 import numpy as np
 
-from repro.apps.pagerank import build_operator, pagerank_session
+from repro.apps.pagerank import (build_operator, dangling_vertices,
+                                 pagerank_session)
 from repro.core.formats import to_chunked
 from repro.core.sem import SEMConfig
 from repro.io.storage import TileStore
+from repro.net import ClusterFrontDoor
 from repro.runtime import (PowerIterationSession, ReplicaSet, ServingFleet,
-                           SharedScanScheduler)
+                           SessionSpec, SharedScanScheduler)
 from repro.sparse.generate import rmat
 
 
@@ -167,6 +182,76 @@ def serve_fleet(adj, replicas, args) -> int:
     return 0
 
 
+def serve_cluster(args) -> int:
+    """Cross-host serving: N spawned HostServer processes behind one
+    ClusterFrontDoor speaking the wire protocol over localhost."""
+    adj = rmat(args.scale, 16, seed=1)
+    print(f"graph: {adj.n_rows} vertices, {adj.nnz} edges")
+    ct = to_chunked(build_operator(adj), T=1024, C=256)
+    root = tempfile.mkdtemp(prefix="serve_cluster_")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(repo, "src"),
+                    env.get("PYTHONPATH", "")] if p)
+    procs = []
+    try:
+        paths = [os.path.join(root, f"host{i}") for i in range(args.hosts)]
+        store = TileStore.write(paths[0], ct)
+        for p in paths[1:]:
+            shutil.copy(paths[0] + ".bin", p + ".bin")
+            shutil.copy(paths[0] + ".json", p + ".json")
+        print(f"operator on slow tier: {store.nbytes / 1e6:.1f} MB "
+              f"x {args.hosts} host(s), one store copy each")
+        procs = [subprocess.Popen(
+            [sys.executable, "-m", "repro.net.host", "--store", p,
+             "--waves", str(max(1, args.waves))],
+            stdout=subprocess.PIPE, env=env, text=True) for p in paths]
+        ports = []
+        for pr in procs:
+            line = pr.stdout.readline()
+            assert line.startswith("LISTENING "), line
+            ports.append(int(line.split()[1]))
+        print(f"hosts listening on ports {ports}")
+
+        rng = np.random.default_rng(0)
+        n = adj.n_rows
+        with ClusterFrontDoor(memory_budget_bytes=512 << 20) as door:
+            for port in ports:
+                door.add_host("127.0.0.1", port)
+            t0 = time.perf_counter()
+            tickets = [door.submit(SessionSpec.pagerank(
+                n, dangling_vertices(adj).astype(np.uint8),
+                max_iter=10 + 3 * i, tenant_id=f"pagerank-{i}"))
+                for i in range(args.tenants)]
+            tickets += [door.submit(SessionSpec.multiply(
+                rng.standard_normal(n).astype(np.float32),
+                tenant_id=f"burst-{i}")) for i in range(4)]
+            tickets.append(door.submit(SessionSpec.bfs(
+                np.array([0]), n, tenant_id="bfs-0")))
+            door.drain(tickets, timeout=600)
+            wall = time.perf_counter() - t0
+            print(f"\ncluster of {args.hosts} hosts served {len(tickets)} "
+                  f"tenants in {wall:.2f}s")
+            for t in tickets:
+                print(f"  {t.tenant_id}: host={t.host_key} "
+                      f"iters={t.iterations} resubmits={t.resubmits}")
+            agg = door.cluster_io_stats()
+            print(f"cluster slow-tier reads: {agg.bytes_read / 1e6:.1f} MB")
+            door.shutdown_hosts()
+        return 0
+    finally:
+        for pr in procs:
+            if pr.poll() is None:
+                pr.terminate()
+        for pr in procs:
+            try:
+                pr.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                pr.kill()
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=12)
@@ -175,7 +260,13 @@ def main() -> int:
     ap.add_argument("--waves", type=int, default=1,
                     help=">= 2 serves through a concurrent-wave "
                          "ServingFleet instead of one scheduler")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help=">= 2 spawns that many local HostServer "
+                         "processes and serves through the cross-host "
+                         "ClusterFrontDoor instead")
     args = ap.parse_args()
+    if args.hosts >= 2:
+        return serve_cluster(args)
     adj, replicas = build_replicas(args)
     with replicas:
         if args.waves >= 2:

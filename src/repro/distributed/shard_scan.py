@@ -47,6 +47,36 @@ from repro.core.sem import SEMConfig, SEMSpMM
 from repro.io.storage import IOStats, TileStore, validate_replicas
 
 
+class _RecordingBoundary:
+    """Proxy around the coordinator shard's :class:`PassBoundary` that logs
+    every ``write_columns`` call so :meth:`ShardedSEMSpMM.multiply` can
+    replay the same writes onto the operand the held-back shards stream.
+    ``read_output``/``chunk_start`` pass straight through — the coordinator
+    shard starts at global chunk 0, so both are already in global frame."""
+
+    def __init__(self, inner, writes):
+        self._inner = inner
+        self._writes = writes
+
+    @property
+    def chunk_start(self):
+        return self._inner.chunk_start
+
+    def read_output(self, n_tile_rows: int, c0: int, c1: int) -> np.ndarray:
+        # n_tile_rows is bounded by the coordinator's own tile rows (every
+        # boundary's chunk_start lies inside shard 0's chunk space), and
+        # with >= 2 shards the coordinator's row count is an exact multiple
+        # of T, so the inner clamp is a no-op — the read is global-exact.
+        return self._inner.read_output(n_tile_rows, c0, c1)
+
+    def write_columns(self, c0: int, cols: np.ndarray) -> None:
+        cols = np.asarray(cols, np.float32)
+        if cols.ndim == 1:
+            cols = cols[:, None]
+        self._writes.append((c0, cols))
+        self._inner.write_columns(c0, cols)
+
+
 class ShardedSEMSpMM:
     """Parallel sharded scans over row-partitioned :class:`TileStore` shards.
 
@@ -100,17 +130,32 @@ class ShardedSEMSpMM:
         return len(self.execs)
 
     def multiply(self, x: np.ndarray, *, boundary_hook=None) -> np.ndarray:
-        """A @ X as ``n_shards`` concurrent partial scans; the per-shard row
-        blocks concatenate (in partition order) to the full result.
+        """A @ X as ``n_shards`` partial scans; the per-shard row blocks
+        concatenate (in partition order) to the full result.
 
-        ``boundary_hook`` is rejected loudly: shards run their chunk-batch
-        boundaries concurrently, so there is no single pass-wide boundary
-        clock for an elastic hook to hang off (scale an elastic wave with
-        replicas instead — see the scheduler docstring)."""
-        if boundary_hook is not None:
-            raise ValueError(
-                "ShardedSEMSpMM cannot run a boundary_hook: shards stream "
-                "concurrently; use a ReplicaSet for elastic waves")
+        Without a ``boundary_hook`` every shard streams concurrently.  With
+        one, the hook is threaded through the *coordinator shard* — shard
+        0, whose chunk space is the global prefix ``[0, shard0_chunks)`` and
+        whose tile rows are the lowest — and the remaining shards are held
+        until the coordinator's scan completes, then run concurrently
+        against the final (possibly hook-rewritten) operand.  That ordering
+        is what makes mid-pass column writes compose bit-identically with
+        the unsharded elastic pass: a column written at coordinator
+        boundary ``cs`` reaches (a) coordinator tile rows at or after
+        ``tr_start`` exactly as the single scan would, and (b) every
+        non-coordinator tile row in full, because none of their chunks had
+        streamed yet — the same set of rows the unsharded stitch credits.
+        The cost is that the coordinator's scan is serialized ahead of the
+        rest (an elastic sharded pass keeps mid-pass admission, not the
+        full parallel-scan speedup; scale pure bandwidth with replicas).
+
+        The hook's :class:`~repro.core.sem.PassBoundary` is the
+        coordinator executor's: ``chunk_start`` is already global (shard 0
+        starts at chunk 0), ``read_output`` covers the coordinator's
+        completed tile-row prefix (every ``tr_start`` reachable from a
+        coordinator boundary lies inside it), and ``write_columns`` is
+        observed through a recording proxy so the writes can be replayed
+        onto the operand the held-back shards stream against."""
         # Pad and stage X once; every shard's ``_prepare_x`` then takes the
         # already-on-device skip path (and merely re-pins to its own device
         # when sharded over devices — the one transfer that must repeat).
@@ -122,8 +167,26 @@ class ShardedSEMSpMM:
             x_pad = x
         x_dev = jnp.asarray(x_pad)
         self.execs[0].store.stats.add_h2d(x_dev.nbytes)
-        blocks = list(self._pool.map(
-            lambda ex: ex.multiply(x_dev), self.execs))
+        if boundary_hook is None:
+            blocks = list(self._pool.map(
+                lambda ex: ex.multiply(x_dev), self.execs))
+        else:
+            writes: List[tuple] = []
+
+            def recording_hook(b):
+                boundary_hook(_RecordingBoundary(b, writes))
+
+            head = self.execs[0].multiply(x_dev,
+                                          boundary_hook=recording_hook)
+            if writes:
+                x_host = np.array(x_pad)   # replay in write order
+                for c0, cols in writes:
+                    x_host[: cols.shape[0], c0:c0 + cols.shape[1]] = cols
+                    x_host[cols.shape[0]:, c0:c0 + cols.shape[1]] = 0.0
+                x_dev = jnp.asarray(x_host)
+                self.execs[0].store.stats.add_h2d(x_dev.nbytes)
+            blocks = [head] + list(self._pool.map(
+                lambda ex: ex.multiply(x_dev), self.execs[1:]))
         self.passes += 1
         return np.concatenate(blocks, axis=0)
 

@@ -124,6 +124,45 @@ class IOStats:
                             getattr(agg, f.name) + getattr(st, f.name))
         return agg
 
+    # -- wire serialization (cross-host heartbeats) --------------------------
+    def to_dict(self) -> dict:
+        """Snapshot every counter as a plain ``{name: int}`` dict — the
+        JSON-safe form heartbeats carry across hosts.  Taken under the lock
+        so a beat never reports a torn read of a mid-update pair (e.g.
+        ``reads`` bumped but ``bytes_read`` not yet)."""
+        with self._lock:
+            return {f.name: int(getattr(self, f.name))
+                    for f in dataclasses.fields(type(self))}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IOStats":
+        """Rebuild from :meth:`to_dict` output.  Unknown keys are ignored so
+        a newer host's beat parses on an older front door (and vice versa —
+        missing keys keep their zero default)."""
+        st = cls()
+        names = {f.name for f in dataclasses.fields(cls)}
+        for k, v in d.items():
+            if k in names:
+                setattr(st, k, int(v))
+        return st
+
+    def merge(self, other) -> "IOStats":
+        """Fold another stats snapshot (an :class:`IOStats` or a
+        :meth:`to_dict` dict) into this one, in place, with
+        :meth:`aggregate`'s semantics: counters add, ``max_*`` high-water
+        marks take the max.  Returns ``self`` for chaining — the front door
+        folds every host's beat into one cluster-wide view."""
+        if isinstance(other, dict):
+            other = type(self).from_dict(other)
+        with self._lock:
+            for f in dataclasses.fields(type(self)):
+                mine, theirs = getattr(self, f.name), getattr(other, f.name)
+                if f.name.startswith("max_"):
+                    setattr(self, f.name, max(mine, theirs))
+                else:
+                    setattr(self, f.name, mine + theirs)
+        return self
+
 
 class _ReaderFailure:
     """Wrapper carrying an exception from the prefetch thread to the

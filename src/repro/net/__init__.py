@@ -1,0 +1,16 @@
+"""Cross-host serving tier: wire protocol, per-host RPC servers, and the
+cluster front door (routing, budget arbitration, host-level failover)."""
+from repro.net.frontdoor import (ClusterError, ClusterFrontDoor,
+                                 ClusterTicket, HostHandle)
+from repro.net.host import HostServer, build_host, open_stores
+from repro.net.wire import (DeadlineExpired, Heartbeater, RemoteError,
+                            WireClient, WireError, WireServer, decode_frame,
+                            encode_frame, read_frame, write_frame)
+
+__all__ = [
+    "ClusterError", "ClusterFrontDoor", "ClusterTicket", "HostHandle",
+    "HostServer", "build_host", "open_stores",
+    "DeadlineExpired", "Heartbeater", "RemoteError", "WireClient",
+    "WireError", "WireServer", "decode_frame", "encode_frame",
+    "read_frame", "write_frame",
+]

@@ -1,0 +1,361 @@
+"""ClusterFrontDoor: route tenants across hosts, survive a host dying.
+
+The fleet dispatcher's three jobs — route to least backlog, arbitrate one
+memory budget, surface failures — reappear one level up when N machines
+each run a :class:`~repro.runtime.fleet.ServingFleet`.  The front door is
+that recurrence made explicit, over the wire instead of over threads:
+
+* **routing** — every heartbeat reply carries the host's fleet gauges
+  (live backlog columns, queued sessions, worst per-wave pass-time EWMA,
+  serialized :class:`~repro.io.storage.IOStats`).  ``submit`` scores each
+  live host exactly like :meth:`FleetWave.backlog_estimate` scores a wave:
+  estimated seconds of queued work (columns x EWMA pass time), unmeasured
+  hosts first, ties broken by columns.  Columns submitted since the last
+  beat are counted locally so a burst between beats spreads instead of
+  piling onto one host.
+* **budget arbitration** — given a cluster-wide ``memory_budget_bytes``,
+  each host holding in-flight tenants receives an even share via the
+  ``budget`` RPC (the §3.6 split the fleet does per wave, done per host);
+  a host that drains drops out of the divisor and the survivors' shares
+  grow on their next pass — the same emergent rebalance, pushed instead of
+  polled.
+* **failover** — a host is evicted on heartbeat loss
+  (:class:`~repro.net.wire.Heartbeater`, ``miss_limit`` consecutive
+  misses) or on a connection error from its deliver stream.  Its in-flight
+  tenants' :class:`~repro.runtime.session.SessionSpec`s — which the front
+  door kept, because a spec is the whole session as data — are resubmitted
+  to the surviving hosts.  Sessions are deterministic functions of (spec,
+  matrix bytes), so the replayed tenants retire with **bit-identical**
+  results; the kill-a-host test asserts equality, not closeness.
+
+The front door owns a private asyncio loop on a daemon thread and exposes
+a synchronous facade (``add_host`` / ``submit`` / ``drain`` / ``close``),
+so a driver script — or a bench harness timing two subprocess hosts —
+uses it like a local fleet.  One :class:`ClusterTicket` per tenant carries
+the spec (for replay), the delivery event, and the result.
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.io.storage import IOStats
+from repro.net.wire import Heartbeater, RemoteError, WireClient
+from repro.runtime.session import SessionSpec
+
+
+class ClusterError(RuntimeError):
+    """No live host can serve a tenant (every host evicted)."""
+
+
+class ClusterTicket:
+    """One tenant's claim on the cluster: the spec (kept for failover
+    replay), where it currently runs, and the delivered result."""
+
+    def __init__(self, spec: SessionSpec):
+        self.spec = spec
+        self.tenant_id = spec.tenant_id
+        self.host_key: Optional[str] = None
+        self.resubmits = 0
+        self.iterations = 0
+        self.result: Optional[np.ndarray] = None
+        self.error: Optional[BaseException] = None
+        self._done = threading.Event()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block for the result; raises the failure if the cluster lost it."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"tenant {self.tenant_id!r} not served "
+                               f"within {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+
+class HostHandle:
+    """Front-door-side state for one registered host."""
+
+    def __init__(self, key: str, host: str, port: int, client: WireClient):
+        self.key = key
+        self.host, self.port = host, port
+        self.client = client
+        self.alive = True
+        self.gauges: dict = {}
+        self.io_stats = IOStats()
+        self.inflight: Dict[str, ClusterTicket] = {}
+        self.local_cols = 0        # columns submitted since the last beat
+        self.budget_share = 0
+        self.heartbeat: Optional[Heartbeater] = None
+        self.tasks: List[asyncio.Task] = []
+
+    def backlog_estimate(self):
+        """(estimated seconds of queued work, columns) — the wave router's
+        scoring rule one level up, freshened by locally-submitted columns
+        the next beat hasn't reported yet."""
+        cols = int(self.gauges.get("backlog_cols", 0)) + self.local_cols
+        return (cols * float(self.gauges.get("ewma_pass_s", 0.0)), cols)
+
+
+class ClusterFrontDoor:
+    """Register hosts, route tenant specs, arbitrate budget, fail over.
+
+    ``memory_budget_bytes`` (optional) is the cluster-wide §3.6 budget to
+    split across busy hosts; leave ``None`` to let every host keep its own
+    local default.  ``heartbeat_interval`` / ``miss_limit`` set the
+    eviction latency: a dead host is detected after roughly
+    ``interval * miss_limit`` seconds."""
+
+    def __init__(self, *, memory_budget_bytes: Optional[int] = None,
+                 heartbeat_interval: float = 0.2, miss_limit: int = 3,
+                 deadline: float = 5.0, retries: int = 2,
+                 deliver_poll_s: float = 2.0):
+        self.memory_budget_bytes = memory_budget_bytes
+        self.heartbeat_interval = heartbeat_interval
+        self.miss_limit = miss_limit
+        self.deadline = deadline
+        self.retries = retries
+        self.deliver_poll_s = deliver_poll_s
+        self.hosts: Dict[str, HostHandle] = {}
+        self.evicted: List[str] = []
+        self._ids = itertools.count(1)
+        self._closed = False
+        self._started = threading.Event()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread = threading.Thread(target=self._run_loop, daemon=True,
+                                        name="front-door")
+        self._thread.start()
+        self._started.wait()
+
+    # -- loop plumbing -------------------------------------------------------
+    def _run_loop(self) -> None:
+        loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(loop)
+        self._loop = loop
+        self._stop = asyncio.Event()
+        self._started.set()
+        loop.run_until_complete(self._stop.wait())
+        # cancel host tasks before the loop dies
+        for h in self.hosts.values():
+            for t in h.tasks:
+                t.cancel()
+        loop.run_until_complete(asyncio.gather(
+            *(t for h in self.hosts.values() for t in h.tasks),
+            return_exceptions=True))
+        loop.run_until_complete(asyncio.gather(
+            *(h.client.close() for h in self.hosts.values()),
+            return_exceptions=True))
+        loop.close()
+
+    def _call(self, coro):
+        return asyncio.run_coroutine_threadsafe(coro, self._loop).result()
+
+    # -- registration --------------------------------------------------------
+    def add_host(self, host: str, port: int, key: Optional[str] = None
+                 ) -> str:
+        """Register a host and start its heartbeat + deliver stream.
+        Returns the host key (default ``host:port``)."""
+        key = key or f"{host}:{port}"
+        return self._call(self._add_host(key, host, port))
+
+    async def _add_host(self, key: str, host: str, port: int) -> str:
+        client = WireClient(host, port, deadline=self.deadline,
+                            retries=self.retries)
+        handle = HostHandle(key, host, port, client)
+        # first contact synchronously: a dead address fails registration
+        # instead of being silently evicted later
+        header, _ = await client.call("ping")
+        handle.gauges = header
+        self.hosts[key] = handle
+        handle.heartbeat = Heartbeater(
+            client, interval=self.heartbeat_interval,
+            miss_limit=self.miss_limit,
+            on_beat=lambda h: self._on_beat(handle, h),
+            on_loss=lambda e: self._on_loss(handle, e))
+        handle.tasks.append(asyncio.ensure_future(handle.heartbeat.run()))
+        handle.tasks.append(asyncio.ensure_future(self._deliver_loop(handle)))
+        return key
+
+    # -- heartbeat-fed gauges ------------------------------------------------
+    def _on_beat(self, handle: HostHandle, header: dict) -> None:
+        handle.gauges = header
+        handle.local_cols = 0      # the beat's backlog includes them now
+        stats = header.get("io_stats")
+        if isinstance(stats, dict):
+            handle.io_stats = IOStats.from_dict(stats)
+
+    def cluster_io_stats(self) -> IOStats:
+        """Cluster-wide I/O view: every live host's last-beat counters
+        merged with :meth:`IOStats.merge` semantics."""
+        agg = IOStats()
+        for h in self.hosts.values():
+            agg.merge(h.io_stats)
+        return agg
+
+    # -- the deliver stream --------------------------------------------------
+    async def _deliver_loop(self, handle: HostHandle) -> None:
+        poll = self.deliver_poll_s
+        while handle.alive:
+            try:
+                header, planes = await handle.client.call(
+                    "deliver", {"timeout": poll}, deadline=poll + self.deadline)
+            except asyncio.CancelledError:
+                raise
+            except RemoteError:
+                continue               # host-side handler bug; keep polling
+            except Exception as e:  # noqa: BLE001 — connection-level loss
+                if handle.alive:
+                    self._on_loss(handle, e)
+                return
+            if header.get("empty"):
+                continue
+            ticket = handle.inflight.pop(header.get("tenant_id"), None)
+            if ticket is None or ticket.done:
+                continue               # replayed elsewhere already
+            ticket.iterations = int(header.get("iterations", 0))
+            ticket.result = planes[0] if planes else None
+            ticket._done.set()
+            await self._push_budget()
+
+    # -- eviction + failover -------------------------------------------------
+    def _on_loss(self, handle: HostHandle, exc: BaseException) -> None:
+        if not handle.alive:
+            return
+        handle.alive = False
+        self.evicted.append(handle.key)
+        for t in handle.tasks:
+            t.cancel()
+        orphans = list(handle.inflight.values())
+        handle.inflight.clear()
+        asyncio.ensure_future(self._resubmit(orphans, handle.key, exc))
+
+    async def _resubmit(self, orphans: List[ClusterTicket], dead_key: str,
+                        exc: BaseException) -> None:
+        """Replay a dead host's in-flight specs on the survivors.  Specs are
+        deterministic, so the replacements retire bit-identically."""
+        for ticket in orphans:
+            if ticket.done:
+                continue
+            try:
+                ticket.resubmits += 1
+                await self._submit(ticket)
+            except ClusterError as e:
+                ticket.error = e
+                ticket._done.set()
+        if orphans:
+            await self._push_budget()
+
+    def _live_hosts(self) -> List[HostHandle]:
+        return [h for h in self.hosts.values() if h.alive]
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, spec: SessionSpec) -> ClusterTicket:
+        """Route a session spec to the least-backlogged live host."""
+        if self._closed:
+            raise RuntimeError("front door is closed")
+        if not spec.tenant_id:
+            spec.tenant_id = f"tenant-{next(self._ids)}"
+        ticket = ClusterTicket(spec)
+        self._call(self._submit_and_budget(ticket))
+        return ticket
+
+    async def _submit_and_budget(self, ticket: ClusterTicket) -> None:
+        await self._submit(ticket)
+        await self._push_budget()
+
+    async def _submit(self, ticket: ClusterTicket) -> None:
+        spec = ticket.spec
+        header, planes = spec.to_wire()
+        width = sum(1 if p.ndim == 1 else p.shape[-1]
+                    for n, p in spec.arrays.items() if n in ("x", "x0"))
+        while True:
+            live = self._live_hosts()
+            if not live:
+                raise ClusterError(
+                    f"no live hosts for tenant {spec.tenant_id!r} "
+                    f"(evicted: {self.evicted})")
+            handle = min(live, key=HostHandle.backlog_estimate)
+            # claim before the call: a crash inside submit must still count
+            # this ticket among the host's orphans
+            handle.inflight[spec.tenant_id] = ticket
+            handle.local_cols += max(1, width)
+            ticket.host_key = handle.key
+            try:
+                await handle.client.call("submit", {"spec": header}, planes)
+                return
+            except RemoteError:
+                handle.inflight.pop(spec.tenant_id, None)
+                raise              # the host rejected the spec; don't reroute
+            except Exception as e:  # noqa: BLE001 — connection-level loss
+                handle.inflight.pop(spec.tenant_id, None)
+                self._on_loss(handle, e)
+
+    # -- budget arbitration --------------------------------------------------
+    async def _push_budget(self) -> None:
+        """Even split of the cluster budget over busy live hosts (the
+        fleet's per-wave leftover arithmetic, per host).  Only hosts whose
+        share changed get the RPC."""
+        if self.memory_budget_bytes is None:
+            return
+        live = self._live_hosts()
+        busy = [h for h in live if h.inflight]
+        share_of = {h.key: (self.memory_budget_bytes // max(1, len(busy))
+                            if h in busy else h.budget_share)
+                    for h in live}
+        for h in live:
+            share = share_of[h.key]
+            if share and share != h.budget_share:
+                h.budget_share = share
+                try:
+                    await h.client.call(
+                        "budget", {"memory_budget_bytes": share})
+                except Exception as e:  # noqa: BLE001
+                    self._on_loss(h, e)
+
+    # -- drain / close -------------------------------------------------------
+    def drain(self, tickets: List[ClusterTicket],
+              timeout: Optional[float] = None) -> List[np.ndarray]:
+        """Block until every ticket is served (through however many
+        failovers it takes); returns their results in order."""
+        import time as _time
+        deadline = None if timeout is None else _time.monotonic() + timeout
+        out = []
+        for t in tickets:
+            left = (None if deadline is None
+                    else max(0.0, deadline - _time.monotonic()))
+            out.append(t.wait(left))
+        return out
+
+    def close(self) -> None:
+        """Stop heartbeats and deliver streams, close the connections, kill
+        the loop.  Hosts keep running — shut them down via their own
+        ``shutdown`` RPC or process lifecycle."""
+        if self._closed:
+            return
+        self._closed = True
+        self._loop.call_soon_threadsafe(self._stop.set)
+        self._thread.join(timeout=10)
+
+    def shutdown_hosts(self) -> None:
+        """Best-effort ``shutdown`` RPC to every live host (for drivers that
+        own the host processes)."""
+        async def _all():
+            for h in self._live_hosts():
+                try:
+                    await h.client.call("shutdown")
+                except Exception:  # noqa: BLE001 — racing the host's exit
+                    pass
+        self._call(_all())
+
+    def __enter__(self) -> "ClusterFrontDoor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

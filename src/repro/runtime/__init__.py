@@ -15,19 +15,21 @@ dispatcher and cross-wave arbitration of the column + hot-chunk budgets.
 from repro.runtime.batcher import Batcher, Wave, WaveEntry
 from repro.runtime.cache import (CacheStats, HotChunkCache,
                                  PartitionedHotChunkCache)
-from repro.runtime.fleet import FleetWave, ServingFleet
+from repro.runtime.fleet import FleetWave, ServingFleet, WaveError
 from repro.runtime.replica import ReplicaRouter, ReplicaSet, ReplicaState
 from repro.runtime.scheduler import (MidPassState, PassReport,
                                      SharedScanScheduler)
-from repro.runtime.session import (LabelPropagationSession, MultiplyRequest,
+from repro.runtime.session import (SESSION_KINDS, BFSSession,
+                                   LabelPropagationSession, MultiplyRequest,
                                    PageRankSession, PowerIterationSession,
-                                   Session)
+                                   Session, SessionSpec)
 
 __all__ = [
     "Batcher", "Wave", "WaveEntry", "CacheStats", "HotChunkCache",
-    "PartitionedHotChunkCache", "FleetWave", "ServingFleet",
+    "PartitionedHotChunkCache", "FleetWave", "ServingFleet", "WaveError",
     "ReplicaRouter", "ReplicaSet", "ReplicaState",
     "MidPassState", "PassReport", "SharedScanScheduler",
-    "LabelPropagationSession", "MultiplyRequest", "PageRankSession",
-    "PowerIterationSession", "Session",
+    "SESSION_KINDS", "BFSSession", "LabelPropagationSession",
+    "MultiplyRequest", "PageRankSession", "PowerIterationSession",
+    "Session", "SessionSpec",
 ]

@@ -81,6 +81,13 @@ class Batcher:
         with self._lock:
             return sum(s.width for s in self._queue)
 
+    def pending_sessions(self) -> List[Session]:
+        """Consistent snapshot of the queued sessions (front-door failure
+        accounting: a dead wave's loss manifest is its active set plus this
+        queue, taken under the same lock a concurrent submit uses)."""
+        with self._lock:
+            return list(self._queue)
+
     def peek(self) -> Session:
         """The queue head (the only admission candidate — FIFO, no
         overtaking; the elastic scheduler admits it mid-pass)."""

@@ -62,6 +62,26 @@ from repro.runtime.scheduler import SharedScanScheduler
 from repro.runtime.session import MultiplyRequest, Session
 
 
+class WaveError(RuntimeError):
+    """A serving wave's thread died mid-serve.
+
+    Carries the loss manifest a front door needs to resubmit *precisely*:
+    ``session_ids`` names every tenant the dead wave still owed a result
+    (its active set plus its queued backlog at the moment of death), and
+    ``sessions`` holds the objects themselves.  The message embeds the ids
+    so even a caller that only logs ``str(e)`` records who was lost."""
+
+    def __init__(self, wave_id: int, error: BaseException,
+                 sessions: List[Session]):
+        self.wave_id = wave_id
+        self.error = error
+        self.sessions = sessions
+        self.session_ids = [s.tenant_id for s in sessions]
+        super().__init__(
+            f"wave {wave_id} failed: {error!r} "
+            f"(lost sessions: {self.session_ids})")
+
+
 class _WaveExecutor:
     """The executor surface one wave's scheduler sees: the shared
     :class:`ReplicaSet` with this wave's arbitration spliced in.
@@ -186,6 +206,14 @@ class FleetWave:
     def busy(self) -> bool:
         return self.in_pass or not self.scheduler.idle
 
+    def lost_sessions(self) -> List[Session]:
+        """Every session this wave still owes a result: the scheduler's
+        active set (including mid-pass partials) plus the queued backlog.
+        Meaningful once the wave thread has stopped (error or close) — the
+        front door resubmits exactly these on failover."""
+        active = [s for s in list(self.scheduler.active) if not s.done]
+        return active + self.scheduler.batcher.pending_sessions()
+
     # -- the serving thread --------------------------------------------------
     def _serve_loop(self) -> None:
         fleet = self.fleet
@@ -308,8 +336,8 @@ class ServingFleet:
     def _raise_wave_errors(self) -> None:
         for w in self.waves:
             if w.error is not None:
-                raise RuntimeError(
-                    f"wave {w.wave_id} failed: {w.error!r}") from w.error
+                raise WaveError(w.wave_id, w.error,
+                                w.lost_sessions()) from w.error
 
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until every submitted session has been served (all waves
@@ -364,3 +392,22 @@ class ServingFleet:
 
     def total_bytes_read(self) -> int:
         return self.io_stats.bytes_read
+
+    def stats(self) -> dict:
+        """JSON-safe fleet gauges — the heartbeat payload a HostServer
+        reports so the cluster front door can route on the same signals the
+        fleet's own dispatcher uses: live backlog columns, queued sessions,
+        and the worst per-wave pass-time EWMA (the pair behind
+        :meth:`FleetWave.backlog_estimate`), plus the serialized replica
+        I/O counters for observability."""
+        backlog_cols = sum(w.live_columns() for w in self.waves)
+        pending = sum(w.scheduler.batcher.pending for w in self.waves)
+        ewma = max((w.ewma_pass_s for w in self.waves), default=0.0)
+        return {
+            "n_waves": len(self.waves),
+            "backlog_cols": backlog_cols,
+            "pending_sessions": pending,
+            "ewma_pass_s": ewma,
+            "scan_passes": self.total_scan_passes(),
+            "io_stats": self.io_stats.to_dict(),
+        }

@@ -45,8 +45,14 @@ The executor behind the scheduler may be a single :class:`SEMSpMM`, a
 :class:`~repro.distributed.shard_scan.ShardedSEMSpMM` (``sharded=``), or a
 :class:`~repro.runtime.replica.ReplicaSet` routing each pass across store
 copies — elastic mode composes with replicas (the hook survives replica
-failover) but not with ``sharded=`` (shards run their boundaries
-concurrently; use replicas to scale scan bandwidth for an elastic wave).
+failover) *and* with ``sharded=``: the sharded executor threads the hook
+through its coordinator shard (shard 0, the lowest tile rows, whose chunk
+space is the global prefix) and holds the remaining shards until the
+coordinator finishes, so every mid-pass column write lands before any
+non-coordinator chunk streams — bit-identical to the unsharded elastic
+stitch, at the cost of serializing the coordinator shard's scan ahead of
+the rest (see ``ShardedSEMSpMM.multiply``).  A pure-bandwidth elastic wave
+is still better served by a ReplicaSet.
 The engine's compute step is equally interchangeable: a wave served
 through the Pallas wave kernel (``SEMConfig(use_pallas=True)``) delivers
 bit-identical results across all of the above, including mid-pass
@@ -107,6 +113,8 @@ class SharedScanScheduler:
     parallel partial scans + a row-block concatenation, bit-identical to the
     single-scan path.  Admission control and budgets stay on the unsharded
     executor (the column budget is a property of the whole operator).
+    Combined with ``elastic=True``, boundary hooks ride the coordinator
+    shard's scan (see the module docstring).
 
     ``elastic=True`` turns on mid-pass admission (see module docstring);
     ``capacity`` fixes the packed wave width (default: first demand plus
@@ -133,11 +141,6 @@ class SharedScanScheduler:
         self._row_first_chunk: Optional[np.ndarray] = None
         want_shards = sharded if (sharded and sharded >= 2
                                   and sem.mode == "sem") else 0
-        if elastic and want_shards:
-            raise ValueError(
-                "elastic admission needs one boundary clock per pass; "
-                "sharded= runs N concurrent scans.  Scale an elastic wave "
-                "with a ReplicaSet instead.")
         self.cache = None
         if use_cache and sem.mode == "sem":
             if sem.cache is not None:
@@ -260,11 +263,15 @@ class SharedScanScheduler:
         slice is materialized contiguous so a session's own host-side
         reductions (Rayleigh quotients, norms) see one memory layout
         regardless of how the columns were packed or stitched — delivery is
-        bit-reproducible across admission modes."""
+        bit-reproducible across admission modes.  A session that retires
+        here fires its ``on_retire`` callback — the streaming-results hook
+        the cross-host tier's HostServer hangs result delivery on."""
         if session.t_first_result is None:
             session.t_first_result = time.monotonic()
             session.first_result_clock = self.boundary_clock
         session.consume(np.ascontiguousarray(y))
+        if session.done and session.on_retire is not None:
+            session.on_retire(session)
 
     def _scan(self, wave: Wave, col_budget: int) -> np.ndarray:
         """One shared A @ X.  An oversized lone tenant is served by vertical
@@ -273,8 +280,7 @@ class SharedScanScheduler:
         hook rides every slice too, so the boundary clock keeps its meaning
         ("chunk-batch boundaries seen, all passes") across sliced scans."""
         op = self.sharded if self.sharded is not None else self.sem
-        hook = (self._probe_hook
-                if self._probe is not None and self.sharded is None else None)
+        hook = self._probe_hook if self._probe is not None else None
 
         def mult(x: np.ndarray) -> np.ndarray:
             return op.multiply(x, boundary_hook=hook) if hook \
@@ -389,7 +395,8 @@ class SharedScanScheduler:
 
         r0, h0, p0 = self._counters()
         self._pass_report = report
-        y = self.sem.multiply(x, boundary_hook=self._elastic_hook)
+        op = self.sharded if self.sharded is not None else self.sem
+        y = op.multiply(x, boundary_hook=self._elastic_hook)
         self._pass_end(y, report)
         self._finish_report(report, r0, h0, p0)
         return report

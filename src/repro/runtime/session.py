@@ -11,10 +11,21 @@ the hot-chunk cache's leftover budget).
 Sessions hold *no* reference to the operator — the scheduler owns the single
 shared ``SEMSpMM``; a session only describes what to multiply next and what
 to do with the product.  That is what makes N tenants one streaming pass.
+
+That statelessness is also what makes a session *portable*: everything a
+session is — its kind, its operand columns, its hyperparameters, its
+iteration state — is plain numpy plus scalars.  :class:`SessionSpec` is
+that closure captured as data: the cross-host tier ships specs over the
+wire (``to_wire``/``from_wire``), a :class:`~repro.net.host.HostServer`
+rebuilds the live session with :meth:`SessionSpec.build`, and on host
+death the front door re-submits the *same spec* to a survivor — sessions
+are deterministic functions of (spec, matrix bytes), so the replayed
+tenant retires with bit-identical results.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -39,6 +50,12 @@ class Session:
         # (None when served by a lone scheduler) — the observable the
         # routing tests and per-wave load reports key on.
         self.wave_id: Optional[int] = None
+        # Retirement callback, invoked by the scheduler's delivery path the
+        # moment ``done`` flips true.  This is how a HostServer streams an
+        # iterative session's result back over the wire as it retires,
+        # without polling N tenants from a watcher thread.  Runs on the
+        # serving wave's thread — keep it cheap and thread-safe.
+        self.on_retire: Optional[Callable[["Session"], None]] = None
 
     @property
     def width(self) -> int:
@@ -173,3 +190,182 @@ class LabelPropagationSession(Session):
             self.result = self.x
             self.labels = self.x.argmax(axis=1)
             self.done = True
+
+
+class BFSSession(Session):
+    """Breadth-first search served through the shared scan: one frontier
+    expansion per pass, retirement when the frontier converges (empties).
+
+    BFS is SpMV over the boolean or-and semiring
+    (:data:`repro.core.semiring.OR_AND`): ``frontier' = A ⊻.∧ frontier``.
+    The shared executor computes plus-times, but over a non-negative
+    operator and a 0/1 frontier the two coincide under a threshold —
+    ``y_i = Σ_j A_ij · frontier_j`` is a sum of non-negative terms with at
+    least one term ≥ the smallest live entry whenever the or-and result is
+    true, so ``y_i > 0  ⇔  (A ⊻.∧ frontier)_i`` even when the float32 sum
+    rounds (adding positives never cancels to zero).  That is how a
+    *non-numeric* workload rides the same wave as PageRank tenants with no
+    second engine: the semiring lives in ``consume``.
+
+    The operator convention matches every other session here: a vertex
+    ``v`` is reached from frontier vertex ``u`` when ``A[v, u] != 0``
+    (edges are followed operator-row-ward).  ``result`` is the hop-count
+    vector (int32, ``-1`` for unreachable); multi-source BFS is just a
+    multi-vertex ``sources``.  The operator must be non-negative — signed
+    values could cancel a reachable row to 0.0, which is a property of
+    plus-times, not of this adapter.
+    """
+
+    def __init__(self, sources: np.ndarray, n: int, *,
+                 max_depth: Optional[int] = None, tenant_id: str = ""):
+        super().__init__(tenant_id)
+        self.n = n
+        self.sources = np.atleast_1d(np.asarray(sources, np.int64))
+        self.max_depth = n if max_depth is None else max_depth
+        self.distance = np.full(n, -1, np.int32)
+        self.distance[self.sources] = 0
+        self.visited = np.zeros(n, bool)
+        self.visited[self.sources] = True
+        self.frontier = np.zeros(n, np.float32)
+        self.frontier[self.sources] = 1.0
+        self.depth = 0
+
+    @property
+    def frontier_size(self) -> int:
+        return int(self.frontier.sum())
+
+    def x_columns(self) -> np.ndarray:
+        return self.frontier[:, None]
+
+    def consume(self, y: np.ndarray) -> None:
+        self.depth += 1
+        self.iterations += 1
+        reached = (y[:, 0] != 0) & ~self.visited   # the or-and threshold
+        self.distance[reached] = self.depth
+        self.visited |= reached
+        self.frontier = np.zeros(self.n, np.float32)
+        self.frontier[reached] = 1.0
+        if not reached.any() or self.depth >= self.max_depth:
+            self.result = self.distance
+            self.done = True
+
+
+# ---------------------------------------------------------------------------
+# Portable session specs (the cross-host tier's unit of work)
+# ---------------------------------------------------------------------------
+def _build_multiply(spec: "SessionSpec") -> Session:
+    return MultiplyRequest(spec.arrays["x"], tenant_id=spec.tenant_id)
+
+
+def _build_power_iteration(spec: "SessionSpec") -> Session:
+    p = spec.params
+    return PowerIterationSession(
+        spec.arrays["x0"], tol=float(p.get("tol", 1e-6)),
+        max_iter=int(p.get("max_iter", 100)), tenant_id=spec.tenant_id)
+
+
+def _build_pagerank(spec: "SessionSpec") -> Session:
+    p = spec.params
+    return PageRankSession(
+        int(p["n"]), spec.arrays["dangling_mask"].astype(bool),
+        damping=float(p.get("damping", 0.85)), tol=float(p.get("tol", 1e-8)),
+        max_iter=int(p.get("max_iter", 30)), tenant_id=spec.tenant_id)
+
+
+def _build_labelprop(spec: "SessionSpec") -> Session:
+    p = spec.params
+    return LabelPropagationSession(
+        spec.arrays["seeds"], spec.arrays["seed_labels"], int(p["n"]),
+        int(p["n_labels"]), tol=float(p.get("tol", 1e-4)),
+        max_iter=int(p.get("max_iter", 50)), tenant_id=spec.tenant_id)
+
+
+def _build_bfs(spec: "SessionSpec") -> Session:
+    p = spec.params
+    max_depth = p.get("max_depth")
+    return BFSSession(spec.arrays["sources"], int(p["n"]),
+                      max_depth=None if max_depth is None else int(max_depth),
+                      tenant_id=spec.tenant_id)
+
+
+SESSION_KINDS: Dict[str, Callable[["SessionSpec"], Session]] = {
+    "multiply": _build_multiply,
+    "power_iteration": _build_power_iteration,
+    "pagerank": _build_pagerank,
+    "labelprop": _build_labelprop,
+    "bfs": _build_bfs,
+}
+
+
+@dataclasses.dataclass
+class SessionSpec:
+    """A session as data: kind, operand planes, hyperparameters, and (for a
+    resumed tenant) iteration state — everything needed to rebuild the live
+    session on any host holding the same matrix bytes.
+
+    ``params`` must be JSON-safe scalars; ``arrays`` holds every ndarray
+    (operands, masks, seeds, a mid-stream iterate used as the next ``x0``).
+    ``build`` constructs the session through the :data:`SESSION_KINDS`
+    registry — a closed set, so a spec arriving over the wire can never
+    name arbitrary code.  Because sessions are deterministic, submitting
+    one spec to two hosts (or to a survivor after a host died) produces
+    bit-identical retirements — the property the front door's failover
+    leans on."""
+
+    kind: str
+    tenant_id: str = ""
+    params: Dict[str, object] = dataclasses.field(default_factory=dict)
+    arrays: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def build(self) -> Session:
+        if self.kind not in SESSION_KINDS:
+            raise ValueError(f"unknown session kind {self.kind!r} "
+                             f"(have: {sorted(SESSION_KINDS)})")
+        return SESSION_KINDS[self.kind](self)
+
+    # -- wire form -----------------------------------------------------------
+    def to_wire(self) -> Tuple[dict, List[np.ndarray]]:
+        """(JSON-safe header, ndarray planes in header['arrays'] order)."""
+        names = sorted(self.arrays)
+        header = {"kind": self.kind, "tenant_id": self.tenant_id,
+                  "params": dict(self.params), "arrays": names}
+        return header, [self.arrays[n] for n in names]
+
+    @classmethod
+    def from_wire(cls, header: dict, planes: List[np.ndarray]
+                  ) -> "SessionSpec":
+        names = header.get("arrays", [])
+        if len(names) != len(planes):
+            raise ValueError(
+                f"spec names {len(names)} planes {len(planes)} mismatch")
+        return cls(kind=header["kind"], tenant_id=header.get("tenant_id", ""),
+                   params=dict(header.get("params", {})),
+                   arrays=dict(zip(names, planes)))
+
+    # -- convenience constructors -------------------------------------------
+    @classmethod
+    def multiply(cls, x: np.ndarray, tenant_id: str = "") -> "SessionSpec":
+        return cls("multiply", tenant_id, {}, {"x": np.asarray(x)})
+
+    @classmethod
+    def power_iteration(cls, x0: np.ndarray, *, tol: float = 1e-6,
+                        max_iter: int = 100, tenant_id: str = ""
+                        ) -> "SessionSpec":
+        return cls("power_iteration", tenant_id,
+                   {"tol": tol, "max_iter": max_iter}, {"x0": np.asarray(x0)})
+
+    @classmethod
+    def pagerank(cls, n: int, dangling_mask: np.ndarray, *,
+                 damping: float = 0.85, tol: float = 1e-8, max_iter: int = 30,
+                 tenant_id: str = "") -> "SessionSpec":
+        return cls("pagerank", tenant_id,
+                   {"n": n, "damping": damping, "tol": tol,
+                    "max_iter": max_iter},
+                   {"dangling_mask": np.asarray(dangling_mask, np.uint8)})
+
+    @classmethod
+    def bfs(cls, sources: np.ndarray, n: int, *,
+            max_depth: Optional[int] = None, tenant_id: str = ""
+            ) -> "SessionSpec":
+        return cls("bfs", tenant_id, {"n": n, "max_depth": max_depth},
+                   {"sources": np.atleast_1d(np.asarray(sources, np.int64))})

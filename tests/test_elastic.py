@@ -275,9 +275,54 @@ def test_classic_fallback_pass_frees_elastic_slots(store_path, small_valued):
     assert sched.reports[-1].wave_cols == 4 and not sched._slots
 
 
-def test_elastic_rejects_sharded(store_path):
-    with pytest.raises(ValueError, match="elastic"):
-        SharedScanScheduler(fresh_sem(store_path), elastic=True, sharded=2)
+def test_elastic_composes_with_sharded(store_path, small_valued):
+    """Mid-pass admission rides the coordinator shard (shard 0 scans first
+    with the hook, the held-back shards stream the final operand): a tenant
+    injected into an in-flight sharded elastic pass gets the
+    dedicated-multiply bits — identical to the unsharded elastic stitch."""
+    rng = np.random.default_rng(21)
+    x = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+    want = fresh_sem(store_path).multiply(x[:, None])[:, 0]
+    req_s, sched_s = serve_midpass(store_path, x, elastic=True, at_clock=2,
+                                   sharded=2)
+    req_u, _ = serve_midpass(store_path, x, elastic=True, at_clock=2)
+    sched_s.close()
+    assert req_s is not None and req_s.done
+    np.testing.assert_array_equal(req_s.result, want)
+    np.testing.assert_array_equal(req_s.result, req_u.result)
+    assert sum(r.admitted_midpass for r in sched_s.reports) == 1
+    assert sum(r.completed_midpass for r in sched_s.reports) == 1
+
+
+def test_elastic_sharded_rolling_iterative_session(store_path, small_valued):
+    """An iterative tenant injected mid-pass into a SHARDED elastic wave
+    rolls through stitched partial passes with the same full trajectory
+    (residuals, eigenvalue, result) as a dedicated between-pass run — the
+    coordinator-shard hook is trajectory-exact, not just final-state."""
+    rng = np.random.default_rng(22)
+    x0 = rng.standard_normal(small_valued.n_cols).astype(np.float32)
+
+    def run(elastic, sharded):
+        box = {"s": None}
+
+        def probe(sched, boundary):
+            if box["s"] is None and sched.boundary_clock >= 2:
+                box["s"] = sched.submit(PowerIterationSession(
+                    x0.copy(), tol=0.0, max_iter=3, tenant_id="rolling"))
+        sem = fresh_sem(store_path)
+        with SharedScanScheduler(sem, use_cache=False, elastic=elastic,
+                                 sharded=sharded,
+                                 boundary_probe=probe) as sched:
+            sched.submit(PowerIterationSession(
+                np.ones(sem.n_cols, np.float32), tol=0.0, max_iter=6))
+            sched.run()
+        return box["s"]
+
+    rolled, plain = run(True, 2), run(False, 0)
+    assert rolled.done and plain.done
+    assert rolled.iterations == plain.iterations
+    assert rolled.residuals == plain.residuals
+    np.testing.assert_array_equal(rolled.result, plain.result)
 
 
 def test_partial_pass_row_accounting(store_path):

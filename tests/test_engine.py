@@ -358,13 +358,20 @@ def test_pallas_sharded_scan_bit_identical(valued_path, x8):
         assert sh.io_stats.bytes_read == sh.store.nbytes
 
 
-def test_sharded_scan_rejects_boundary_hook(valued_path, x8):
-    """Shards stream their boundaries concurrently — an elastic hook has no
-    single clock to ride, so the sharded executor refuses it loudly."""
+def test_sharded_scan_boundary_hook_rides_coordinator(valued_path, x8):
+    """The elastic hook rides shard 0 (the coordinator: its chunk space is
+    the global prefix); a hook that only reads sees exactly shard 0's
+    boundaries and the result stays bit-identical to the hookless scan."""
+    clocks = []
     with ShardedSEMSpMM(TileStore.open(valued_path), n_shards=2,
                         config=SEMConfig(chunk_batch=BATCH)) as sh:
-        with pytest.raises(ValueError, match="boundary_hook"):
-            sh.multiply(x8, boundary_hook=lambda b: None)
+        plain = sh.multiply(x8)
+        hooked = sh.multiply(
+            x8, boundary_hook=lambda b: clocks.append(b.chunk_start))
+    np.testing.assert_array_equal(hooked, plain)
+    n_chunks = TileStore.open(valued_path).n_chunks
+    assert clocks == sorted(clocks) and clocks
+    assert all(0 <= c <= n_chunks for c in clocks)
 
 
 # -- sharded parallel scans ---------------------------------------------------

@@ -1,0 +1,385 @@
+"""Cross-host tier tests: wire framing (roundtrip, truncation/garbage
+rejection), deadline -> backoff -> retry ordering, heartbeat-loss
+detection, serializable IOStats, portable SessionSpecs, the fleet's
+lost-session manifest (WaveError), and the full cluster story — a 2-host
+in-process cluster serving a mixed tenant batch bit-identically to a lone
+ServingFleet, including a host killed mid-serve whose tenants fail over."""
+import asyncio
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.apps.pagerank import (build_operator as pr_operator,
+                                 dangling_vertices)
+from repro.core.formats import to_chunked
+from repro.io.storage import IOStats, TileStore
+from repro.net.frontdoor import ClusterFrontDoor
+from repro.net.host import HostServer
+from repro.net.wire import (DeadlineExpired, Heartbeater, RemoteError,
+                            WireClient, WireServer, decode_frame,
+                            encode_frame)
+from repro.runtime import (MultiplyRequest, ReplicaSet, ServingFleet,
+                           Session, SessionSpec, WaveError)
+
+
+@pytest.fixture(scope="module")
+def store_path(small_graph, tmp_path_factory):
+    """The PageRank operator of the small graph: column-stochastic and
+    non-negative, so one matrix serves every tenant kind in a mixed batch
+    (multiply, power iteration, PageRank, and BFS's or-and threshold)."""
+    ct = to_chunked(pr_operator(small_graph), T=512, C=128)
+    path = str(tmp_path_factory.mktemp("net") / "g")
+    TileStore.write(path, ct)
+    return path
+
+
+def make_host(store_path, waves=1):
+    fleet = ServingFleet(ReplicaSet([TileStore.open(store_path)]),
+                         n_waves=waves)
+    return HostServer(fleet)
+
+
+def mixed_specs(small_graph, n_multiply=2):
+    """A mixed tenant batch over the shared PageRank operator."""
+    rng = np.random.default_rng(31)
+    n = small_graph.n_rows
+    specs = [SessionSpec.multiply(
+        rng.standard_normal(n).astype(np.float32), tenant_id=f"mul{i}")
+        for i in range(n_multiply)]
+    specs.append(SessionSpec.power_iteration(
+        rng.standard_normal(n).astype(np.float32), tol=0.0, max_iter=8,
+        tenant_id="power"))
+    specs.append(SessionSpec.pagerank(
+        n, dangling_vertices(small_graph), max_iter=10, tenant_id="pr"))
+    specs.append(SessionSpec.bfs(np.array([0]), n, tenant_id="bfs"))
+    return specs
+
+
+def lone_fleet_results(store_path, specs):
+    """Ground truth: the same specs served by one local ServingFleet."""
+    with ServingFleet(ReplicaSet([TileStore.open(store_path)]),
+                      n_waves=1) as fleet:
+        sessions = [fleet.submit(s.build()) for s in specs]
+        fleet.drain(timeout=120)
+    return [s.result for s in sessions]
+
+
+# ---------------------------------------------------------------------------
+# Wire framing
+# ---------------------------------------------------------------------------
+def test_frame_roundtrip_preserves_headers_and_planes():
+    planes = [np.arange(12, dtype=np.float32).reshape(3, 4),
+              np.array([1, -1, 7], np.int64),
+              np.zeros((0, 5), np.float32)]
+    buf = encode_frame({"op": "x", "k": [1, 2], "s": "αβ"}, planes)
+    header, out = decode_frame(buf)
+    assert header["op"] == "x" and header["k"] == [1, 2]
+    assert header["s"] == "αβ" and "_planes" not in header
+    assert [p.dtype for p in out] == [np.float32, np.int64, np.float32]
+    for a, b in zip(planes, out):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_truncated_and_malformed_frames_rejected():
+    buf = encode_frame({"op": "x"}, [np.ones((4, 4), np.float32)])
+    # truncation at every structural boundary: prefix, header, payload
+    for cut in (3, 10, len(buf) - 17, len(buf) - 1):
+        with pytest.raises(ConnectionError):
+            decode_frame(buf[:cut])
+    with pytest.raises(ConnectionError, match="magic"):
+        decode_frame(b"\x00" * len(buf))
+    with pytest.raises(ConnectionError):
+        decode_frame(buf + b"\x00")          # trailing bytes
+    # non-JSON header bytes
+    bad = bytearray(buf)
+    bad[16] = 0xFF
+    with pytest.raises(ConnectionError):
+        decode_frame(bytes(bad))
+    # a plane tag promising more data than the payload carries
+    short = encode_frame({"op": "x"}, [np.ones(4, np.float32)])
+    grown = short.replace(b'["<f4",[4]]', b'["<f4",[9]]')
+    assert grown != short
+    with pytest.raises(ConnectionError, match="truncated|lengths"):
+        decode_frame(grown)
+
+
+def test_oversized_header_rejected():
+    import repro.net.wire as wire
+    with pytest.raises(ConnectionError, match="large"):
+        encode_frame({"blob": "x" * (wire.MAX_HEADER + 1)})
+
+
+# ---------------------------------------------------------------------------
+# Deadlines, retry, backoff, heartbeats
+# ---------------------------------------------------------------------------
+def test_deadline_expiry_then_backoff_then_retry_ordering():
+    """Every attempt expires; the trace must read expired -> backoff ->
+    retry per attempt, with exponentially doubling backoff, ending in
+    DeadlineExpired after retries are exhausted."""
+    async def scenario():
+        async def slow(op, header, planes):
+            await asyncio.sleep(30)
+            return {}, []
+        server = WireServer(slow)
+        port = await server.start()
+        events = []
+        client = WireClient("127.0.0.1", port, deadline=0.05, retries=2,
+                            backoff0=0.05,
+                            trace=lambda ev, d: events.append((ev, d)))
+        with pytest.raises(DeadlineExpired):
+            await client.call("work")
+        await client.close()
+        await server.close()
+        return events
+
+    events = asyncio.run(scenario())
+    assert [e for e, _ in events] == [
+        "expired", "backoff", "retry",
+        "expired", "backoff", "retry",
+        "expired"]
+    backoffs = [d for e, d in events if e == "backoff"]
+    assert backoffs == [0.05, 0.1]          # doubling from backoff0
+
+
+def test_retry_succeeds_after_transient_slowness():
+    async def scenario():
+        calls = {"n": 0}
+
+        async def flaky(op, header, planes):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                await asyncio.sleep(30)     # first attempt left to expire
+            return {"answer": calls["n"]}, []
+        server = WireServer(flaky)
+        port = await server.start()
+        events = []
+        client = WireClient("127.0.0.1", port, deadline=0.2, retries=2,
+                            backoff0=0.01,
+                            trace=lambda ev, d: events.append(ev))
+        header, _ = await client.call("work")
+        await client.close()
+        await server.close()
+        return header, events
+
+    header, events = asyncio.run(scenario())
+    assert header["answer"] == 2
+    assert events == ["expired", "backoff", "retry"]
+
+
+def test_remote_error_is_not_retried():
+    """An application-level failure (ok: false) raises immediately — the
+    peer is alive; retrying would repeat the same rejection."""
+    async def scenario():
+        async def reject(op, header, planes):
+            raise ValueError("bad spec")
+        server = WireServer(reject)
+        port = await server.start()
+        events = []
+        client = WireClient("127.0.0.1", port, retries=3,
+                            trace=lambda ev, d: events.append(ev))
+        with pytest.raises(RemoteError, match="bad spec"):
+            await client.call("work")
+        await client.close()
+        await server.close()
+        return events
+
+    assert asyncio.run(scenario()) == []    # zero retry machinery engaged
+
+
+def test_heartbeat_declares_loss_after_miss_limit():
+    async def scenario():
+        async def pong(op, header, planes):
+            return {"beat": True}, []
+        server = WireServer(pong)
+        port = await server.start()
+        client = WireClient("127.0.0.1", port)
+        lost = []
+        hb = Heartbeater(client, interval=0.02, miss_limit=3,
+                         on_loss=lost.append)
+        task = asyncio.ensure_future(hb.run())
+        await asyncio.sleep(0.1)            # a few good beats
+        beats_before = hb.beats
+        await server.close()
+        await client.close()                # sever the connection too
+        await asyncio.wait_for(task, timeout=5)
+        return beats_before, hb.misses, lost
+
+    beats, misses, lost = asyncio.run(scenario())
+    assert beats >= 2
+    assert misses == 3 and len(lost) == 1
+
+
+# ---------------------------------------------------------------------------
+# Serializable stats + portable specs
+# ---------------------------------------------------------------------------
+def test_iostats_dict_roundtrip_and_merge():
+    a = IOStats(bytes_read=100, reads=3, max_reads_inflight=4)
+    b = IOStats.from_dict(a.to_dict())
+    assert b.bytes_read == 100 and b.reads == 3 and b.max_reads_inflight == 4
+    b.merge({"bytes_read": 50, "max_reads_inflight": 2, "unknown_key": 9})
+    assert b.bytes_read == 150
+    assert b.max_reads_inflight == 4        # high-water mark: max, not sum
+    merged = IOStats().merge(a).merge(a)
+    assert merged.reads == 6 and merged.max_reads_inflight == 4
+
+
+def test_session_spec_wire_roundtrip():
+    spec = SessionSpec.pagerank(64, np.zeros(64, np.uint8), damping=0.9,
+                                tenant_id="t1")
+    header, planes = spec.to_wire()
+    buf = encode_frame({"spec": header}, planes)
+    rheader, rplanes = decode_frame(buf)
+    back = SessionSpec.from_wire(rheader["spec"], rplanes)
+    assert back.kind == "pagerank" and back.tenant_id == "t1"
+    assert back.params["damping"] == 0.9
+    np.testing.assert_array_equal(back.arrays["dangling_mask"],
+                                  spec.arrays["dangling_mask"])
+    session = back.build()
+    assert session.tenant_id == "t1" and session.width == 1
+
+
+def test_session_spec_rejects_unknown_kind_and_plane_mismatch():
+    with pytest.raises(ValueError, match="unknown session kind"):
+        SessionSpec("exec_arbitrary_code").build()
+    with pytest.raises(ValueError, match="mismatch"):
+        SessionSpec.from_wire({"kind": "multiply", "arrays": ["x"]}, [])
+
+
+# ---------------------------------------------------------------------------
+# Fleet loss manifest
+# ---------------------------------------------------------------------------
+class _PoisonSession(Session):
+    """Consumes its first product by raising — kills the serving wave."""
+
+    def __init__(self, n, tenant_id):
+        super().__init__(tenant_id)
+        self._x = np.ones((n, 1), np.float32)
+
+    def x_columns(self):
+        return self._x
+
+    def consume(self, y):
+        raise RuntimeError("poisoned tenant")
+
+
+def test_wave_error_names_lost_sessions(store_path):
+    """A dead wave's drain failure carries the precise loss manifest —
+    the ids the front door needs to resubmit."""
+    fleet = ServingFleet(ReplicaSet([TileStore.open(store_path)]),
+                         n_waves=1)
+    n = fleet.replicas.n_cols
+    fleet.submit(_PoisonSession(n, "poison"))
+    fleet.submit(MultiplyRequest(np.ones(n, np.float32), tenant_id="bystander"))
+    with pytest.raises(WaveError) as ei:
+        fleet.drain(timeout=60)
+    assert "poison" in ei.value.session_ids
+    assert "poison" in str(ei.value)        # ids visible to log-only callers
+    assert ei.value.wave_id == 0
+    fleet.close()
+
+
+def test_fleet_stats_gauges(store_path):
+    with ServingFleet(ReplicaSet([TileStore.open(store_path)]),
+                      n_waves=2) as fleet:
+        n = fleet.replicas.n_cols
+        fleet.submit(MultiplyRequest(np.ones(n, np.float32), tenant_id="a"))
+        fleet.drain(timeout=60)
+        stats = fleet.stats()
+    assert stats["n_waves"] == 2
+    assert stats["backlog_cols"] == 0 and stats["pending_sessions"] == 0
+    assert stats["scan_passes"] >= 1
+    assert stats["io_stats"]["bytes_read"] > 0
+    assert stats == __import__("json").loads(__import__("json").dumps(stats))
+
+
+# ---------------------------------------------------------------------------
+# The cluster
+# ---------------------------------------------------------------------------
+def test_two_host_cluster_serves_mixed_batch_bit_identical(store_path,
+                                                           small_graph):
+    """2 in-process hosts behind the front door serve a mixed tenant batch
+    (multiply, power iteration, PageRank, BFS) with results bit-identical
+    to a lone ServingFleet; routing spreads tenants over both hosts."""
+    specs = mixed_specs(small_graph, n_multiply=3)
+    want = lone_fleet_results(store_path, specs)
+
+    h1, h2 = make_host(store_path), make_host(store_path)
+    p1, p2 = h1.start(), h2.start()
+    try:
+        with ClusterFrontDoor(heartbeat_interval=0.1) as fd:
+            fd.add_host("127.0.0.1", p1)
+            fd.add_host("127.0.0.1", p2)
+            tickets = [fd.submit(s) for s in specs]
+            results = fd.drain(tickets, timeout=120)
+            assert len({t.host_key for t in tickets}) == 2
+            # heartbeats fed the cluster-wide I/O view
+            deadline = time.monotonic() + 10
+            while (fd.cluster_io_stats().bytes_read == 0
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
+            assert fd.cluster_io_stats().bytes_read > 0
+            fd.shutdown_hosts()
+    finally:
+        h1.stop()
+        h2.stop()
+    for got, exp in zip(results, want):
+        np.testing.assert_array_equal(got, exp)
+
+
+def test_kill_host_mid_pass_failover_bit_identical(store_path, small_graph):
+    """Killing one host mid-serve evicts it (heartbeat/connection loss) and
+    the front door resubmits its in-flight tenants to the survivor; every
+    tenant completes with the lone-fleet bits — sessions are deterministic
+    replays, so failover is bit-identical, not approximately recovered."""
+    specs = mixed_specs(small_graph, n_multiply=3)
+    want = lone_fleet_results(store_path, specs)
+
+    h1, h2 = make_host(store_path), make_host(store_path)
+    p1, p2 = h1.start(), h2.start()
+    try:
+        with ClusterFrontDoor(heartbeat_interval=0.1, miss_limit=2) as fd:
+            k1 = fd.add_host("127.0.0.1", p1)
+            fd.add_host("127.0.0.1", p2)
+            tickets = [fd.submit(s) for s in specs]
+            # kill host 1 abruptly: endpoint vanishes, fleet keeps running,
+            # no drain, no goodbye — the front door must notice on its own
+            h1._loop.call_soon_threadsafe(h1._shutdown.set)
+            results = fd.drain(tickets, timeout=120)
+            assert fd.evicted == [k1]
+            assert sum(t.resubmits for t in tickets) >= 1
+            assert all(t.host_key != k1 for t in tickets if t.resubmits)
+            fd.shutdown_hosts()
+    finally:
+        h1.stop()
+        h2.stop()
+    for got, exp in zip(results, want):
+        np.testing.assert_array_equal(got, exp)
+
+
+def test_front_door_budget_arbitration(store_path, small_graph):
+    """A cluster-wide memory budget is split over busy hosts via the budget
+    RPC (the per-wave §3.6 slice math, per host)."""
+    budget = 64 * 1024 * 1024
+    h1 = make_host(store_path)
+    p1 = h1.start()
+    try:
+        with ClusterFrontDoor(memory_budget_bytes=budget,
+                              heartbeat_interval=0.1) as fd:
+            fd.add_host("127.0.0.1", p1)
+            rng = np.random.default_rng(5)
+            spec = SessionSpec.multiply(
+                rng.standard_normal(small_graph.n_rows).astype(np.float32),
+                tenant_id="b0")
+            t = fd.submit(spec)
+            fd.drain([t], timeout=60)
+            # the lone busy host received the whole budget
+            deadline = time.monotonic() + 10
+            while (h1.fleet.replicas.cfg.memory_budget_bytes != budget
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
+            assert h1.fleet.replicas.cfg.memory_budget_bytes == budget
+            fd.shutdown_hosts()
+    finally:
+        h1.stop()

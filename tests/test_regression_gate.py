@@ -7,8 +7,8 @@ import sys
 import pytest
 
 sys.path.insert(0, ".")  # benchmarks/ is a repo-root package, like the CI job
-from benchmarks.check_regression import (compare, compare_runtime,  # noqa: E402
-                                         main)
+from benchmarks.check_regression import (compare, compare_cluster,  # noqa: E402
+                                         compare_runtime, main)
 
 
 def summary(speedup=1.6, h2d=26.0):
@@ -25,7 +25,21 @@ def summary(speedup=1.6, h2d=26.0):
     }
 
 
-def runtime_summary(mid=3, between=7, fleet2=1.9):
+def cluster_summary(speedup=1.8, completed=8, resubmits=4, evicted=1,
+                    bit_identical=True):
+    return {
+        "tenants": 8,
+        "hosts1_col_passes_per_s": 13.0,
+        "hosts2_col_passes_per_s": 13.0 * speedup,
+        "hosts2_speedup_vs_1": speedup,
+        "failover": {
+            "tenants": 8, "completed": completed, "resubmits": resubmits,
+            "evicted": evicted, "bit_identical": bit_identical,
+        },
+    }
+
+
+def runtime_summary(mid=3, between=7, fleet2=1.9, cluster="default"):
     return {
         "boundaries_to_first_result": {"mid-pass": mid,
                                        "between-pass": between},
@@ -39,6 +53,7 @@ def runtime_summary(mid=3, between=7, fleet2=1.9):
             "fleet4_speedup_vs_wide": 2.0,
         },
         "replica_scan_speedup": 1.8,
+        "cluster": cluster_summary() if cluster == "default" else cluster,
     }
 
 
@@ -142,6 +157,50 @@ def test_main_gates_runtime_alongside_engine(tmp_path):
 
     # without --runtime the engine-only contract is unchanged
     assert main([str(eng), str(eng), "--mode", "quick"]) == 0
+
+
+def test_cluster_gate_passes_within_tolerance():
+    ok = runtime_summary(cluster=cluster_summary(speedup=1.8 * 0.85))
+    assert compare_cluster(ok, runtime_summary(), tolerance=0.2) == []
+
+
+def test_cluster_gate_trips_on_speedup_regression():
+    sick = runtime_summary(cluster=cluster_summary(speedup=1.8 * 0.75))
+    # 1.35x also breaches the absolute 1.5x floor -> two messages
+    problems = compare_cluster(sick, runtime_summary(), tolerance=0.2)
+    assert any("cluster speedup regressed" in p for p in problems)
+
+
+def test_cluster_gate_enforces_absolute_floor():
+    # a decayed baseline cannot ratchet the floor below 1.5x
+    sick = runtime_summary(cluster=cluster_summary(speedup=1.4))
+    base = runtime_summary(cluster=cluster_summary(speedup=1.45))
+    problems = compare_cluster(sick, base, tolerance=0.2)
+    assert any("acceptance floor" in p for p in problems)
+
+
+def test_cluster_gate_trips_on_lost_tenants_or_identity():
+    lost = runtime_summary(cluster=cluster_summary(completed=7))
+    assert any("lost tenants" in p for p in
+               compare_cluster(lost, runtime_summary(), tolerance=0.2))
+    skewed = runtime_summary(cluster=cluster_summary(bit_identical=False))
+    assert any("bit-identical" in p for p in
+               compare_cluster(skewed, runtime_summary(), tolerance=0.2))
+    inert = runtime_summary(cluster=cluster_summary(resubmits=0, evicted=0))
+    assert any("no failover" in p for p in
+               compare_cluster(inert, runtime_summary(), tolerance=0.2))
+
+
+def test_cluster_gate_requires_fresh_section_tolerates_old_baseline():
+    # fresh without a cluster section = the net bench silently didn't run
+    fresh = runtime_summary(cluster=None)
+    del fresh["cluster"]
+    assert any("no 'cluster' section" in p for p in
+               compare_cluster(fresh, runtime_summary(), tolerance=0.2))
+    # a pre-cluster baseline only enforces the absolute floors
+    base = runtime_summary(cluster=None)
+    del base["cluster"]
+    assert compare_cluster(runtime_summary(), base, tolerance=0.2) == []
 
 
 def test_legacy_flat_schema_reads_as_full(tmp_path):

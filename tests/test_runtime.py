@@ -15,8 +15,9 @@ from repro.apps.pagerank import (build_operator as pr_operator,
 from repro.core.formats import to_chunked
 from repro.core.sem import SEMConfig, SEMSpMM
 from repro.io.storage import TileStore
-from repro.runtime import (Batcher, HotChunkCache, MultiplyRequest,
-                           PowerIterationSession, SharedScanScheduler)
+from repro.runtime import (Batcher, BFSSession, HotChunkCache,
+                           MultiplyRequest, PowerIterationSession,
+                           SharedScanScheduler)
 from repro.sparse.generate import sbm
 
 
@@ -241,6 +242,59 @@ def test_labelprop_session_recovers_sbm_communities(tmp_path):
     ref = labelprop_dense_reference(adj, seeds, seed_labels, 4, max_iter=30)
     agree = float((s.labels == ref).mean())
     assert agree > 0.9, agree
+
+
+def test_bfs_session_matches_python_oracle(small_graph, tmp_path):
+    """BFS over the boolean or-and semiring rides the plus-times engine via
+    the threshold adapter (y != 0  <=>  or-and reachability over the
+    non-negative operator): hop counts match a pure-python queue BFS,
+    including multi-source frontiers and -1 for unreachable vertices."""
+    from collections import defaultdict, deque
+    ct = to_chunked(small_graph, T=512, C=128)
+    path = str(tmp_path / "bfs")
+    TileStore.write(path, ct)
+    n = small_graph.n_rows
+    sched = SharedScanScheduler(
+        SEMSpMM(TileStore.open(path), SEMConfig(chunk_batch=64)),
+        use_cache=False)
+    source_sets = [[0], [17], [0, 5]]
+    sessions = [sched.submit(BFSSession(np.array(s), n, tenant_id=str(i)))
+                for i, s in enumerate(source_sets)]
+    sched.run()
+
+    # oracle, no engine: a vertex v is reached from u when A[v, u] != 0
+    nbrs = defaultdict(list)
+    for v, u in zip(small_graph.rows, small_graph.cols):
+        nbrs[int(u)].append(int(v))
+    for sources, sess in zip(source_sets, sessions):
+        dist = {s: 0 for s in sources}
+        q = deque(sources)
+        while q:
+            u = q.popleft()
+            for v in nbrs[u]:
+                if v not in dist:
+                    dist[v] = dist[u] + 1
+                    q.append(v)
+        want = np.full(n, -1, np.int32)
+        for v, d in dist.items():
+            want[v] = d
+        assert sess.done
+        np.testing.assert_array_equal(sess.result, want)
+        assert sess.frontier_size == 0       # converged, not depth-capped
+
+
+def test_bfs_session_respects_max_depth(small_graph, tmp_path):
+    ct = to_chunked(small_graph, T=512, C=128)
+    path = str(tmp_path / "bfs_cap")
+    TileStore.write(path, ct)
+    n = small_graph.n_rows
+    sched = SharedScanScheduler(
+        SEMSpMM(TileStore.open(path), SEMConfig(chunk_batch=64)),
+        use_cache=False)
+    capped = sched.submit(BFSSession(np.array([0]), n, max_depth=1))
+    sched.run()
+    assert capped.done and capped.iterations == 1
+    assert capped.result.max() <= 1
 
 
 def test_mixed_wave_shares_one_scan(store_path, small_valued):
