@@ -13,7 +13,12 @@ Compares a fresh ``benchmarks.run --json`` summary against the committed
 * the emulated-SSD overlap speedup drops (the engine stopped hiding the
   stream behind compute), or
 * any engine variant's host->device bytes per pass grow (a decode/staging
-  win regressed — e.g. the uint16 device decode fell back to int32).
+  win regressed — e.g. the uint16 device decode fell back to int32), or
+* the optimized-store rows stop cutting bytes: every ``X-opt`` row must
+  stream >= 25% fewer MB per pass than its ``X`` row, and ship >= 25%
+  fewer h2d MB wherever packed planes reach the device (every engine but
+  the host-decoded ``serial`` ablation).  A fresh summary with no ``-opt``
+  rows fails outright — the compression path fell out of the bench.
 
 With ``--runtime``, a fresh serving-runtime summary is additionally diffed
 against the committed ``BENCH_runtime.json``:
@@ -41,6 +46,7 @@ from typing import Dict, List
 
 FLEET_SPEEDUP_FLOOR = 1.3     # the acceptance bar on 2 emulated spindles
 CLUSTER_SPEEDUP_FLOOR = 1.5   # 2 localhost hosts vs 1, disjoint spindles
+OPT_SHRINK_FLOOR = 0.25       # optimized stores must cut streamed+h2d bytes
 
 
 def _load_mode(path: str, mode: str) -> Dict:
@@ -77,6 +83,31 @@ def compare(fresh: Dict, baseline: Dict, tolerance: float) -> List[str]:
                 f"h2d bytes/pass regressed for {key[0]}/{key[1]}: "
                 f"{e['h2d_mb_per_pass']:.3f} MB vs baseline "
                 f"{base_h2d[key]:.3f} MB (ceiling {ceiling:.3f})")
+
+    # the compression floor is absolute, not baseline-relative: optimized
+    # rows must beat their raw counterparts by OPT_SHRINK_FLOOR in the
+    # fresh run itself
+    by_key = {(e["tier"], e["engine"]): e for e in fresh["engines"]}
+    pairs = [(k, (k[0], k[1] + "-opt")) for k in by_key
+             if not k[1].endswith("-opt") and (k[0], k[1] + "-opt") in by_key]
+    if not pairs:
+        problems.append("no optimized-store rows in the fresh engine "
+                        "summary — the compression path fell out of the "
+                        "bench")
+    for raw_k, opt_k in pairs:
+        raw_e, opt_e = by_key[raw_k], by_key[opt_k]
+        checked = [("mb_streamed_per_pass", True),
+                   ("h2d_mb_per_pass", raw_k[1] != "serial")]
+        for metric, applies in checked:
+            if not applies:
+                continue
+            shrink = 1.0 - opt_e[metric] / raw_e[metric]
+            if shrink < OPT_SHRINK_FLOOR:
+                problems.append(
+                    f"optimized store only cut {metric} by {shrink:.1%} "
+                    f"for {raw_k[0]}/{raw_k[1]} "
+                    f"({raw_e[metric]:.3f} -> {opt_e[metric]:.3f} MB; "
+                    f"floor {OPT_SHRINK_FLOOR:.0%})")
     return problems
 
 
@@ -178,6 +209,9 @@ def main(argv=None) -> int:
     problems = compare(fresh, baseline, args.tolerance)
     gates = [f"overlap speedup {fresh['overlap_speedup_emulated']:.2f}x, "
              f"{len(fresh['engines'])} engine rows"]
+    if fresh.get("opt_store_shrink_pct") is not None:
+        gates.append(f"opt store {fresh['opt_store_shrink_pct']:.0f}% "
+                     f"smaller")
     if args.runtime is not None:
         fresh_rt = _load_mode(args.runtime, args.mode)
         base_rt = _load_mode(args.runtime_baseline, args.mode)

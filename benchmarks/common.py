@@ -26,8 +26,11 @@ def quick_mode() -> bool:
     return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
 
 
-def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
-    """Median wall seconds."""
+def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1,
+           stat: Callable = np.median) -> float:
+    """Wall seconds, ``stat`` over ``repeat`` runs (median by default;
+    pass ``stat=np.min`` where a gated ratio of two measurements must not
+    inherit scheduler noise from both sides)."""
     for _ in range(warmup):
         fn()
     times = []
@@ -35,7 +38,7 @@ def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
         t0 = time.perf_counter()
         fn()
         times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    return float(stat(times))
 
 
 def save(name: str, rows: List[Dict]) -> None:

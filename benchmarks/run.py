@@ -76,6 +76,7 @@ def write_engine_json(rows, out_path=None, quick=False) -> str:
             for r in rows],
         "overlap_speedup_emulated": rows[0]["overlap_speedup_emulated"],
         "h2d_index_saving_mb": rows[0]["h2d_index_saving_mb"],
+        "opt_store_shrink_pct": rows[0].get("opt_store_shrink_pct"),
     }
     path = out_path or os.path.join(REPO_ROOT, "BENCH_engine.json")
     return _merge_mode_json(summary, path, quick)

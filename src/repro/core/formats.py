@@ -458,6 +458,106 @@ def to_chunked(m: COO, T: int = 16384, C: int = 2048,
     return ChunkedTiles(m.n_rows, m.n_cols, T, C, meta, row_l, col_l, vals)
 
 
+# ---------------------------------------------------------------------------
+# Per-chunk uint8 delta encoding (the optimized TileStore's packed planes)
+# ---------------------------------------------------------------------------
+# A chunk's encoding tag is a 2-bit plane-width mask: bit 0 set -> the row
+# plane is stored as uint8, bit 1 set -> the column plane is stored as
+# uint8 (an unset bit keeps the raw uint16 width).  The widths drive the
+# byte layout mechanically (``TileStore._rec_of``); the *meaning* of the
+# packed planes is a single scheme:
+ENC_ROWS_U8 = 1
+ENC_COLS_U8 = 2
+ENC_FLAT_U24 = ENC_COLS_U8              # u16 + u8 planes: 24-bit deltas
+ENC_FLAT_U16 = ENC_ROWS_U8 | ENC_COLS_U8  # u8 + u8 planes: 16-bit deltas
+
+# Flattened-key delta encoding (entries are sorted by (row, col) within a
+# chunk, so the flattened key k = row * T + col is non-decreasing — the
+# standard sorted-edge-list delta idiom):
+#
+#   dk[i] = k[i] - k[i-1]           (dk[0] = 0)
+#   rows plane stores dk >> 8, cols plane stores dk & 255
+#   meta[:, 4:6] = (row[0], col[0]) reconstruct the base key.
+#
+# ENC_FLAT_U16 packs the high byte as uint8 (2 B/lane, every gap fits 16
+# bits); ENC_FLAT_U24 keeps it uint16 (3 B/lane, gaps up to 2**24 - 1).
+# Since a gap never exceeds T*T - 1, every chunk with T <= 4096 packs in
+# one of the two modes — there is no raw fallback at the bench tile
+# sizes, which is what keeps the encoding-run fragmentation low.  A
+# 24-bit-mode chunk costs what a per-plane "row deltas only" mode would
+# (3 B/lane) while covering strictly more chunks, so per-plane modes
+# earn no slot.
+#
+# The column plane's dtype identifies packing (u8 -> flattened deltas,
+# u16 -> raw), and the row plane's dtype the delta width, so decoders
+# dispatch with no side channel and one shared reconstruction:
+# dk = rows << 8 | cols in either packed mode.  Padding lanes store 0 and
+# decode to 0 (masked by chunk nnz), reproducing the raw planes exactly,
+# so a packed chunk is bit-identical to its raw form through any engine.
+
+
+def encode_chunk_planes(meta: np.ndarray, row_l: np.ndarray,
+                        col_l: np.ndarray, T: int
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+    """Per-chunk packability test + packed planes (vectorized).
+
+    Returns ``(tags, bases, rows_hi, cols_lo)``: ``tags`` uint8 (n,) — the
+    chosen ENC_* mode per chunk (16-bit deltas preferred, then 24-bit,
+    else 0 = raw) — ``bases`` int32 (n, 2) = (row[0], col[0]) per chunk,
+    ``rows_hi`` uint16 (n, C) = dk >> 8 (the writer narrows it to uint8
+    where the 16-bit mode applies) and ``cols_lo`` uint8 (n, C) =
+    dk & 255.  Both planes are meaningful only where the tag is nonzero.
+    """
+    n, C = row_l.shape
+    nnz = meta[:, 3].astype(np.int64)
+    lanes = np.arange(C)[None, :]
+    valid = lanes < nnz[:, None]
+    r = row_l.astype(np.int64)
+    c = col_l.astype(np.int64)
+    k = r * T + c
+    dk = np.where(valid, k - np.concatenate([k[:, :1], k[:, :-1]], axis=1), 0)
+    dk[:, 0] = 0
+    sorted_ok = (dk >= 0).all(axis=1)
+    ok16 = sorted_ok & (dk <= 65535).all(axis=1)
+    ok24 = sorted_ok & (dk <= (1 << 24) - 1).all(axis=1)
+    tags = np.where(ok16, ENC_FLAT_U16,
+                    np.where(ok24, ENC_FLAT_U24, 0)).astype(np.uint8)
+    dk = np.where(tags[:, None] != 0, dk, 0)
+    rows_hi = (dk >> 8).astype(np.uint16)
+    cols_lo = (dk & 255).astype(np.uint8)
+    bases = np.stack([row_l[:, 0], col_l[:, 0]], axis=1).astype(np.int32)
+    bases[nnz == 0] = 0
+    return tags, bases, rows_hi, cols_lo
+
+
+def decode_packed_planes(meta: np.ndarray, rows: np.ndarray,
+                         cols: np.ndarray, T: int
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side mirror of the device decode (integer-exact, so the
+    decoded-i32 cache/IM paths match the device paths bitwise).  The
+    plane dtypes select the mode (see the encoding comment above);
+    ``meta`` must carry the bases (width >= 6) whenever a plane arrives
+    as uint8.  Returns int32 planes with padding lanes zeroed — exactly
+    the raw planes the encoder consumed.
+    """
+    C = rows.shape[1]
+    lanes = np.arange(C)[None, :]
+    if cols.dtype == np.uint8:   # flattened deltas (16- or 24-bit dk)
+        dk = (rows.astype(np.int64) << 8) | cols.astype(np.int64)
+        k = (meta[:, 4:5].astype(np.int64) * T
+             + meta[:, 5:6].astype(np.int64) + np.cumsum(dk, axis=1))
+        r = k // T
+        c = k - r * T
+    else:
+        r = rows.astype(np.int64)
+        c = cols.astype(np.int64)
+    valid = lanes < meta[:, 3:4]
+    r = np.where(valid, r, 0)
+    c = np.where(valid, c, 0)
+    return r.astype(np.int32), c.astype(np.int32)
+
+
 def chunked_from_tiled(ts: TiledSCSR, C: int = 2048,
                        dtype=np.float32) -> ChunkedTiles:
     """Decode TiledSCSR (the storage format) into the execution layout."""

@@ -89,14 +89,37 @@ class SEMConfig:
     fixed_shape: bool = True      # pad the tail batch to chunk_batch
 
 
+def _decode_planes(meta, row_l, col_l, T: int):
+    """Device mirror of :func:`repro.core.formats.decode_packed_planes`:
+    upcast raw uint16/int32 planes; decode an optimized store's
+    flattened-key deltas (a uint8 column plane marks packing, the row
+    plane's width the 16- vs 24-bit delta mode; chunk bases ride in meta
+    columns 4/5).  The dtype branch resolves at trace time, so the
+    raw-store path keeps the exact jit graph (and cache entry) it had
+    before delta packing existed.  Integer-exact, so raw and packed
+    stores of the same matrix produce bitwise-equal gathers."""
+    if col_l.dtype == jnp.uint8:
+        dk = (row_l.astype(jnp.int32) << 8) | col_l.astype(jnp.int32)
+        k = meta[:, 4:5] * T + meta[:, 5:6] + jnp.cumsum(dk, axis=1)
+        r = k // T
+        c = k - r * T
+        valid = jnp.arange(row_l.shape[1])[None, :] < meta[:, 3:4]
+        r = jnp.where(valid, r, 0)
+        c = jnp.where(valid, c, 0)
+    else:
+        r = row_l.astype(jnp.int32)
+        c = col_l.astype(jnp.int32)
+    return r, c
+
+
 @partial(jax.jit, static_argnames=("T", "semiring"), donate_argnums=(5,))
 def _batch_step(meta, row_l, col_l, vals, x_pad, out_blocks, T: int,
                 semiring: str = "plus_times"):
     """Apply one batch of chunks: out_blocks (n_tile_rows, T, p) += A_batch @ X.
-    Accepts uint16 or int32 local indices; the upcast happens here, on
-    device (jit specializes per input dtype)."""
-    row_l = row_l.astype(jnp.int32)
-    col_l = col_l.astype(jnp.int32)
+    Accepts uint16/int32 local indices or uint8 delta planes; the upcast
+    (or cumsum decode) happens here, on device (jit specializes per input
+    dtype)."""
+    row_l, col_l = _decode_planes(meta, row_l, col_l, T)
     x_blocks = x_pad.reshape(-1, T, x_pad.shape[1])
 
     def step(out, chunk):
@@ -115,8 +138,7 @@ def _batch_step_binary(meta, row_l, col_l, x_pad, out_blocks, T: int):
     """Binary-matrix step: no values are streamed or staged at all — a lane
     contributes 1.0 iff its index is below the chunk's nnz (device-side
     synthesis of what the decoded path materialized on the host)."""
-    row_l = row_l.astype(jnp.int32)
-    col_l = col_l.astype(jnp.int32)
+    row_l, col_l = _decode_planes(meta, row_l, col_l, T)
     x_blocks = x_pad.reshape(-1, T, x_pad.shape[1])
     lanes = jnp.arange(row_l.shape[1])
 
@@ -164,6 +186,9 @@ class PassBoundary:
             full = np.zeros((pad, cols.shape[1]), np.float32)
             full[: cols.shape[0]] = cols
             cols = full
+        # an optimized store's engine column space is relabeled; the caller
+        # writes user-space columns, so relabel here (no-op on raw stores)
+        cols = self.sem.store.apply_col_perm(cols)
         dev = jax.device_put(jnp.asarray(cols), self.sem.device)
         self.sem.store.stats.add_h2d(dev.nbytes)
         self.x_pad = self.x_pad.at[:, c0:c0 + cols.shape[1]].set(dev)
@@ -223,16 +248,21 @@ class SEMSpMM:
         return self.cfg.decode_on_device and self._cached is None
 
     def _prepare_x(self, x) -> jax.Array:
-        """Stage X on device, padded to the tile grid.  Skips the rebuild,
-        copy, and h2d accounting when ``x`` is already a padded float32
-        device array (the sharded path stages once for all shards)."""
+        """Stage X on device, padded to the tile grid and relabeled into the
+        store's engine column space (optimized stores persist an operand
+        permutation; raw stores pass through).  Skips the rebuild, copy,
+        permute, and h2d accounting when ``x`` is already a padded float32
+        device array (the sharded path permutes and stages once for all
+        shards)."""
         already_dev = isinstance(x, jax.Array)
-        if x.shape[0] == self.padded_cols and x.dtype == jnp.float32:
-            x_pad = x if already_dev else jnp.asarray(x)
-            staged = not already_dev
+        if already_dev and x.shape[0] == self.padded_cols \
+                and x.dtype == jnp.float32:
+            x_pad = x
+            staged = False
         else:
-            x_pad = jnp.zeros((self.padded_cols, x.shape[1]), jnp.float32)
-            x_pad = x_pad.at[: x.shape[0]].set(jnp.asarray(x, jnp.float32))
+            full = np.zeros((self.padded_cols, x.shape[1]), np.float32)
+            full[: x.shape[0]] = np.asarray(x, np.float32)
+            x_pad = jnp.asarray(self.store.apply_col_perm(full))
             staged = True
         if self.device is not None:
             x_pad = jax.device_put(x_pad, self.device)
@@ -254,23 +284,40 @@ class SEMSpMM:
         from repro.kernels.ops import LANE
         return (-p) % LANE
 
-    def _pad_tail(self, batches: Iterator[Tuple[np.ndarray, ...]]
+    def _pad_tail(self, batches: Iterator[Tuple[np.ndarray, ...]],
+                  pow2: bool = False
                   ) -> Iterator[Tuple[Tuple[np.ndarray, ...], int]]:
-        """Pad a short tail batch to ``chunk_batch`` chunks so every jitted
-        step sees one shape; yields ``(batch, n_valid)`` with the real chunk
-        count.  Pad chunks replicate the last chunk's tile coordinates with
-        nnz = 0 and zero entries — their contribution is identically zero,
-        no first-of-tile-row flag is disturbed, and (the Pallas kernel's
+        """Pad a short batch to a fixed shape so the jitted step compiles a
+        bounded number of entries; yields ``(batch, n_valid)`` with the
+        real chunk count.  A classic plan (one short batch: the tail) pads
+        to ``chunk_batch`` — exactly one shape per pass.  A fragmented plan
+        (an optimized store's encoding-run splits: many short batches,
+        ``pow2=True``) instead pads short runs to the next power of two and
+        mid-size runs (>= 32) to the next multiple of 32 — still a bounded
+        shape count, but without inflating a 70-chunk run to 128 shipped-
+        and-scanned chunks the way pure power-of-two rounding would.  Pad
+        chunks
+        replicate the last chunk's tile coordinates with nnz = 0 and zero
+        entries — their contribution is identically zero, no
+        first-of-tile-row flag is disturbed, and (the Pallas kernel's
         window invariant) they never open an output block the batch's real
         chunks did not."""
         B = self.cfg.chunk_batch
         for batch in batches:
             meta = batch[0]
             n = meta.shape[0]
-            if n == B or n == 0:
+            tgt = B
+            if pow2 and 0 < n < B:
+                if n < 32:
+                    tgt = 1
+                    while tgt < n:
+                        tgt *= 2
+                else:
+                    tgt = min(-(-n // 32) * 32, B)
+            if n == tgt or n == 0:
                 yield batch, n
                 continue
-            meta_p = np.zeros((B, 4), meta.dtype)
+            meta_p = np.zeros((tgt, meta.shape[1]), meta.dtype)
             meta_p[:n] = meta
             meta_p[n:, 0] = meta[-1, 0]   # keep pointing at a live tile row:
             meta_p[n:, 1] = meta[-1, 1]   # a pad chunk must not re-init or
@@ -280,7 +327,7 @@ class SEMSpMM:
                 if a is None:
                     padded.append(None)
                     continue
-                a_p = np.zeros((B,) + a.shape[1:], a.dtype)
+                a_p = np.zeros((tgt,) + a.shape[1:], a.dtype)
                 a_p[:n] = a
                 padded.append(a_p)
             yield tuple(padded), n
@@ -366,15 +413,20 @@ class SEMSpMM:
                                      prefetch=self.cfg.prefetch,
                                      use_async=self.cfg.use_async,
                                      cache=pass_cache, raw=raw))
-        batches = (self._pad_tail(batches) if self.cfg.fixed_shape
-                   else self._with_valid(batches))
         binary_raw = raw and self.store.header["binary"]
         step = self._make_step(binary_raw)
         stats = self.store.stats
         B = self.cfg.chunk_batch
+        # Batch boundaries come from the store's plan, not ``i * B``: an
+        # optimized store splits batches at encoding-run boundaries, so the
+        # i-th batch does not start at chunk i*B in general.
+        starts = [s for s, _ in self.store.batch_plan(B)]
+        fragmented = len(starts) > -(-self.store.n_chunks // B)
+        batches = (self._pad_tail(batches, pow2=fragmented)
+                   if self.cfg.fixed_shape else self._with_valid(batches))
         if not self.cfg.overlap:
             for i, (batch, nv) in enumerate(batches):
-                x_pad = self._boundary(hook, i * B, x_pad, out)
+                x_pad = self._boundary(hook, starts[i], x_pad, out)
                 out = step(self._stage(batch, nv), x_pad, out)
         else:
             pending = None
@@ -382,13 +434,13 @@ class SEMSpMM:
                 staged = self._stage(batch, nv)  # stage k+1 ...
                 if pending is not None:
                     j, st_j = pending
-                    x_pad = self._boundary(hook, j * B, x_pad, out)
+                    x_pad = self._boundary(hook, starts[j], x_pad, out)
                     out = step(st_j, x_pad, out)  # ... while k stages
                     stats.add_overlap()
                 pending = (i, staged)
             if pending is not None:
                 j, st_j = pending
-                x_pad = self._boundary(hook, j * B, x_pad, out)
+                x_pad = self._boundary(hook, starts[j], x_pad, out)
                 out = step(st_j, x_pad, out)
         with self._passes_lock:
             self.passes += 1
@@ -478,8 +530,10 @@ class SEMSpMM:
 
     @property
     def n_batches(self) -> int:
-        """Chunk batches per streaming pass (boundary-hook call count)."""
-        return -(-self.store.n_chunks // self.cfg.chunk_batch)
+        """Chunk batches per streaming pass (boundary-hook call count) —
+        the store's batch plan, which splits at encoding-run boundaries on
+        optimized stores."""
+        return len(self.store.batch_plan(self.cfg.chunk_batch))
 
     @property
     def io_stats(self) -> IOStats:

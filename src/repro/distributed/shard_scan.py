@@ -165,7 +165,10 @@ class ShardedSEMSpMM:
             x_pad[: x.shape[0]] = x
         else:
             x_pad = x
-        x_dev = jnp.asarray(x_pad)
+        # Relabel into an optimized store's engine column space once, for
+        # all shards (no-op on raw stores); each shard's ``_prepare_x``
+        # then takes the already-on-device skip path.
+        x_dev = jnp.asarray(self.store.apply_col_perm(x_pad))
         self.execs[0].store.stats.add_h2d(x_dev.nbytes)
         if boundary_hook is None:
             blocks = list(self._pool.map(
@@ -183,7 +186,9 @@ class ShardedSEMSpMM:
                 for c0, cols in writes:
                     x_host[: cols.shape[0], c0:c0 + cols.shape[1]] = cols
                     x_host[cols.shape[0]:, c0:c0 + cols.shape[1]] = 0.0
-                x_dev = jnp.asarray(x_host)
+                # writes were recorded in user space; relabel the replayed
+                # operand exactly like the initial staging above
+                x_dev = jnp.asarray(self.store.apply_col_perm(x_host))
                 self.execs[0].store.stats.add_h2d(x_dev.nbytes)
             blocks = [head] + list(self._pool.map(
                 lambda ex: ex.multiply(x_dev), self.execs[1:]))

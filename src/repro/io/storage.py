@@ -31,11 +31,14 @@ import json
 import os
 import queue
 import threading
+import zlib
 from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.formats import ChunkedTiles
+from repro.core.formats import (ENC_COLS_U8, ENC_FLAT_U16, ENC_FLAT_U24,
+                                ENC_ROWS_U8, ChunkedTiles,
+                                decode_packed_planes, encode_chunk_planes)
 
 
 @dataclasses.dataclass
@@ -197,22 +200,54 @@ class TileStore:
     """On-"SSD" chunked sparse matrix.
 
     Layout: a JSON header file plus one binary file holding, per chunk and in
-    execution order: ``meta`` int32[4], ``row_local`` uint16[C],
-    ``col_local`` uint16[C], ``vals`` f32[C] (omitted for binary matrices —
-    the 2-byte index width is the SCSR I/O-volume saving carried over).
+    execution order: ``meta`` int32[meta_ints], ``row_local``, ``col_local``,
+    ``vals`` f32[C] (omitted for binary matrices — the 2-byte index width is
+    the SCSR I/O-volume saving carried over).
+
+    A legacy (raw) store has ``meta_ints == 4`` and uint16 index planes.  An
+    *optimized* store (see :meth:`optimize`) has ``meta_ints == 6`` — meta
+    columns 4/5 carry the chunk's (row, col) delta bases — and a per-chunk
+    encoding tag (``header["encodings"]``, the ``ENC_*`` bits from
+    ``core.formats``): tagged planes are stored as uint8 deltas and decoded
+    on device inside the jitted step.  Raw and packed chunks mix freely in
+    one store; :meth:`batch_plan` splits a pass into tag-homogeneous read
+    batches so every read stays a zero-copy strided view.
     """
 
     def __init__(self, path: str, header: dict, *, chunk_offset: int = 0,
-                 tile_row_offset: int = 0, row_offset: int = 0):
+                 tile_row_offset: int = 0, row_offset: int = 0,
+                 tags: Optional[np.ndarray] = None,
+                 offsets: Optional[np.ndarray] = None):
         self.path = path
         self.header = header
         self.stats = IOStats()
         self._mm: Optional[np.memmap] = None
+        self._perm: Optional[np.ndarray] = None
         # Shard views (see :meth:`partition_rows`) share the backing file but
         # cover a contiguous chunk range; offsets are 0 for a whole store.
         self.chunk_offset = chunk_offset
         self.tile_row_offset = tile_row_offset
         self.row_offset = row_offset
+        self.meta_ints = int(header.get("meta_ints", 4))
+        if tags is None:
+            # Whole-store open: derive the per-chunk encoding tags and byte
+            # offsets from the header.  Shard views receive the parent's
+            # arrays instead (their header keeps the full-store encoding
+            # list, but their chunk range is a slice of it).
+            enc = header.get("encodings")
+            tags = (np.zeros(header["n_chunks"], np.uint8) if enc is None
+                    else np.asarray(enc, np.uint8))
+        if offsets is None:
+            sizes = np.array([self._rec_of(t) for t in range(4)],
+                             np.int64)[tags]
+            offsets = np.zeros(tags.shape[0] + 1, np.int64)
+            np.cumsum(sizes, out=offsets[1:])
+        self._tags = tags
+        self._offsets = offsets
+        # Per-store encoding signature carried in cache keys: replicas of
+        # one optimized store share pins (identical tag sequences), but a
+        # raw pin is never served to a reader of the re-encoded store.
+        self._enc_sig = (self.meta_ints, zlib.crc32(tags.tobytes()))
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -237,6 +272,146 @@ class TileStore:
         return st
 
     @classmethod
+    def write_optimized(cls, path: str, ct: ChunkedTiles,
+                        binary: bool = False, *, pack: bool = True,
+                        col_perm: Optional[np.ndarray] = None
+                        ) -> "TileStore":
+        """Write ``ct`` with the per-chunk uint8 delta encoding wherever a
+        plane's deltas fit a byte (``pack=False`` keeps every chunk raw —
+        the reorder-only ablation).  ``col_perm`` (the operand relabel:
+        ``x_engine = x[col_perm]``) is persisted next to the store."""
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        C = ct.C
+        tags, bases, rows_hi, cols_lo = encode_chunk_planes(
+            ct.meta, ct.row_local, ct.col_local, ct.T)
+        if not pack:
+            tags = np.zeros_like(tags)
+        elif ct.n_chunks:
+            # Batch plans split at tag-run boundaries so every transfer has
+            # uniform plane dtypes.  An isolated 16-bit chunk between 24-bit
+            # runs would cost two extra splits (and their padded tails) to
+            # save C bytes — demote it to the 24-bit mode instead: the
+            # flattened-delta decode is identical, the row plane just rides
+            # along as uint16.
+            left = np.concatenate([[0], tags[:-1]])
+            right = np.concatenate([tags[1:], [0]])
+            iso = ((tags == ENC_FLAT_U16)
+                   & (left != ENC_FLAT_U16) & (right != ENC_FLAT_U16)
+                   & ((left == ENC_FLAT_U24) | (right == ENC_FLAT_U24)))
+            tags = np.where(iso, ENC_FLAT_U24, tags).astype(np.uint8)
+        meta6 = np.zeros((ct.n_chunks, 6), np.int32)
+        meta6[:, :4] = ct.meta
+        meta6[:, 4:6] = bases
+        with open(path + ".bin", "wb") as f:
+            for i in range(ct.n_chunks):
+                t = int(tags[i])
+                f.write(meta6[i].tobytes())
+                # packed chunks store dk >> 8 in the row plane (uint8 in
+                # the 16-bit mode, uint16 in the 24-bit mode) and dk & 255
+                # in the column plane; raw chunks keep the u16 coordinates
+                if t & ENC_ROWS_U8:
+                    f.write(rows_hi[i].astype(np.uint8).tobytes())
+                elif t:
+                    f.write(rows_hi[i].tobytes())
+                else:
+                    f.write(ct.row_local[i].astype(np.uint16).tobytes())
+                f.write(cols_lo[i].tobytes() if t & ENC_COLS_U8 else
+                        ct.col_local[i].astype(np.uint16).tobytes())
+                if not binary:
+                    f.write(ct.vals[i].astype(np.float32).tobytes())
+        # ``record`` stays the worst-case (all-raw) chunk size: the engine's
+        # stream-buffer budget accounting wants a conservative per-chunk
+        # bound, not the (variable) actual sizes.
+        header = dict(n_rows=ct.n_rows, n_cols=ct.n_cols, T=ct.T, C=C,
+                      n_chunks=ct.n_chunks, binary=binary,
+                      record=cls._record_bytes(C, binary) + 8,
+                      meta_ints=6, encodings=[int(t) for t in tags],
+                      col_perm=col_perm is not None)
+        with open(path + ".json", "w") as f:
+            json.dump(header, f)
+        if col_perm is not None:
+            # int32 halves the sidecar: the permutation is O(V) next to the
+            # store's O(E), and V < 2**31 everywhere this container reaches
+            np.save(path + ".perm.npy", np.asarray(col_perm, np.int32))
+        st = cls(path, header)
+        st.stats.add_write(st.nbytes)
+        return st
+
+    def optimize(self, out_path: str, *, reorder: bool = True,
+                 pack: bool = True) -> "TileStore":
+        """Offline re-encode into a smaller store at ``out_path``.
+
+        ``reorder=True`` relabels the *operand (column) dimension* degree-
+        descending (:func:`repro.sparse.graph.degree_order`): hub columns
+        cluster at small in-tile indices, which both densifies tiles (fewer
+        partial chunks) and pulls the column deltas into uint8 range.  The
+        output row space is untouched, so results need no un-permute and
+        the whole serving stack (elastic stitching, sharding, replicas,
+        the wire protocol) runs unchanged; the engine relabels the operand
+        at staging time from the persisted permutation.  Row-side
+        reordering would change the accumulator's tile-row prefix
+        semantics — see ROADMAP ("arrow-style reordering").
+
+        ``pack=True`` stores each index plane as uint8 deltas where they
+        fit (per-chunk, per-plane tags).  With ``reorder=False`` the chunk
+        layout is byte-for-byte the raw store's modulo encoding, so results
+        are unconditionally bit-identical; with ``reorder=True`` the
+        accumulation grouping changes, so bit-identity holds under exact
+        (e.g. integer-valued) arithmetic.
+        """
+        if self.chunk_offset:
+            raise ValueError("optimize() works on whole stores, not shards")
+        from repro.core.formats import COO, to_chunked
+        from repro.sparse.graph import degree_order
+        h = self.header
+        T = h["T"]
+        lanes = np.arange(h["C"])[None, :]
+        gr, gc, gv = [], [], []
+        for s, n in self.batch_plan(256):
+            m, r, c, v = self.read_batch(s, n)
+            valid = lanes < m[:, 3:4]
+            gr.append((m[:, 0:1].astype(np.int64) * T + r)[valid])
+            gc.append((m[:, 1:2].astype(np.int64) * T + c)[valid])
+            if not h["binary"]:
+                gv.append(v[valid])
+        rows = np.concatenate(gr) if gr else np.zeros(0, np.int64)
+        cols = np.concatenate(gc) if gc else np.zeros(0, np.int64)
+        vals = (None if h["binary"] else
+                np.concatenate(gv) if gv else np.zeros(0, np.float32))
+        perm = None
+        if reorder:
+            perm = degree_order(cols, h["n_cols"])
+            rank = np.empty_like(perm)
+            rank[perm] = np.arange(h["n_cols"])
+            cols = rank[cols]
+        ct = to_chunked(COO(h["n_rows"], h["n_cols"], rows, cols, vals),
+                        T=T, C=h["C"])
+        return type(self).write_optimized(out_path, ct, binary=h["binary"],
+                                          pack=pack, col_perm=perm)
+
+    # -- operand permutation (optimized stores) ------------------------------
+    def col_perm(self) -> Optional[np.ndarray]:
+        """The persisted operand relabel of an optimized store
+        (``x_engine = x[perm]``), or None for raw stores."""
+        if not self.header.get("col_perm"):
+            return None
+        if self._perm is None:
+            self._perm = np.load(self.path + ".perm.npy")
+        return self._perm
+
+    def apply_col_perm(self, x: np.ndarray) -> np.ndarray:
+        """Relabel an operand (rows = columns of the stored matrix) into
+        this store's engine column space; no-op for raw stores.  ``x`` may
+        be padded beyond ``n_cols`` — padding rows map to themselves."""
+        perm = self.col_perm()
+        if perm is None:
+            return x
+        x = np.asarray(x)
+        out = x.copy()
+        out[: perm.shape[0]] = x[perm]
+        return out
+
+    @classmethod
     def open(cls, path: str) -> "TileStore":
         with open(path + ".json") as f:
             return cls(path, json.load(f))
@@ -254,13 +429,48 @@ class TileStore:
     def _record_bytes(C: int, binary: bool) -> int:
         return 16 + 2 * C + 2 * C + (0 if binary else 4 * C)
 
+    def _rec_of(self, tag: int) -> int:
+        """On-disk bytes of one chunk with encoding ``tag`` (ENC_* bits):
+        a tagged index plane is uint8 deltas, an untagged one raw uint16;
+        values are never packed."""
+        C = self.header["C"]
+        wr = 1 if tag & ENC_ROWS_U8 else 2
+        wc = 1 if tag & ENC_COLS_U8 else 2
+        return (4 * self.meta_ints + (wr + wc) * C
+                + (0 if self.header["binary"] else 4 * C))
+
     @property
     def n_chunks(self) -> int:
         return self.header["n_chunks"]
 
     @property
     def nbytes(self) -> int:
-        return self.header["record"] * self.n_chunks
+        co = self.chunk_offset
+        return int(self._offsets[co + self.n_chunks] - self._offsets[co])
+
+    def range_nbytes(self, start: int, count: int) -> int:
+        """On-disk bytes of ``count`` chunks starting at ``start`` (this
+        store's frame) — per-chunk records vary with the encoding tag."""
+        g0 = self.chunk_offset + start
+        return int(self._offsets[g0 + count] - self._offsets[g0])
+
+    def batch_plan(self, batch: int) -> List[Tuple[int, int]]:
+        """Split this store's chunk range into ``(start, count)`` read
+        batches of at most ``batch`` chunks, each encoding-homogeneous so
+        :meth:`read_batch_raw` stays one zero-copy strided view.  A raw
+        store (one tag everywhere) gets exactly the classic
+        ``range(0, n_chunks, batch)`` plan; mixed stores split batches at
+        tag-run boundaries."""
+        n = self.n_chunks
+        co = self.chunk_offset
+        t = self._tags[co:co + n]
+        run_starts = np.flatnonzero(np.diff(t.astype(np.int16))) + 1
+        bounds = [0, *run_starts.tolist(), n]
+        plan: List[Tuple[int, int]] = []
+        for r0, r1 in zip(bounds[:-1], bounds[1:]):
+            for s in range(r0, r1, batch):
+                plan.append((s, min(batch, r1 - s)))
+        return plan
 
     # -- sequential batched reads --------------------------------------------
     def _memmap(self) -> np.memmap:
@@ -287,18 +497,29 @@ class TileStore:
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                   Optional[np.ndarray]]:
         """Zero-copy read of ``count`` chunks starting at ``start``: returns
-        (meta (count,4) i32, rows (count,C) u16 view, cols (count,C) u16 view,
-        vals (count,C) f32 view — or ``None`` for a binary matrix).
+        (meta (count, meta_ints) i32, rows (count,C) u16-or-u8 view,
+        cols (count,C) u16-or-u8 view, vals (count,C) f32 view — or ``None``
+        for a binary matrix).
 
         rows/cols/vals are strided views straight into the file mapping — no
-        host-side upcast or repack; the uint16 SCSR index width survives until
-        the device decode.  Only ``meta`` is copied (it is 16 bytes per chunk
-        and shard views rebase its tile-row ids).
+        host-side upcast, unpack, or repack; the stored index width (uint16
+        SCSR, or uint8 deltas in an optimized store) survives until the
+        device decode.  Only ``meta`` is copied (it is tens of bytes per
+        chunk and shard views rebase its tile-row ids).  The range must be
+        encoding-homogeneous — :meth:`batch_plan` produces exactly such
+        ranges; a mixed range cannot be one strided view and is an error.
         """
         h = self.header
-        C, rec = h["C"], h["record"]
+        C = h["C"]
+        g0 = self.chunk_offset + start
+        tag = int(self._tags[g0]) if count else 0
+        if count and (self._tags[g0:g0 + count] != tag).any():
+            raise ValueError(
+                f"chunk range [{start}, {start + count}) mixes encodings; "
+                "read tag-homogeneous ranges (see batch_plan())")
+        rec = self._rec_of(tag)
         mm = self._memmap()
-        off = (self.chunk_offset + start) * rec
+        off = int(self._offsets[g0])
         nbytes = rec * count
         if count:
             # Touch one byte per page so the disk I/O happens *here* (inside
@@ -314,29 +535,40 @@ class TileStore:
             finally:
                 self.stats.end_read()
         self.stats.add_read(nbytes)
-        meta = np.ndarray((count, 4), np.int32, buffer=mm, offset=off,
-                          strides=(rec, 4)).copy()
+        mb = 4 * self.meta_ints
+        meta = np.ndarray((count, self.meta_ints), np.int32, buffer=mm,
+                          offset=off, strides=(rec, 4)).copy()
         if self.tile_row_offset:
             meta[:, 0] -= self.tile_row_offset
-        rows = np.ndarray((count, C), np.uint16, buffer=mm, offset=off + 16,
-                          strides=(rec, 2))
-        cols = np.ndarray((count, C), np.uint16, buffer=mm,
-                          offset=off + 16 + 2 * C, strides=(rec, 2))
+        wr = 1 if tag & ENC_ROWS_U8 else 2
+        wc = 1 if tag & ENC_COLS_U8 else 2
+        rows = np.ndarray((count, C), np.uint8 if wr == 1 else np.uint16,
+                          buffer=mm, offset=off + mb, strides=(rec, wr))
+        cols = np.ndarray((count, C), np.uint8 if wc == 1 else np.uint16,
+                          buffer=mm, offset=off + mb + wr * C,
+                          strides=(rec, wc))
         vals = None
         if not h["binary"]:
             vals = np.ndarray((count, C), np.float32, buffer=mm,
-                              offset=off + 16 + 4 * C, strides=(rec, 4))
+                              offset=off + mb + (wr + wc) * C,
+                              strides=(rec, 4))
         return meta, rows, cols, vals
 
     def read_batch(self, start: int, count: int
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Decoded read: ``count`` chunks from ``start`` as
-        (meta (count,4) i32, rows (count,C) i32, cols (count,C) i32,
-        vals (count,C) f32) — the host-decoded path kept for IM caching and
-        as the engine ablation baseline."""
+        (meta (count, meta_ints) i32, rows (count,C) i32, cols (count,C)
+        i32, vals (count,C) f32) — the host-decoded path kept for IM
+        caching and as the engine ablation baseline.  Delta-packed planes
+        are unpacked here with the same integer arithmetic the device
+        decode uses, so both paths yield bitwise-equal planes."""
         meta, rows16, cols16, vals = self.read_batch_raw(start, count)
-        rows = rows16.astype(np.int32)
-        cols = cols16.astype(np.int32)
+        if rows16.dtype == np.uint8 or cols16.dtype == np.uint8:
+            rows, cols = decode_packed_planes(meta, rows16, cols16,
+                                              self.header["T"])
+        else:
+            rows = rows16.astype(np.int32)
+            cols = cols16.astype(np.int32)
         if vals is None:
             vals = np.ones((count, self.header["C"]), np.float32)
             lanes = np.arange(self.header["C"])[None, :]
@@ -359,13 +591,17 @@ class TileStore:
         # same range are different resident objects.  The tile-row offset is
         # part of the key because a pinned batch's meta is rebased to the
         # reader's shard frame — an offset-0 consumer must never be served a
-        # shard-rebased pin (or vice versa).
+        # shard-rebased pin (or vice versa).  The encoding signature is part
+        # of the key for the same reason one level down: a raw store's u16
+        # pin must never be served to a reader of the re-encoded store
+        # sharing the cache (replicas share a signature, so true copies
+        # still share pins).
         key = (self.chunk_offset + start, count, self.tile_row_offset,
-               "raw" if raw else "i32")
+               "raw" if raw else "i32", self._enc_sig)
         hit = cache.get(key)
         if hit is not None:
             # hit accounting is in on-disk bytes: the I/O this hit avoided
-            self.stats.add_cache_hit(self.header["record"] * count)
+            self.stats.add_cache_hit(self.range_nbytes(start, count))
             return hit
         batch = (self.read_batch_raw if raw else self.read_batch)(start, count)
         if raw:
@@ -392,10 +628,9 @@ class TileStore:
         abandons the iterator mid-pass (downstream exception, generator
         close) releases the reader — it must not stay blocked on the bounded
         queue forever."""
-        starts = list(range(0, self.n_chunks, batch))
-        sizes = [min(batch, self.n_chunks - s) for s in starts]
+        plan = self.batch_plan(batch)
         if not use_async:
-            for s, c in zip(starts, sizes):
+            for s, c in plan:
                 yield self._fetch(s, c, cache, raw)
             return
         q: "queue.Queue" = queue.Queue(maxsize=prefetch)
@@ -413,7 +648,7 @@ class TileStore:
 
         def reader():
             try:
-                for s, c in zip(starts, sizes):
+                for s, c in plan:
                     if not put(self._fetch(s, c, cache, raw)):
                         return
             except BaseException as e:  # noqa: BLE001 — forwarded, not eaten
@@ -442,11 +677,12 @@ class TileStore:
         meta stride — no decode of the index planes.  The serving runtime
         uses this to account which tile rows a mid-pass-admitted tenant's
         partial first pass covered."""
-        h = self.header
-        rec = h["record"]
         mm = self._memmap()
-        meta0 = np.ndarray((self.n_chunks,), np.int32, buffer=mm,
-                           offset=self.chunk_offset * rec, strides=(rec,))
+        co = self.chunk_offset
+        off = self._offsets[co:co + self.n_chunks]
+        # per-chunk records vary with the encoding tag, so gather the first
+        # meta word through the offset table instead of one fixed stride
+        meta0 = mm[off[:, None] + np.arange(4)].view(np.int32)[:, 0]
         return meta0.astype(np.int64) - self.tile_row_offset
 
     # -- row sharding ---------------------------------------------------------
@@ -463,12 +699,15 @@ class TileStore:
         (greedy contiguous split — the contiguity-constrained analogue of
         ``core.partition.lpt_partition``)."""
         h = self.header
-        T, rec = h["T"], h["record"]
+        T = h["T"]
         n_tile_rows = -(-h["n_rows"] // T)
         n_shards = max(1, min(int(n_shards), n_tile_rows))
         mm = self._memmap()
-        meta = np.ndarray((self.n_chunks, 4), np.int32, buffer=mm,
-                          offset=self.chunk_offset * rec, strides=(rec, 4))
+        co = self.chunk_offset
+        off = self._offsets[co:co + self.n_chunks]
+        # offset-table gather (records vary with the encoding tag); only the
+        # legacy meta words [tile_row .. nnz] are needed for the split
+        meta = mm[off[:, None] + np.arange(16)].view(np.int32)
         trow = meta[:, 0].astype(np.int64) - self.tile_row_offset
         row_nnz = np.bincount(trow, weights=meta[:, 3],
                               minlength=n_tile_rows)
@@ -493,7 +732,8 @@ class TileStore:
             st = type(self)(self.path, hdr,
                             chunk_offset=self.chunk_offset + c0,
                             tile_row_offset=self.tile_row_offset + tr0,
-                            row_offset=self.row_offset + tr0 * T)
+                            row_offset=self.row_offset + tr0 * T,
+                            tags=self._tags, offsets=self._offsets)
             shards.append(st)
             tr0 = tr1
         return shards

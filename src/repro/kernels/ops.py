@@ -63,8 +63,9 @@ def spmm_pallas_batch(meta, n_valid, rows, cols, vals, x_pad, out_blocks,
     first-of-tile-row flags, skips fixed-shape tail pads, seeds every
     touched output window from the accumulator it aliases, and leaves
     untouched tile rows alone.  ``rows``/``cols`` may be uint16 (upcast on
-    device); ``vals is None`` denotes a binary matrix whose lane mask is
-    synthesized on device from chunk nnz."""
+    device) or an optimized store's uint8 deltas (cumsum-decoded in-kernel
+    from the meta bases); ``vals is None`` denotes a binary matrix whose
+    lane mask is synthesized on device from chunk nnz."""
     n_tile_rows, _, p = out_blocks.shape
     n_valid = jnp.asarray(n_valid, jnp.int32).reshape(1)
     acc = out_blocks.reshape(n_tile_rows * T, p)

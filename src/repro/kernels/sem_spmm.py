@@ -67,6 +67,32 @@ from jax.experimental.pallas import tpu as pltpu
 # Per-chunk compute cores (shared by the one-shot and streaming bodies,
 # which differ only in how they scatter/merge the contribution)
 # ---------------------------------------------------------------------------
+def _decode_lanes(meta_ref, g, rows, cols, T: int):
+    """In-kernel decode of one chunk's index lanes, mirroring the engine's
+    ``core.sem._decode_planes`` (and the host's
+    ``formats.decode_packed_planes``) integer for integer: raw uint16/int32
+    lanes upcast; an optimized store's flattened-key deltas decode from
+    the chunk bases in the scalar-prefetched ``meta`` columns 4/5 (a
+    uint8 column plane marks packing, the row plane's width the 16- vs
+    24-bit delta mode; dk = rows << 8 | cols either way).  The dtype
+    branch resolves at trace time, so raw-store callers compile the exact
+    pre-decode kernel."""
+    C = rows.shape[0]
+    if cols.dtype == jnp.uint8:
+        dk = (rows.astype(jnp.int32) << 8) | cols.astype(jnp.int32)
+        k = meta_ref[g, 4] * T + meta_ref[g, 5] + jnp.cumsum(dk)
+        r = k // T
+        c = k - r * T
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (C, 1), 0)[:, 0]
+        valid = lanes < meta_ref[g, 3]
+        r = jnp.where(valid, r, 0)
+        c = jnp.where(valid, c, 0)
+    else:
+        r = rows.astype(jnp.int32)
+        c = cols.astype(jnp.int32)
+    return r, c
+
+
 def _gather_contrib(cols, x_ref, vals=None, mask=None):
     """One chunk's (C, p) scaled gather: rows of the X block by column
     index, scaled by values — or masked to the live lanes when a binary
@@ -96,15 +122,17 @@ def _mxu_blk(rows, cols, vals, x_ref, T: int):
 # ---------------------------------------------------------------------------
 # Kernel bodies
 # ---------------------------------------------------------------------------
-def _gather_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref):
+def _gather_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref, *,
+                 T: int):
     g = pl.program_id(0)
 
     @pl.when(meta_ref[g, 2] == 1)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    contrib = _gather_contrib(cols_ref[0], x_ref, vals=vals_ref[0])
-    out_ref[...] = out_ref[...].at[rows_ref[0]].add(contrib)  # VMEM scatter
+    rows, cols = _decode_lanes(meta_ref, g, rows_ref[0], cols_ref[0], T)
+    contrib = _gather_contrib(cols, x_ref, vals=vals_ref[0])
+    out_ref[...] = out_ref[...].at[rows].add(contrib)  # VMEM scatter
 
 
 def _mxu_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref, *,
@@ -115,7 +143,8 @@ def _mxu_body(meta_ref, rows_ref, cols_ref, vals_ref, x_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    blk = _mxu_blk(rows_ref[0], cols_ref[0], vals_ref[0], x_ref, T)
+    rows, cols = _decode_lanes(meta_ref, g, rows_ref[0], cols_ref[0], T)
+    blk = _mxu_blk(rows, cols, vals_ref[0], x_ref, T)
     out_ref[...] = out_ref[...] + blk.astype(out_ref.dtype)
 
 
@@ -156,7 +185,7 @@ def _live_lanes(meta_ref, g, C):
     return lanes < meta_ref[g, 3]
 
 
-def _stream_gather_body(meta_ref, nv_ref, *refs, binary: bool):
+def _stream_gather_body(meta_ref, nv_ref, *refs, T: int, binary: bool):
     if binary:
         rows_ref, cols_ref, x_ref, acc_ref, out_ref = refs
         vals_ref = None
@@ -166,13 +195,13 @@ def _stream_gather_body(meta_ref, nv_ref, *refs, binary: bool):
 
     @pl.when(g < nv_ref[0])
     def _step():
-        cols = cols_ref[0]
+        rows, cols = _decode_lanes(meta_ref, g, rows_ref[0], cols_ref[0], T)
         if binary:
             contrib = _gather_contrib(
                 cols, x_ref, mask=_live_lanes(meta_ref, g, cols.shape[0]))
         else:
             contrib = _gather_contrib(cols, x_ref, vals=vals_ref[0])
-        blk = jnp.zeros_like(out_ref).at[rows_ref[0]].add(contrib)
+        blk = jnp.zeros_like(out_ref).at[rows].add(contrib)
         _merge_block(meta_ref, g, acc_ref, out_ref, blk)
 
 
@@ -186,10 +215,10 @@ def _stream_mxu_body(meta_ref, nv_ref, *refs, T: int, binary: bool):
 
     @pl.when(g < nv_ref[0])
     def _step():
-        cols = cols_ref[0]
+        rows, cols = _decode_lanes(meta_ref, g, rows_ref[0], cols_ref[0], T)
         vals = (_live_lanes(meta_ref, g, cols.shape[0]).astype(x_ref.dtype)
                 if binary else vals_ref[0])
-        blk = _mxu_blk(rows_ref[0], cols, vals, x_ref, T)
+        blk = _mxu_blk(rows, cols, vals, x_ref, T)
         _merge_block(meta_ref, g, acc_ref, out_ref, blk.astype(out_ref.dtype))
 
 
@@ -229,13 +258,16 @@ def spmm_tiles(meta, row_local, col_local, vals, x_pad, *, T: int,
     _check_variant(variant)
     n_chunks, C = row_local.shape
     p = x_pad.shape[1]
-    # Device-side decode: the engine ships the SCSR uint16 indices as-is;
-    # the upcast to the kernels' int32 happens here, on device (jit
-    # specializes per input dtype, so int32 callers compile identically).
-    row_local = row_local.astype(jnp.int32)
-    col_local = col_local.astype(jnp.int32)
-    body = (_gather_body if variant == "gather"
-            else functools.partial(_mxu_body, T=T))
+    # Device-side decode: the engine ships the stored index planes as-is.
+    # uint16 upcasts here; uint8 delta planes pass through and cumsum-decode
+    # inside the kernel from the scalar-prefetched meta (jit specializes
+    # per input dtype, so int32 callers compile identically).
+    if row_local.dtype != jnp.uint8:
+        row_local = row_local.astype(jnp.int32)
+    if col_local.dtype != jnp.uint8:
+        col_local = col_local.astype(jnp.int32)
+    body = functools.partial(
+        _gather_body if variant == "gather" else _mxu_body, T=T)
     return pl.pallas_call(
         body,
         grid_spec=_grid_spec(n_chunks, C, T, p),
@@ -280,12 +312,14 @@ def spmm_tiles_acc(meta, n_valid, row_local, col_local, vals, x_pad, acc, *,
     _check_variant(variant)
     n_chunks, C = row_local.shape
     p = x_pad.shape[1]
-    row_local = row_local.astype(jnp.int32)
-    col_local = col_local.astype(jnp.int32)
+    if row_local.dtype != jnp.uint8:
+        row_local = row_local.astype(jnp.int32)
+    if col_local.dtype != jnp.uint8:
+        col_local = col_local.astype(jnp.int32)
     binary = vals is None
-    body = (functools.partial(_stream_gather_body, binary=binary)
-            if variant == "gather"
-            else functools.partial(_stream_mxu_body, T=T, binary=binary))
+    body = functools.partial(
+        _stream_gather_body if variant == "gather" else _stream_mxu_body,
+        T=T, binary=binary)
     operands = (meta, n_valid, row_local, col_local)
     if not binary:
         operands += (vals,)

@@ -188,7 +188,9 @@ class _SpindleStore(TileStore):
     spindle_lock = None
 
     def read_batch_raw(self, start, count):
-        delay = self.seconds_per_byte * self.header["record"] * count
+        # actual on-disk bytes, not record*count: an optimized store's
+        # packed chunks are smaller than the header's worst-case record
+        delay = self.seconds_per_byte * self.range_nbytes(start, count)
         self.stats.begin_read()
         try:
             if self.spindle_lock is not None:

@@ -15,6 +15,17 @@ def in_degrees(adj: COO) -> np.ndarray:
     return np.bincount(adj.cols, minlength=adj.n_cols).astype(np.int64)
 
 
+def degree_order(cols: np.ndarray, n_cols: int) -> np.ndarray:
+    """Degree-descending relabel order for the operand (column) dimension:
+    ``order[k]`` is the old id of new column ``k``, so the relabeled
+    operand is ``x[order]`` and hub columns cluster at small indices.
+    Ties break by original id (stable), so the order is deterministic.
+    ``TileStore.optimize`` uses this to densify tiles and shrink the
+    delta-coded column deltas into uint8 range."""
+    deg = np.bincount(np.asarray(cols, np.int64), minlength=n_cols)
+    return np.argsort(-deg, kind="stable").astype(np.int64)
+
+
 def pagerank_operator(adj: COO) -> COO:
     """Column-stochastic PageRank operator P = A^T D^{-1}: entry (u, v) =
     1/out_deg(v) for each edge v -> u, so PR update is ``x' = d P x + (1-d)/N``.

@@ -1,0 +1,279 @@
+"""The optimized TileStore (degree reordering + uint8 delta packing):
+host-side decode roundtrips, >= 25% on-disk shrink, bit-identity of every
+engine on packed stores, mixed raw/optimized cache keying, the elastic
+scheduler's delivered results, and a hypothesis sweep over the whole
+(binary x reorder x pack x sharded x cached) lattice against the
+``spmm_chunked`` oracle."""
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.formats import COO, to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.core.spmm import spmm_chunked
+from repro.distributed.shard_scan import ShardedSEMSpMM
+from repro.io.storage import TileStore
+from repro.runtime import PowerIterationSession, SharedScanScheduler
+from repro.runtime.cache import HotChunkCache
+
+C = 128
+T = 512
+BATCH = 53  # does not divide the chunk count -> padded tails everywhere
+
+
+@pytest.fixture(scope="module")
+def int_valued(small_graph):
+    """Small-integer values: float32 adds are exact, so even the reordered
+    store's regrouped accumulation is bit-identical."""
+    rng = np.random.default_rng(9)
+    return small_graph.with_values(
+        rng.integers(-8, 9, small_graph.nnz).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def ct_bin(small_graph):
+    return to_chunked(small_graph, T=T, C=C)
+
+
+@pytest.fixture(scope="module")
+def ct_int(int_valued):
+    return to_chunked(int_valued, T=T, C=C)
+
+
+@pytest.fixture(scope="module")
+def raw_bin(ct_bin, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("opt") / "bin")
+    TileStore.write(path, ct_bin, binary=True)
+    return path
+
+
+@pytest.fixture(scope="module")
+def raw_int(ct_int, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("opt") / "int")
+    TileStore.write(path, ct_int)
+    return path
+
+
+@pytest.fixture(scope="module")
+def raw_float(small_valued, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("opt") / "float")
+    TileStore.write(path, to_chunked(small_valued, T=T, C=C))
+    return path
+
+
+@pytest.fixture(scope="module")
+def opt_bin(raw_bin):
+    TileStore.open(raw_bin).optimize(raw_bin + "_opt")
+    return raw_bin + "_opt"
+
+
+@pytest.fixture(scope="module")
+def opt_int(raw_int):
+    TileStore.open(raw_int).optimize(raw_int + "_opt")
+    return raw_int + "_opt"
+
+
+@pytest.fixture(scope="module")
+def xi(small_graph):
+    rng = np.random.default_rng(3)
+    return rng.integers(-8, 9, (small_graph.n_cols, 8)).astype(np.float32)
+
+
+def _global_coo(store):
+    """Host-side decode of the whole store back to global coordinate space
+    (columns un-permuted through the persisted permutation)."""
+    Tn = store.header["T"]
+    perm = store.col_perm()
+    out = {}
+    for s, c in store.batch_plan(37):
+        meta, r, cc, v = store.read_batch(s, c)
+        for i in range(meta.shape[0]):
+            n = meta[i, 3]
+            gr = meta[i, 0] * Tn + r[i, :n]
+            gc = meta[i, 1] * Tn + cc[i, :n]
+            if perm is not None:
+                gc = perm[gc]
+            gv = np.ones(n, np.float32) if v is None else v[i, :n]
+            out.update(zip(zip(gr.tolist(), gc.tolist()), gv.tolist()))
+    return out
+
+
+# -- the store itself --------------------------------------------------------
+@pytest.mark.parametrize("reorder", [False, True])
+@pytest.mark.parametrize("pack", [False, True])
+def test_roundtrip_host_decode(raw_int, tmp_path, reorder, pack):
+    """optimize -> read_batch -> un-permute recovers the exact nonzero set
+    and values in every (reorder, pack) mode."""
+    st = TileStore.open(raw_int)
+    ref = _global_coo(st)
+    out = str(tmp_path / f"o{int(reorder)}{int(pack)}")
+    st.optimize(out, reorder=reorder, pack=pack)
+    assert _global_coo(TileStore.open(out)) == ref
+
+
+def test_optimized_store_shrinks(raw_bin, opt_bin):
+    """The acceptance floor on the store itself: >= 25% fewer bytes on a
+    binary power-law store, with the permutation persisted beside it."""
+    raw, opt = TileStore.open(raw_bin), TileStore.open(opt_bin)
+    assert opt.nbytes <= 0.75 * raw.nbytes, (raw.nbytes, opt.nbytes)
+    assert opt.header["col_perm"] and os.path.exists(opt_bin + ".perm.npy")
+    assert opt.header["meta_ints"] == 6
+    # the worst-case record in the header stays an upper bound per chunk
+    # (stream_overhead_bytes and replica validation rely on it)
+    assert opt.nbytes <= opt.header["record"] * opt.n_chunks
+    perm = opt.col_perm()
+    assert np.array_equal(np.sort(perm), np.arange(raw.header["n_cols"]))
+
+
+# -- engines -----------------------------------------------------------------
+def _engine_cfgs():
+    return [("serial", dict(overlap=False, use_async=False)),
+            ("overlapped", {}),
+            ("pallas", dict(use_pallas=True, pallas_variant="gather"))]
+
+
+def test_delta_only_bit_identical_float(raw_float, tmp_path):
+    """Without reordering the chunk layout and accumulation order are
+    untouched, so packing is bit-identical even for arbitrary float values
+    — on every engine."""
+    out = str(tmp_path / "delta")
+    TileStore.open(raw_float).optimize(out, reorder=False)
+    rng = np.random.default_rng(5)
+    n_cols = TileStore.open(raw_float).header["n_cols"]
+    x = rng.standard_normal((n_cols, 8)).astype(np.float32)
+    want = SEMSpMM(TileStore.open(raw_float),
+                   SEMConfig(chunk_batch=BATCH)).multiply(x)
+    for name, kw in _engine_cfgs():
+        got = SEMSpMM(TileStore.open(out),
+                      SEMConfig(chunk_batch=BATCH, **kw)).multiply(x)
+        np.testing.assert_array_equal(got, want, err_msg=name)
+
+
+@pytest.mark.parametrize("kind", ["bin", "int"])
+def test_reorder_pack_bit_identical_vs_oracle(kind, ct_bin, ct_int, opt_bin,
+                                              opt_int, xi):
+    """The full optimization (reorder + pack) against the chunked oracle on
+    the *original* matrix, integer arithmetic making the regrouped
+    accumulation exact — serial, overlapped and Pallas backends."""
+    ct, opt = (ct_bin, opt_bin) if kind == "bin" else (ct_int, opt_int)
+    want = np.asarray(spmm_chunked(ct, jnp.asarray(xi)))
+    for name, kw in _engine_cfgs():
+        got = SEMSpMM(TileStore.open(opt),
+                      SEMConfig(chunk_batch=BATCH, **kw)).multiply(xi)
+        np.testing.assert_array_equal(got, want, err_msg=f"{kind}/{name}")
+
+
+def test_sharded_optimized_with_cache(ct_int, opt_int, xi):
+    """2-way sharded scan over the packed store through a shared hot-chunk
+    cache: cold pass and cached pass both match the oracle."""
+    want = np.asarray(spmm_chunked(ct_int, jnp.asarray(xi)))
+    cache = HotChunkCache(1 << 26)
+    st = TileStore.open(opt_int)
+    with ShardedSEMSpMM(st, n_shards=2, config=SEMConfig(chunk_batch=BATCH),
+                        cache=cache) as sh:
+        np.testing.assert_array_equal(sh.multiply(xi), want)
+        np.testing.assert_array_equal(sh.multiply(xi), want)
+    assert cache.stats.hits > 0
+
+
+# -- cache keying across encodings (the PR 2 shard-offset lesson) ------------
+def test_shared_cache_raw_and_optimized(raw_int, tmp_path, xi, ct_int):
+    """One HotChunkCache serving a raw store and the delta-packed
+    re-encoding of the same matrix.  Without reordering the two stores
+    have identical chunk layouts, so with chunk_batch=1 every (start,
+    count, offset) triple collides — only the encoding signature in the
+    key keeps a u16 pin from being decoded as packed u8 deltas (the same
+    failure shape as PR 2's shard-frame meta corruption)."""
+    out = str(tmp_path / "delta")
+    TileStore.open(raw_int).optimize(out, reorder=False)
+    want = np.asarray(spmm_chunked(ct_int, jnp.asarray(xi)))
+    cache = HotChunkCache(1 << 30)
+    cfg = SEMConfig(chunk_batch=1)
+    raw_sem = SEMSpMM(TileStore.open(raw_int), cfg, cache=cache)
+    np.testing.assert_array_equal(raw_sem.multiply(xi), want)  # pins raw
+    opt_sem = SEMSpMM(TileStore.open(out), cfg, cache=cache)
+    np.testing.assert_array_equal(opt_sem.multiply(xi), want)
+    # and back: the packed pins must not poison a raw reader either
+    np.testing.assert_array_equal(
+        SEMSpMM(TileStore.open(raw_int), cfg, cache=cache).multiply(xi),
+        want)
+
+
+# -- the serving stack -------------------------------------------------------
+def test_elastic_midpass_on_optimized_store(opt_int, ct_int, xi):
+    """Mid-pass admission through the elastic scheduler on the packed
+    store: the delivered result is bit-identical to the oracle (stitching
+    across the admission boundary included)."""
+    want = np.asarray(spmm_chunked(ct_int, jnp.asarray(xi[:, 0:1])))[:, 0]
+    box = {"req": None}
+
+    def probe(sched, boundary):
+        if box["req"] is None and sched.boundary_clock >= 3:
+            box["req"] = sched.query(xi[:, 0], tenant_id="midpass")
+
+    sem = SEMSpMM(TileStore.open(opt_int), SEMConfig(chunk_batch=16))
+    sched = SharedScanScheduler(sem, use_cache=False, elastic=True,
+                                boundary_probe=probe)
+    rng = np.random.default_rng(11)
+    sched.submit(PowerIterationSession(
+        rng.standard_normal(sem.n_cols).astype(np.float32),
+        tol=0.0, max_iter=4))
+    sched.run()
+    assert box["req"] is not None and box["req"].done
+    np.testing.assert_array_equal(box["req"].result, want)
+
+
+# -- the property sweep ------------------------------------------------------
+def test_property_optimize_roundtrip_vs_oracle():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def cases(draw):
+        n = draw(st.integers(1, 120))
+        m = draw(st.integers(1, 120))
+        nnz = draw(st.integers(0, 300))
+        seed = draw(st.integers(0, 2 ** 31 - 1))
+        binary = draw(st.booleans())
+        reorder = draw(st.booleans())
+        pack = draw(st.booleans())
+        sharded = draw(st.booleans())
+        cached = draw(st.booleans())
+        rng = np.random.default_rng(seed)
+        rows = rng.integers(0, n, nnz)
+        cols = rng.integers(0, m, nnz)
+        vals = (None if binary
+                else rng.integers(-4, 5, nnz).astype(np.float32))
+        return (COO(n, m, rows, cols, vals).dedup(),
+                binary, reorder, pack, sharded, cached, seed)
+
+    @given(cases())
+    @settings(deadline=None, max_examples=25)
+    def run(case):
+        coo, binary, reorder, pack, sharded, cached, seed = case
+        ct = to_chunked(coo, T=32, C=16)
+        root = tempfile.mkdtemp(prefix="opt_prop_")
+        path = os.path.join(root, "g")
+        TileStore.write(path, ct, binary=binary)
+        TileStore.open(path).optimize(path + "_o", reorder=reorder,
+                                      pack=pack)
+        x = np.random.default_rng(seed ^ 1).integers(
+            -4, 5, (coo.n_cols, 3)).astype(np.float32)
+        want = np.asarray(spmm_chunked(ct, jnp.asarray(x)))
+        st_o = TileStore.open(path + "_o")
+        cfg = SEMConfig(chunk_batch=3)  # short batches -> padded tails
+        cache = HotChunkCache(1 << 24) if cached else None
+        if sharded and coo.nnz > 50:
+            with ShardedSEMSpMM(st_o, n_shards=2, config=cfg,
+                                cache=cache) as engine:
+                np.testing.assert_array_equal(engine.multiply(x), want)
+                np.testing.assert_array_equal(engine.multiply(x), want)
+        else:
+            engine = SEMSpMM(st_o, cfg, cache=cache)
+            np.testing.assert_array_equal(engine.multiply(x), want)
+            np.testing.assert_array_equal(engine.multiply(x), want)
+
+    run()

@@ -11,17 +11,25 @@ from benchmarks.check_regression import (compare, compare_cluster,  # noqa: E402
                                          compare_runtime, main)
 
 
-def summary(speedup=1.6, h2d=26.0):
+def summary(speedup=1.6, h2d=26.0, opt_shrink=0.35):
+    # every raw engine row ships with its optimized-store twin, shrunk by
+    # ``opt_shrink`` on both byte metrics (the gate's 25% floor is absolute)
+    rows = []
+    for t in ("page-cache", "emulated-ssd"):
+        for e in ("serial", "overlapped", "sharded-4"):
+            rows.append(
+                {"tier": t, "engine": e, "t_pass_ms": 100.0,
+                 "rows_per_s": 1e5, "mb_streamed_per_pass": 21.6,
+                 "h2d_mb_per_pass": h2d, "overlap_pct": 90.0, "passes": 5})
+            rows.append(dict(rows[-1], engine=e + "-opt",
+                             mb_streamed_per_pass=21.6 * (1 - opt_shrink),
+                             h2d_mb_per_pass=h2d * (1 - opt_shrink)))
     return {
         "p": 8,
-        "engines": [
-            {"tier": t, "engine": e, "t_pass_ms": 100.0, "rows_per_s": 1e5,
-             "mb_streamed_per_pass": 21.6, "h2d_mb_per_pass": h2d,
-             "overlap_pct": 90.0, "passes": 5}
-            for t in ("page-cache", "emulated-ssd")
-            for e in ("serial", "overlapped", "sharded-4")],
+        "engines": rows,
         "overlap_speedup_emulated": speedup,
         "h2d_index_saving_mb": 11.0,
+        "opt_store_shrink_pct": 40.0,
     }
 
 
@@ -71,7 +79,28 @@ def test_gate_trips_on_speedup_regression():
 def test_gate_trips_on_h2d_regression():
     problems = compare(summary(h2d=26.0 * 1.25), summary(), tolerance=0.2)
     assert problems and all("h2d bytes/pass" in p for p in problems)
-    assert len(problems) == 6  # every engine row regressed
+    assert len(problems) == 12  # every engine row (raw and -opt) regressed
+
+
+def test_gate_trips_when_opt_shrink_collapses():
+    # the floor is absolute in the fresh run: a 10% shrink fails even if
+    # the baseline had decayed to match
+    problems = compare(summary(opt_shrink=0.10), summary(opt_shrink=0.10),
+                       tolerance=0.2)
+    assert any("optimized store only cut" in p for p in problems)
+    # streamed bytes gate every engine; h2d exempts the host-decoded serial
+    streamed = [p for p in problems if "mb_streamed" in p]
+    h2d = [p for p in problems if "h2d_mb" in p]
+    assert len(streamed) == 6 and len(h2d) == 4
+    assert not any("serial" in p for p in h2d)
+
+
+def test_gate_requires_opt_rows():
+    fresh = summary()
+    fresh["engines"] = [e for e in fresh["engines"]
+                        if not e["engine"].endswith("-opt")]
+    problems = compare(fresh, summary(), tolerance=0.2)
+    assert any("no optimized-store rows" in p for p in problems)
 
 
 def test_gate_ignores_new_engine_variants():
