@@ -30,7 +30,10 @@ against the committed ``BENCH_runtime.json``:
 * (when the summaries carry a ``cluster`` section, written by the
   ``net_cluster`` bench) the 2-host/1-host cross-host speedup drops
   beyond tolerance or falls below the 1.5x acceptance floor, or the
-  kill-host-mid-pass failover lost a tenant / broke bit-identity.
+  kill-host-mid-pass failover lost a tenant / broke bit-identity;
+* the partitioned single-wide-query speedup (slabs on 2 hosts vs 1)
+  drops beyond tolerance or falls below the 1.4x acceptance floor, or
+  the kill-slab-host failover broke bit-identity / reassigned nothing.
 
 Comparisons are mode-matched (``full`` vs ``full``, ``quick`` vs
 ``quick``): quick-mode sizes are different, so cross-mode deltas are
@@ -44,9 +47,10 @@ import json
 import sys
 from typing import Dict, List
 
-FLEET_SPEEDUP_FLOOR = 1.3     # the acceptance bar on 2 emulated spindles
-CLUSTER_SPEEDUP_FLOOR = 1.5   # 2 localhost hosts vs 1, disjoint spindles
-OPT_SHRINK_FLOOR = 0.25       # optimized stores must cut streamed+h2d bytes
+FLEET_SPEEDUP_FLOOR = 1.3      # the acceptance bar on 2 emulated spindles
+CLUSTER_SPEEDUP_FLOOR = 1.5    # 2 localhost hosts vs 1, disjoint spindles
+PARTITIONED_SPEEDUP_FLOOR = 1.4  # one wide query, slabs on 2 vs 1 spindles
+OPT_SHRINK_FLOOR = 0.25        # optimized stores must cut streamed+h2d bytes
 
 
 def _load_mode(path: str, mode: str) -> Dict:
@@ -182,6 +186,35 @@ def compare_cluster(fresh: Dict, baseline: Dict,
         problems.append(
             f"kill-host phase exercised no failover path "
             f"(evicted={fo.get('evicted')}, resubmits={fo.get('resubmits')})")
+
+    pt_f = cl_f.get("partitioned")
+    if pt_f is None:
+        return problems + [
+            "fresh cluster summary has no 'partitioned' section — the "
+            "partitioned-query phases fell out of the net_cluster bench"]
+    ps_f = pt_f["hosts2_speedup_vs_1"]
+    pt_b = (cl_b or {}).get("partitioned")
+    if pt_b is not None:
+        ps_b = pt_b["hosts2_speedup_vs_1"]
+        if ps_f < ps_b * (1.0 - tolerance):
+            problems.append(
+                f"partitioned 2-host speedup regressed: {ps_f:.3f}x vs "
+                f"baseline {ps_b:.3f}x (floor {ps_b * (1 - tolerance):.3f}x)")
+    if ps_f < PARTITIONED_SPEEDUP_FLOOR:
+        problems.append(
+            f"partitioned 2-host speedup {ps_f:.3f}x is below the "
+            f"{PARTITIONED_SPEEDUP_FLOOR}x acceptance floor (one wide "
+            f"query, slabs on disjoint emulated spindles)")
+    pfo = pt_f["failover"]
+    if not pfo.get("bit_identical", False):
+        problems.append("partitioned failover result was not bit-identical "
+                        "to the lone in-process fleet")
+    if (pfo.get("resubmits", 0) < 1 or pfo.get("evicted", 0) < 1
+            or pfo.get("reassignments", 0) < 1):
+        problems.append(
+            f"kill-slab-host phase exercised no slab failover "
+            f"(evicted={pfo.get('evicted')}, resubmits={pfo.get('resubmits')},"
+            f" reassignments={pfo.get('reassignments')})")
     return problems
 
 

@@ -140,6 +140,24 @@ def write_net_json(rows, out_path=None, quick=False) -> str:
             "bit_identical": bool(fo["bit_identical"]),
         },
     }
+    part = {r["mode"]: r for r in rows
+            if r["workload"] == "cluster_partitioned"}
+    pfo = next((r for r in rows
+                if r["workload"] == "cluster_partitioned_failover"), None)
+    if part and pfo is not None:
+        p1, p2 = part["slabs-1"]["seconds"], part["slabs-2"]["seconds"]
+        summary["partitioned"] = {
+            "passes": part["slabs-1"]["passes"],
+            "hosts1_seconds": p1,
+            "hosts2_seconds": p2,
+            "hosts2_speedup_vs_1": p1 / p2,
+            "failover": {
+                "resubmits": pfo["resubmits"],
+                "reassignments": pfo["reassignments"],
+                "evicted": pfo["evicted"],
+                "bit_identical": bool(pfo["bit_identical"]),
+            },
+        }
     path = out_path or os.path.join(REPO_ROOT, "BENCH_runtime.json")
     merged = {}
     if os.path.exists(path):

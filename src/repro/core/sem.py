@@ -538,3 +538,16 @@ class SEMSpMM:
     @property
     def io_stats(self) -> IOStats:
         return self.store.stats
+
+    def close(self) -> None:
+        """Release the store's file mappings (and the IM-mode resident
+        batches).  Idempotent — the Executor protocol requires close() to
+        be safe from both an exception path and a normal exit."""
+        self._cached = None
+        self.store.close()
+
+    def __enter__(self) -> "SEMSpMM":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sem import SEMConfig, SEMSpMM
+from repro.core.sem import _CACHE_UNSET, SEMConfig, SEMSpMM
 from repro.io.storage import IOStats, TileStore, validate_replicas
 
 
@@ -129,9 +129,14 @@ class ShardedSEMSpMM:
     def n_shards(self) -> int:
         return len(self.execs)
 
-    def multiply(self, x: np.ndarray, *, boundary_hook=None) -> np.ndarray:
+    def multiply(self, x: np.ndarray, *, boundary_hook=None,
+                 cache=_CACHE_UNSET) -> np.ndarray:
         """A @ X as ``n_shards`` partial scans; the per-shard row blocks
         concatenate (in partition order) to the full result.
+
+        ``cache`` overrides each shard executor's attached hot-chunk cache
+        for this pass (``None`` = uncached), the same per-pass arbitration
+        knob :meth:`SEMSpMM.multiply` exposes.
 
         Without a ``boundary_hook`` every shard streams concurrently.  With
         one, the hook is threaded through the *coordinator shard* — shard
@@ -170,9 +175,18 @@ class ShardedSEMSpMM:
         # then takes the already-on-device skip path.
         x_dev = jnp.asarray(self.store.apply_col_perm(x_pad))
         self.execs[0].store.stats.add_h2d(x_dev.nbytes)
+
+        # Per-pass cache override, shard-partitioned like the attached one
+        # (a sharded cache hands each shard its own pin budget).
+        def shard_cache(i):
+            if cache is _CACHE_UNSET or not hasattr(cache, "shard"):
+                return cache
+            return cache.shard(i)
+
         if boundary_hook is None:
             blocks = list(self._pool.map(
-                lambda ex: ex.multiply(x_dev), self.execs))
+                lambda iex: iex[1].multiply(x_dev, cache=shard_cache(iex[0])),
+                enumerate(self.execs)))
         else:
             writes: List[tuple] = []
 
@@ -180,7 +194,8 @@ class ShardedSEMSpMM:
                 boundary_hook(_RecordingBoundary(b, writes))
 
             head = self.execs[0].multiply(x_dev,
-                                          boundary_hook=recording_hook)
+                                          boundary_hook=recording_hook,
+                                          cache=shard_cache(0))
             if writes:
                 x_host = np.array(x_pad)   # replay in write order
                 for c0, cols in writes:
@@ -191,9 +206,16 @@ class ShardedSEMSpMM:
                 x_dev = jnp.asarray(self.store.apply_col_perm(x_host))
                 self.execs[0].store.stats.add_h2d(x_dev.nbytes)
             blocks = [head] + list(self._pool.map(
-                lambda ex: ex.multiply(x_dev), self.execs[1:]))
+                lambda iex: iex[1].multiply(x_dev, cache=shard_cache(iex[0])),
+                enumerate(self.execs[1:], start=1)))
         self.passes += 1
         return np.concatenate(blocks, axis=0)
+
+    def column_bytes(self) -> int:
+        """Memory cost of one dense column (input slice + output slice) —
+        identical to the single-engine figure: shards share the operand and
+        their output blocks partition the same n rows."""
+        return 4 * (self.n_rows + self.padded_cols)
 
     # -- aggregated accounting (scheduler-facing) ----------------------------
     @property

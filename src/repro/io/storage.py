@@ -686,18 +686,15 @@ class TileStore:
         return meta0.astype(np.int64) - self.tile_row_offset
 
     # -- row sharding ---------------------------------------------------------
-    def partition_rows(self, n_shards: int) -> List["TileStore"]:
-        """Split into ``n_shards`` contiguous tile-row shard stores over the
-        *same* backing file (no data is rewritten).
-
-        Chunks are laid out in (tile_row, tile_col) order and every chunk
-        belongs to exactly one tile row, so a contiguous tile-row range is a
-        contiguous chunk range: each shard streams its own byte range and owns
-        its own stats/buffers (thread-safe parallel scans), and concatenating
-        the shards' row blocks reproduces the single-scan result bit for bit
-        (identical per-row accumulation order).  Ranges are balanced by nnz
-        (greedy contiguous split — the contiguity-constrained analogue of
-        ``core.partition.lpt_partition``)."""
+    def partition_row_bounds(self, n_shards: int) -> List[Tuple[int, int]]:
+        """Nnz-balanced contiguous tile-row slab boundaries ``[tr0, tr1)``,
+        one pair per shard (``n_shards`` is clamped to the tile-row count —
+        callers that need the realized slab count take ``len()`` of the
+        result).  A pure function of the header + chunk meta, so every
+        replica of the same matrix — including the per-host store copies of
+        a cluster partition plan — derives identical boundaries from its
+        own file.  The greedy cumulative-nnz split is the
+        contiguity-constrained analogue of ``core.partition.lpt_partition``."""
         h = self.header
         T = h["T"]
         n_tile_rows = -(-h["n_rows"] // T)
@@ -713,7 +710,7 @@ class TileStore:
                               minlength=n_tile_rows)
         cum = np.cumsum(row_nnz)
         total = float(cum[-1])
-        shards: List[TileStore] = []
+        bounds: List[Tuple[int, int]] = []
         tr0 = 0
         for s in range(n_shards):
             if s == n_shards - 1:
@@ -722,6 +719,30 @@ class TileStore:
                 tr1 = int(np.searchsorted(cum, total * (s + 1) / n_shards)) + 1
                 tr1 = max(tr1, tr0 + 1)
                 tr1 = min(tr1, n_tile_rows - (n_shards - 1 - s))
+            bounds.append((tr0, tr1))
+            tr0 = tr1
+        return bounds
+
+    def partition_rows(self, n_shards: int) -> List["TileStore"]:
+        """Split into ``n_shards`` contiguous tile-row shard stores over the
+        *same* backing file (no data is rewritten).
+
+        Chunks are laid out in (tile_row, tile_col) order and every chunk
+        belongs to exactly one tile row, so a contiguous tile-row range is a
+        contiguous chunk range: each shard streams its own byte range and owns
+        its own stats/buffers (thread-safe parallel scans), and concatenating
+        the shards' row blocks reproduces the single-scan result bit for bit
+        (identical per-row accumulation order).  Ranges are balanced by nnz
+        via :meth:`partition_row_bounds`."""
+        h = self.header
+        T = h["T"]
+        mm = self._memmap()
+        co = self.chunk_offset
+        off = self._offsets[co:co + self.n_chunks]
+        meta = mm[off[:, None] + np.arange(16)].view(np.int32)
+        trow = meta[:, 0].astype(np.int64) - self.tile_row_offset
+        shards: List[TileStore] = []
+        for tr0, tr1 in self.partition_row_bounds(n_shards):
             c0 = int(np.searchsorted(trow, tr0, side="left"))
             c1 = int(np.searchsorted(trow, tr1, side="left"))
             n_rows_shard = min(tr1 * T, h["n_rows"]) - tr0 * T
@@ -735,7 +756,6 @@ class TileStore:
                             row_offset=self.row_offset + tr0 * T,
                             tags=self._tags, offsets=self._offsets)
             shards.append(st)
-            tr0 = tr1
         return shards
 
 

@@ -1,7 +1,7 @@
 """Cross-host serving tier: wire protocol, per-host RPC servers, and the
 cluster front door (routing, budget arbitration, host-level failover)."""
 from repro.net.frontdoor import (ClusterError, ClusterFrontDoor,
-                                 ClusterTicket, HostHandle)
+                                 ClusterTicket, HostHandle, PartitionPlan)
 from repro.net.host import HostServer, build_host, open_stores
 from repro.net.wire import (DeadlineExpired, Heartbeater, RemoteError,
                             WireClient, WireError, WireServer, decode_frame,
@@ -9,7 +9,7 @@ from repro.net.wire import (DeadlineExpired, Heartbeater, RemoteError,
 
 __all__ = [
     "ClusterError", "ClusterFrontDoor", "ClusterTicket", "HostHandle",
-    "HostServer", "build_host", "open_stores",
+    "PartitionPlan", "HostServer", "build_host", "open_stores",
     "DeadlineExpired", "Heartbeater", "RemoteError", "WireClient",
     "WireError", "WireServer", "decode_frame", "encode_frame",
     "read_frame", "write_frame",

@@ -38,13 +38,16 @@ from __future__ import annotations
 
 import asyncio
 import itertools
+import queue
 import threading
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.io.storage import IOStats
 from repro.net.wire import Heartbeater, RemoteError, WireClient
+from repro.runtime.api import SubmitterClosed, Ticket
 from repro.runtime.session import SessionSpec
 
 
@@ -52,32 +55,50 @@ class ClusterError(RuntimeError):
     """No live host can serve a tenant (every host evicted)."""
 
 
-class ClusterTicket:
+class ClusterTicket(Ticket):
     """One tenant's claim on the cluster: the spec (kept for failover
     replay), where it currently runs, and the delivered result."""
 
     def __init__(self, spec: SessionSpec):
-        self.spec = spec
-        self.tenant_id = spec.tenant_id
+        super().__init__(spec=spec)
         self.host_key: Optional[str] = None
         self.resubmits = 0
-        self.iterations = 0
-        self.result: Optional[np.ndarray] = None
-        self.error: Optional[BaseException] = None
-        self._done = threading.Event()
+        # set for partitioned queries: the slab -> host assignment
+        self.plan: Optional["PartitionPlan"] = None
 
-    @property
-    def done(self) -> bool:
-        return self._done.is_set()
 
-    def wait(self, timeout: Optional[float] = None) -> np.ndarray:
-        """Block for the result; raises the failure if the cluster lost it."""
-        if not self._done.wait(timeout):
-            raise TimeoutError(f"tenant {self.tenant_id!r} not served "
-                               f"within {timeout}s")
-        if self.error is not None:
-            raise self.error
-        return self.result
+class PartitionPlan:
+    """Slab -> host assignment for one partitioned query.
+
+    Every live host registered at submit time gets one contiguous
+    nnz-balanced tile-row slab: slab ``k`` is
+    ``TileStore.partition_rows(n_slabs)[k]``, a pure function of the shared
+    store header + chunk meta, so each host derives identical slab
+    boundaries from its own copy of the matrix — the front door never ships
+    row ranges, only ``(slab, n_slabs)``.  On host death only the lost slab
+    is reassigned (to the least-backlogged survivor); completed slabs of
+    the same pass are untouched."""
+
+    def __init__(self, handles: List["HostHandle"]):
+        if not handles:
+            raise ClusterError("no live hosts to partition across")
+        self.n_slabs = len(handles)
+        self.assignment: Dict[int, HostHandle] = dict(enumerate(handles))
+        self.reassignments = 0
+
+    def host_for(self, slab: int) -> "HostHandle":
+        return self.assignment[slab]
+
+    def reassign(self, slab: int,
+                 survivors: List["HostHandle"]) -> "HostHandle":
+        live = [h for h in survivors if h.alive]
+        if not live:
+            raise ClusterError(
+                f"no live host to reassign slab {slab} to")
+        handle = min(live, key=HostHandle.backlog_estimate)
+        self.assignment[slab] = handle
+        self.reassignments += 1
+        return handle
 
 
 class HostHandle:
@@ -116,17 +137,23 @@ class ClusterFrontDoor:
     def __init__(self, *, memory_budget_bytes: Optional[int] = None,
                  heartbeat_interval: float = 0.2, miss_limit: int = 3,
                  deadline: float = 5.0, retries: int = 2,
-                 deliver_poll_s: float = 2.0):
+                 deliver_poll_s: float = 2.0, slab_deadline: float = 120.0,
+                 auth_token: Optional[str] = None):
         self.memory_budget_bytes = memory_budget_bytes
         self.heartbeat_interval = heartbeat_interval
         self.miss_limit = miss_limit
         self.deadline = deadline
         self.retries = retries
         self.deliver_poll_s = deliver_poll_s
+        self.slab_deadline = slab_deadline
+        self.auth_token = auth_token
         self.hosts: Dict[str, HostHandle] = {}
         self.evicted: List[str] = []
+        self.tickets: List[ClusterTicket] = []
         self._ids = itertools.count(1)
         self._closed = False
+        self._delivered: queue.Queue = queue.Queue()
+        self._ptasks: List[asyncio.Task] = []
         self._started = threading.Event()
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread = threading.Thread(target=self._run_loop, daemon=True,
@@ -142,12 +169,15 @@ class ClusterFrontDoor:
         self._stop = asyncio.Event()
         self._started.set()
         loop.run_until_complete(self._stop.wait())
-        # cancel host tasks before the loop dies
+        # cancel host tasks and partitioned pass loops before the loop dies
         for h in self.hosts.values():
             for t in h.tasks:
                 t.cancel()
+        for t in self._ptasks:
+            t.cancel()
         loop.run_until_complete(asyncio.gather(
             *(t for h in self.hosts.values() for t in h.tasks),
+            *self._ptasks,
             return_exceptions=True))
         loop.run_until_complete(asyncio.gather(
             *(h.client.close() for h in self.hosts.values()),
@@ -167,7 +197,8 @@ class ClusterFrontDoor:
 
     async def _add_host(self, key: str, host: str, port: int) -> str:
         client = WireClient(host, port, deadline=self.deadline,
-                            retries=self.retries)
+                            retries=self.retries,
+                            auth_token=self.auth_token)
         handle = HostHandle(key, host, port, client)
         # first contact synchronously: a dead address fails registration
         # instead of being silently evicted later
@@ -221,7 +252,7 @@ class ClusterFrontDoor:
                 continue               # replayed elsewhere already
             ticket.iterations = int(header.get("iterations", 0))
             ticket.result = planes[0] if planes else None
-            ticket._done.set()
+            ticket._complete()
             await self._push_budget()
 
     # -- eviction + failover -------------------------------------------------
@@ -248,7 +279,7 @@ class ClusterFrontDoor:
                 await self._submit(ticket)
             except ClusterError as e:
                 ticket.error = e
-                ticket._done.set()
+                ticket._complete()
         if orphans:
             await self._push_budget()
 
@@ -256,19 +287,106 @@ class ClusterFrontDoor:
         return [h for h in self.hosts.values() if h.alive]
 
     # -- submission ----------------------------------------------------------
-    def submit(self, spec: SessionSpec) -> ClusterTicket:
-        """Route a session spec to the least-backlogged live host."""
+    def submit(self, spec: SessionSpec, *,
+               partitioned: bool = False) -> ClusterTicket:
+        """Route a session spec to the least-backlogged live host.
+
+        ``partitioned=True`` instead spans the query across *every* live
+        host: a :class:`PartitionPlan` assigns each one a contiguous
+        nnz-balanced tile-row slab, each pass broadcasts the operand once
+        per host (the ``slab`` RPC's ndarray planes), the slab scans run
+        concurrently, and the front door concatenates the slab outputs in
+        tile-row order — bit-identical to a single-host run, because slab
+        outputs are disjoint row ranges.  Iterative sessions live *here*
+        (the session consumes the stitched product and the next iterate is
+        re-broadcast each pass); host death mid-slab reassigns only the
+        lost slab to a survivor."""
         if self._closed:
-            raise RuntimeError("front door is closed")
+            raise SubmitterClosed("front door is closed")
         if not spec.tenant_id:
             spec.tenant_id = f"tenant-{next(self._ids)}"
         ticket = ClusterTicket(spec)
-        self._call(self._submit_and_budget(ticket))
+        ticket.add_done_callback(self._delivered.put)
+        self.tickets.append(ticket)
+        if partitioned:
+            self._call(self._start_partitioned(ticket))
+        else:
+            self._call(self._submit_and_budget(ticket))
         return ticket
 
     async def _submit_and_budget(self, ticket: ClusterTicket) -> None:
         await self._submit(ticket)
         await self._push_budget()
+
+    # -- partitioned queries -------------------------------------------------
+    async def _start_partitioned(self, ticket: ClusterTicket) -> None:
+        ticket.plan = PartitionPlan(self._live_hosts())
+        task = asyncio.ensure_future(self._run_partitioned(ticket))
+        self._ptasks.append(task)
+
+    async def _run_partitioned(self, ticket: ClusterTicket) -> None:
+        """Drive one partitioned session to retirement: per pass, broadcast
+        the current operand to every slab host concurrently, stitch the
+        returned row blocks in slab (= tile-row) order, and advance the
+        session.  The session object lives here at the front door — hosts
+        only ever see stateless one-pass slab multiplies."""
+        plan = ticket.plan
+        try:
+            session = ticket.spec.build()
+            ticket.session = session
+            pass_no = 0
+            while not session.done:
+                x = np.ascontiguousarray(
+                    np.asarray(session.x_columns(), np.float32))
+                if x.ndim == 1:
+                    x = x[:, None]
+                blocks = await asyncio.gather(*(
+                    self._slab_scan(ticket, plan, slab, x, pass_no)
+                    for slab in range(plan.n_slabs)))
+                session.consume(np.concatenate(blocks, axis=0))
+                pass_no += 1
+            ticket.iterations = session.iterations
+            ticket.result = session.result
+        except asyncio.CancelledError:
+            ticket.error = ClusterError(
+                f"front door closed before partitioned tenant "
+                f"{ticket.tenant_id!r} finished")
+            ticket._complete()
+            raise
+        except Exception as e:  # noqa: BLE001 — surfaced via ticket.wait()
+            ticket.error = e
+        ticket._complete()
+
+    async def _slab_scan(self, ticket: ClusterTicket, plan: PartitionPlan,
+                         slab: int, x: np.ndarray,
+                         pass_no: int) -> np.ndarray:
+        """One slab's share of one pass, with slab-level failover: a
+        connection failure evicts the host (standard eviction path — its
+        *whole-query* tenants resubmit too) and retries the same slab on
+        the least-backlogged survivor.  A ``RemoteError`` is a rejection
+        (the host parsed the spec and said no) and is not retried."""
+        spec = SessionSpec.multiply(
+            x, tenant_id=f"{ticket.tenant_id}/p{pass_no}"
+        ).with_slab(slab, plan.n_slabs)
+        header, planes = spec.to_wire()
+        while True:
+            handle = plan.host_for(slab)
+            if not handle.alive:
+                handle = plan.reassign(slab, self._live_hosts())
+                ticket.resubmits += 1
+            try:
+                _, rplanes = await handle.client.call(
+                    "slab", {"spec": header}, planes,
+                    deadline=self.slab_deadline)
+            except RemoteError:
+                raise
+            except Exception as e:  # noqa: BLE001 — connection-level loss
+                self._on_loss(handle, e)
+                continue
+            if not rplanes:
+                raise ClusterError(
+                    f"slab {slab} reply from {handle.key} carried no plane")
+            return rplanes[0]
 
     async def _submit(self, ticket: ClusterTicket) -> None:
         spec = ticket.spec
@@ -319,19 +437,52 @@ class ClusterFrontDoor:
                 except Exception as e:  # noqa: BLE001
                     self._on_loss(h, e)
 
-    # -- drain / close -------------------------------------------------------
-    def drain(self, tickets: List[ClusterTicket],
-              timeout: Optional[float] = None) -> List[np.ndarray]:
-        """Block until every ticket is served (through however many
-        failovers it takes); returns their results in order."""
-        import time as _time
-        deadline = None if timeout is None else _time.monotonic() + timeout
+    # -- deliver / drain / close ---------------------------------------------
+    def deliver(self, timeout: Optional[float] = None
+                ) -> Optional[ClusterTicket]:
+        """Next completed ticket (any tenant, any host, partitioned or
+        not); blocks up to ``timeout`` (None = wait indefinitely).  Returns
+        None if nothing completes within the timeout."""
+        try:
+            return self._delivered.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def drain(self, tickets=None,
+              timeout: Optional[float] = None) -> Optional[List[np.ndarray]]:
+        """Block until tickets are served (through however many failovers
+        it takes).  The protocol form ``drain(timeout=...)`` waits on every
+        ticket ever submitted and returns None; the legacy form
+        ``drain([tickets], timeout)`` returns those tickets' results in
+        order (a ticket that failed re-raises its error)."""
+        if isinstance(tickets, (int, float)) and timeout is None:
+            tickets, timeout = None, float(tickets)
+        explicit = tickets is not None
+        waitlist = list(self.tickets) if tickets is None else list(tickets)
+        deadline = None if timeout is None else time.monotonic() + timeout
         out = []
-        for t in tickets:
+        for t in waitlist:
             left = (None if deadline is None
-                    else max(0.0, deadline - _time.monotonic()))
+                    else max(0.0, deadline - time.monotonic()))
             out.append(t.wait(left))
-        return out
+        return out if explicit else None
+
+    def stats(self) -> dict:
+        """Cluster gauges: live host count, summed last-beat backlog (plus
+        columns submitted since), in-flight tenants, and the merged
+        cluster-wide I/O counters."""
+        live = self._live_hosts()
+        return {
+            "hosts": len(live),
+            "evicted": len(self.evicted),
+            "backlog_cols": sum(int(h.gauges.get("backlog_cols", 0))
+                                + h.local_cols for h in live),
+            "pending_sessions": sum(len(h.inflight) for h in live),
+            "partitioned_inflight": sum(
+                1 for t in self.tickets
+                if t.plan is not None and not t.done),
+            "io_stats": self.cluster_io_stats().to_dict(),
+        }
 
     def close(self) -> None:
         """Stop heartbeats and deliver streams, close the connections, kill

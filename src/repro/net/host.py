@@ -48,11 +48,12 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.io.storage import TileStore
+from repro.io.storage import IOStats, TileStore
 from repro.net.wire import WireServer
+from repro.runtime.api import Ticket
 from repro.runtime.fleet import ServingFleet, WaveError
 from repro.runtime.replica import ReplicaSet
-from repro.runtime.session import Session, SessionSpec
+from repro.runtime.session import SessionSpec
 
 
 class HostServer:
@@ -61,12 +62,28 @@ class HostServer:
     The caller owns fleet construction (stores, waves, capacity); the
     server owns the loop thread, the wire endpoint, and the retire->deliver
     stream.  ``stop()`` closes the endpoint and the fleet; the context
-    manager form pairs ``start``/``stop``."""
+    manager form pairs ``start``/``stop``.
+
+    ``auth_token`` (optional) arms the wire handshake: every connection
+    must open with the shared-secret preamble or it is dropped before any
+    frame is parsed.  ``host`` is the bind address — ``127.0.0.1`` keeps
+    the endpoint loopback-only; bind ``0.0.0.0`` (with a token) to serve a
+    real network.
+
+    The ``slab`` RPC serves one tile-row slab of a *partitioned* cross-host
+    query: the spec arrives slab-scoped (``SessionSpec.with_slab``), the
+    host lazily opens ``TileStore.partition_rows(n_slabs)[slab]`` over its
+    own store copies (a ReplicaSet sharing the fleet's SEMConfig, so the
+    cluster budget RPC governs slab scans too), runs the one-pass multiply
+    off-loop, and returns the slab's output rows as a plane.  Slab scans
+    hold no per-session state — iterative partitioned sessions advance at
+    the front door, which re-broadcasts the next iterate each pass."""
 
     def __init__(self, fleet: ServingFleet, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, *, auth_token: Optional[str] = None):
         self.fleet = fleet
-        self._wire = WireServer(self._handle, host, port)
+        self._wire = WireServer(self._handle, host, port,
+                                auth_token=auth_token)
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
         self._finished: Optional[asyncio.Queue] = None
@@ -75,6 +92,9 @@ class HostServer:
         self.port: Optional[int] = None
         self.submitted = 0
         self.delivered = 0
+        self.slab_scans = 0
+        self._slabs: dict = {}          # (n_slabs, slab) -> ReplicaSet
+        self._slab_lock = threading.Lock()
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> int:
@@ -115,6 +135,10 @@ class HostServer:
             self._thread.join(timeout=10)
             self._thread = None
         self.fleet.close()
+        with self._slab_lock:
+            slabs, self._slabs = list(self._slabs.values()), {}
+        for ex in slabs:
+            ex.close()
 
     def __enter__(self) -> "HostServer":
         self.start()
@@ -124,34 +148,92 @@ class HostServer:
         self.stop()
 
     # -- the retire -> deliver stream ----------------------------------------
-    def _on_retire(self, session: Session) -> None:
+    def _on_ticket_done(self, ticket: Ticket) -> None:
         # wave thread -> loop thread; the queue is loop-owned
-        self._loop.call_soon_threadsafe(self._finished.put_nowait, session)
+        self._loop.call_soon_threadsafe(self._finished.put_nowait, ticket)
+
+    # -- partitioned slab executors ------------------------------------------
+    def _slab_executor(self, n_slabs: int, slab: int) -> ReplicaSet:
+        """Lazily open the slab's shard of every store copy as a ReplicaSet.
+        The partition is a pure function of the shared header + meta, so
+        slab ``k`` here covers exactly the tile rows the front door's plan
+        assigned — regardless of which copy serves it.  Shares the fleet's
+        SEMConfig (the cluster ``budget`` RPC repartitions slab scans too)
+        and keeps a throttled store's read path (``partition_rows`` builds
+        ``type(self)`` shards): a slab scan sleeps for the slab's bytes."""
+        key = (int(n_slabs), int(slab))
+        with self._slab_lock:
+            ex = self._slabs.get(key)
+            if ex is None:
+                stores = [e.store for e in self.fleet.replicas.execs]
+                shards = [s.partition_rows(key[0]) for s in stores]
+                if key[1] >= len(shards[0]):
+                    raise ValueError(
+                        f"slab {key[1]} out of range: store partitions "
+                        f"into {len(shards[0])} slabs (asked {key[0]})")
+                ex = ReplicaSet([sh[key[1]] for sh in shards],
+                                config=self.fleet.replicas.cfg)
+                self._slabs[key] = ex
+            return ex
+
+    def _slab_multiply(self, spec: SessionSpec) -> np.ndarray:
+        ex = self._slab_executor(spec.n_slabs, spec.slab)
+        x = spec.arrays["x"]
+        if x.ndim == 1:
+            x = x[:, None]
+        return ex.multiply(x)
 
     # -- RPC dispatch --------------------------------------------------------
     async def _handle(self, op: str, header: dict,
                       planes: List[np.ndarray]
                       ) -> Tuple[dict, List[np.ndarray]]:
         if op == "ping" or op == "stats":
-            return dict(self.fleet.stats()), []
+            stats = dict(self.fleet.stats())
+            with self._slab_lock:
+                slabs = list(self._slabs.values())
+            if slabs:
+                # fold slab-scan I/O into the heartbeat gauges: slab shards
+                # are their own store views with their own counters
+                agg = IOStats.from_dict(stats["io_stats"])
+                for ex in slabs:
+                    agg.merge(ex.io_stats)
+                stats["io_stats"] = agg.to_dict()
+            stats["slab_scans"] = self.slab_scans
+            return stats, []
         if op == "submit":
             spec = SessionSpec.from_wire(header["spec"], planes)
-            session = spec.build()
-            session.on_retire = self._on_retire
-            self.fleet.submit(session)
+            ticket = self.fleet.submit(spec)
+            ticket.add_done_callback(self._on_ticket_done)
             self.submitted += 1
-            return {"tenant_id": session.tenant_id}, []
+            return {"tenant_id": ticket.tenant_id}, []
         if op == "deliver":
             timeout = float(header.get("timeout", 30.0))
             try:
-                session = await asyncio.wait_for(self._finished.get(),
-                                                 timeout)
+                ticket = await asyncio.wait_for(self._finished.get(),
+                                                timeout)
             except asyncio.TimeoutError:
                 return {"empty": True}, []
             self.delivered += 1
-            return ({"tenant_id": session.tenant_id,
-                     "iterations": session.iterations},
-                    [np.ascontiguousarray(session.result)])
+            return ({"tenant_id": ticket.tenant_id,
+                     "iterations": ticket.iterations},
+                    [np.ascontiguousarray(ticket.result)])
+        if op == "slab":
+            spec = SessionSpec.from_wire(header["spec"], planes)
+            if spec.slab is None or spec.n_slabs is None:
+                raise ValueError("slab op requires a slab-scoped spec")
+            if spec.kind != "multiply":
+                raise ValueError(
+                    f"slab op serves one-pass multiplies, not "
+                    f"{spec.kind!r} (iterative partitioned sessions "
+                    f"advance at the front door)")
+            # off-loop: a slab scan takes real I/O time and must not stall
+            # this connection's heartbeats
+            y = await asyncio.get_event_loop().run_in_executor(
+                None, self._slab_multiply, spec)
+            self.slab_scans += 1
+            return ({"tenant_id": spec.tenant_id, "slab": int(spec.slab),
+                     "rows": int(y.shape[0])},
+                    [np.ascontiguousarray(y)])
         if op == "drain":
             timeout = header.get("timeout")
             try:
@@ -231,12 +313,13 @@ def build_host(store_paths: Sequence[str], *, waves: int = 2,
                capacity: Optional[int] = None,
                throttle_pass_seconds: Optional[float] = None,
                use_cache: bool = True,
-               host: str = "127.0.0.1", port: int = 0) -> HostServer:
+               host: str = "127.0.0.1", port: int = 0,
+               auth_token: Optional[str] = None) -> HostServer:
     """Stores -> ReplicaSet -> ServingFleet -> HostServer, unstarted."""
     stores = open_stores(store_paths, throttle_pass_seconds)
     fleet = ServingFleet(ReplicaSet(stores), n_waves=waves,
                          capacity=capacity, use_cache=use_cache)
-    return HostServer(fleet, host=host, port=port)
+    return HostServer(fleet, host=host, port=port, auth_token=auth_token)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -244,6 +327,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         description="Serve one SEM host's fleet over the wire protocol")
     ap.add_argument("--store", action="append", required=True,
                     help="TileStore path (repeat for replica copies)")
+    ap.add_argument("--bind", default="127.0.0.1",
+                    help="bind address (default loopback-only; use 0.0.0.0 "
+                         "to serve a real network — pair with --auth-token)")
     ap.add_argument("--port", type=int, default=0)
     ap.add_argument("--waves", type=int, default=2)
     ap.add_argument("--capacity", type=int, default=None)
@@ -252,10 +338,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the hot-chunk cache (the spindle-bound "
                          "bench regime: every pass streams the slow tier)")
+    ap.add_argument("--auth-token", default=None,
+                    help="shared secret: connections must open with the "
+                         "matching wire-handshake preamble or are dropped "
+                         "before any frame is parsed")
     args = ap.parse_args(argv)
     server = build_host(args.store, waves=args.waves, capacity=args.capacity,
                         throttle_pass_seconds=args.throttle_pass_seconds,
-                        use_cache=not args.no_cache, port=args.port)
+                        use_cache=not args.no_cache, host=args.bind,
+                        port=args.port, auth_token=args.auth_token)
     port = server.start()
     # the parent process scrapes this line for the bound port
     print(f"LISTENING {port}", flush=True)

@@ -42,6 +42,8 @@ needs:
 from __future__ import annotations
 
 import asyncio
+import hashlib
+import hmac
 import itertools
 import json
 import struct
@@ -53,6 +55,20 @@ MAGIC = 0x53_45_4D_52            # "SEMR"
 _PREFIX = struct.Struct("<IIQ")  # magic, header_len, body_len
 MAX_HEADER = 1 << 24             # 16 MB of JSON is already a bug
 MAX_BODY = 1 << 34               # 16 GB per frame; beyond it, stream planes
+
+# Optional shared-secret handshake: a connection to an authenticated server
+# must open with this fixed-size preamble — a distinct magic plus the
+# sha256 of the shared token — before any frame.  The server verifies it
+# with a constant-time compare and hangs up on mismatch *before* any frame
+# (and hence any JSON) is parsed; a tokenless client's first frame starts
+# with MAGIC, which fails the preamble check the same way.  Both sides must
+# agree on whether a token is in use.
+AUTH_MAGIC = 0x53_45_4D_41       # "SEMA"
+_AUTH = struct.Struct("<I32s")   # auth magic, sha256(token)
+
+
+def _token_digest(token: str) -> bytes:
+    return hashlib.sha256(token.encode()).digest()
 
 Frame = Tuple[dict, List[np.ndarray]]
 
@@ -187,11 +203,13 @@ class WireClient:
     def __init__(self, host: str, port: int, *, deadline: float = 5.0,
                  retries: int = 2, backoff0: float = 0.05,
                  backoff_cap: float = 2.0,
-                 trace: Optional[Callable[[str, object], None]] = None):
+                 trace: Optional[Callable[[str, object], None]] = None,
+                 auth_token: Optional[str] = None):
         self.host, self.port = host, port
         self.deadline = deadline
         self.retries = retries
         self.backoff0, self.backoff_cap = backoff0, backoff_cap
+        self.auth_token = auth_token
         self.trace = trace or (lambda event, detail: None)
         self._ids = itertools.count(1)
         self._pending: Dict[int, asyncio.Future] = {}
@@ -207,6 +225,10 @@ class WireClient:
         if self._writer is not None:
             return
         reader, writer = await asyncio.open_connection(self.host, self.port)
+        if self.auth_token is not None:
+            writer.write(_AUTH.pack(AUTH_MAGIC,
+                                    _token_digest(self.auth_token)))
+            await writer.drain()
         self._writer = writer
         self._reader_task = asyncio.ensure_future(self._read_loop(reader))
 
@@ -303,9 +325,12 @@ class WireServer:
     exceptions become ``ok: false`` responses; a malformed frame kills just
     that connection."""
 
-    def __init__(self, handler, host: str = "127.0.0.1", port: int = 0):
+    def __init__(self, handler, host: str = "127.0.0.1", port: int = 0,
+                 *, auth_token: Optional[str] = None):
         self.handler = handler
         self.host, self.port = host, port
+        self.auth_token = auth_token
+        self.rejected_connections = 0
         self._server: Optional[asyncio.base_events.Server] = None
 
     async def start(self) -> int:
@@ -320,8 +345,25 @@ class WireServer:
             await self._server.wait_closed()
             self._server = None
 
+    async def _authenticate(self, reader: asyncio.StreamReader) -> bool:
+        """Consume and verify the connection preamble.  Runs before any
+        frame is read, so an unauthenticated peer is rejected before a
+        single byte of its JSON is parsed."""
+        try:
+            preamble = await reader.readexactly(_AUTH.size)
+        except (asyncio.IncompleteReadError, OSError):
+            return False
+        magic, digest = _AUTH.unpack(preamble)
+        return magic == AUTH_MAGIC and hmac.compare_digest(
+            digest, _token_digest(self.auth_token))
+
     async def _serve_connection(self, reader: asyncio.StreamReader,
                                 writer: asyncio.StreamWriter) -> None:
+        if self.auth_token is not None:
+            if not await self._authenticate(reader):
+                self.rejected_connections += 1
+                writer.close()
+                return
         wlock = asyncio.Lock()
         tasks = set()
         try:

@@ -12,6 +12,8 @@ traffic outgrows one wave, a ServingFleet (fleet) runs N elastic waves
 concurrently over one ReplicaSet with a least-backlog front-door
 dispatcher and cross-wave arbitration of the column + hot-chunk budgets.
 """
+from repro.runtime.api import (CACHE_UNSET, Executor, Submitter,
+                               SubmitterClosed, Ticket)
 from repro.runtime.batcher import Batcher, Wave, WaveEntry
 from repro.runtime.cache import (CacheStats, HotChunkCache,
                                  PartitionedHotChunkCache)
@@ -25,6 +27,7 @@ from repro.runtime.session import (SESSION_KINDS, BFSSession,
                                    Session, SessionSpec)
 
 __all__ = [
+    "CACHE_UNSET", "Executor", "Submitter", "SubmitterClosed", "Ticket",
     "Batcher", "Wave", "WaveEntry", "CacheStats", "HotChunkCache",
     "PartitionedHotChunkCache", "FleetWave", "ServingFleet", "WaveError",
     "ReplicaRouter", "ReplicaSet", "ReplicaState",

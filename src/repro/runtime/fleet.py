@@ -49,6 +49,7 @@ scheduler (``tests/test_fleet.py`` pins this down).
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
 from typing import List, Optional
@@ -57,9 +58,10 @@ import numpy as np
 
 from repro.core.sem import _CACHE_UNSET
 from repro.io.storage import IOStats
+from repro.runtime.api import SubmitterClosed, Ticket, spec_ticket
 from repro.runtime.cache import PartitionedHotChunkCache
 from repro.runtime.scheduler import SharedScanScheduler
-from repro.runtime.session import MultiplyRequest, Session
+from repro.runtime.session import MultiplyRequest, Session, SessionSpec
 
 
 class WaveError(RuntimeError):
@@ -284,6 +286,7 @@ class ServingFleet:
         self._arb_lock = threading.Lock()
         self._wave_cols = [0] * n_waves
         self._closed = False
+        self._delivered: queue.Queue = queue.Queue()
         self.cache = (PartitionedHotChunkCache(n_waves) if use_cache
                       and getattr(replicas, "mode", "sem") == "sem" else None)
         self.waves: List[FleetWave] = [
@@ -320,13 +323,30 @@ class ServingFleet:
             self._wave_cols[wave_id] = cols
 
     # -- front door ----------------------------------------------------------
-    def submit(self, session: Session) -> Session:
-        """Route a session to the wave with the least estimated backlog."""
+    def submit(self, session):
+        """Route work to the wave with the least estimated backlog.  The
+        unified form takes a :class:`~repro.runtime.session.SessionSpec`
+        and returns a :class:`~repro.runtime.api.Ticket` (stream completions
+        with :meth:`deliver`); passing a live :class:`Session` is the
+        deprecated pre-protocol form and still returns the session."""
         if self._closed:
-            raise RuntimeError("fleet is closed")
+            raise SubmitterClosed("fleet is closed")
         self._raise_wave_errors()
         wave = min(self.waves, key=lambda w: w.backlog_estimate())
+        if isinstance(session, SessionSpec):
+            live, ticket = spec_ticket(session, self._delivered)
+            wave.submit(live)
+            return ticket
         return wave.submit(session)
+
+    def deliver(self, timeout: Optional[float] = None) -> Optional[Ticket]:
+        """Next completed spec-submitted ticket; blocks up to ``timeout``
+        (None = wait indefinitely — the waves serve on their own threads).
+        Returns None if nothing completes within the timeout."""
+        try:
+            return self._delivered.get(timeout=timeout)
+        except queue.Empty:
+            return None
 
     def query(self, x: np.ndarray, tenant_id: str = "") -> MultiplyRequest:
         """Convenience: enqueue a one-shot A @ x request."""

@@ -61,15 +61,17 @@ admission (``tests/test_elastic.py``).
 from __future__ import annotations
 
 import dataclasses
+import queue
 import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.sem import SEMSpMM
+from repro.runtime.api import SubmitterClosed, Ticket, spec_ticket
 from repro.runtime.batcher import Batcher, Wave
 from repro.runtime.cache import HotChunkCache, PartitionedHotChunkCache
-from repro.runtime.session import MultiplyRequest, Session
+from repro.runtime.session import MultiplyRequest, Session, SessionSpec
 
 
 @dataclasses.dataclass
@@ -167,9 +169,13 @@ class SharedScanScheduler:
                                           config=sem.cfg, cache=self.cache,
                                           replicas=extra)
         self.reports: List[PassReport] = []
+        self._closed = False
+        self._delivered: queue.Queue = queue.Queue()
 
     def close(self) -> None:
-        """Release the sharded executor's scan threads (no-op unsharded)."""
+        """Release the sharded executor's scan threads (no-op unsharded).
+        Idempotent; further ``submit`` calls raise :class:`SubmitterClosed`."""
+        self._closed = True
         if self.sharded is not None:
             self.sharded.close()
 
@@ -180,7 +186,21 @@ class SharedScanScheduler:
         self.close()
 
     # -- submission ----------------------------------------------------------
-    def submit(self, session: Session) -> Session:
+    def submit(self, session):
+        """Enqueue work.  The unified form takes a
+        :class:`~repro.runtime.session.SessionSpec` and returns a
+        :class:`~repro.runtime.api.Ticket`; passing a live :class:`Session`
+        is the deprecated pre-protocol form (kept as a thin shim — it still
+        returns the session itself)."""
+        if self._closed:
+            raise SubmitterClosed("scheduler is closed")
+        if isinstance(session, SessionSpec):
+            live, ticket = spec_ticket(session, self._delivered)
+            self._submit_session(live)
+            return ticket
+        return self._submit_session(session)
+
+    def _submit_session(self, session: Session) -> Session:
         session.t_submit = time.monotonic()
         session.submit_clock = self.boundary_clock
         return self.batcher.submit(session)
@@ -307,6 +327,45 @@ class SharedScanScheduler:
                 break
             done.append(rep)
         return done
+
+    # -- Submitter protocol --------------------------------------------------
+    def deliver(self, timeout: Optional[float] = None) -> Optional[Ticket]:
+        """Next completed spec-submitted ticket.  A lone scheduler has no
+        serving thread, so deliver() drives passes itself until a ticket
+        retires; it returns None once the backlog is empty (or the deadline
+        lapses with nothing retiring)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            try:
+                return self._delivered.get_nowait()
+            except queue.Empty:
+                pass
+            if self.run_pass() is None:
+                return None
+            if deadline is not None and time.monotonic() > deadline:
+                return None
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Serve passes until every submitted session has retired."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while not self.idle:
+            if self.run_pass() is None:
+                break
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"scheduler backlog not drained within {timeout}s")
+
+    def stats(self) -> dict:
+        """Point-in-time serving gauges (the Submitter-protocol slice of the
+        per-pass :class:`PassReport` accounting)."""
+        op = self.sharded if self.sharded is not None else self.sem
+        return {
+            "backlog_cols": (sum(s.width for s in self.active)
+                             + self.batcher.pending_columns()),
+            "pending_sessions": len(self.active) + self.batcher.pending,
+            "scan_passes": self.total_scan_passes(),
+            "io_stats": op.io_stats.to_dict(),
+        }
 
     # -- elastic mode --------------------------------------------------------
     def _resolve_capacity(self, demand: int) -> int:

@@ -316,6 +316,19 @@ class SessionSpec:
     tenant_id: str = ""
     params: Dict[str, object] = dataclasses.field(default_factory=dict)
     arrays: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # Slab scoping for partitioned cross-host queries: a slab-scoped spec
+    # asks the serving host to run this work against tile-row slab ``slab``
+    # of ``TileStore.partition_rows(n_slabs)`` instead of the full operator.
+    # Both are None for ordinary whole-matrix sessions.
+    slab: Optional[int] = None
+    n_slabs: Optional[int] = None
+
+    def with_slab(self, slab: int, n_slabs: int) -> "SessionSpec":
+        """Copy of this spec scoped to one tile-row slab of the cluster
+        partition plan.  The split is a pure function of the shared store
+        header + meta, so every host derives identical slab boundaries from
+        its own copy of the matrix."""
+        return dataclasses.replace(self, slab=int(slab), n_slabs=int(n_slabs))
 
     def build(self) -> Session:
         if self.kind not in SESSION_KINDS:
@@ -329,6 +342,9 @@ class SessionSpec:
         names = sorted(self.arrays)
         header = {"kind": self.kind, "tenant_id": self.tenant_id,
                   "params": dict(self.params), "arrays": names}
+        if self.slab is not None:
+            header["slab"] = int(self.slab)
+            header["n_slabs"] = int(self.n_slabs)
         return header, [self.arrays[n] for n in names]
 
     @classmethod
@@ -338,9 +354,13 @@ class SessionSpec:
         if len(names) != len(planes):
             raise ValueError(
                 f"spec names {len(names)} planes {len(planes)} mismatch")
+        slab = header.get("slab")
+        n_slabs = header.get("n_slabs")
         return cls(kind=header["kind"], tenant_id=header.get("tenant_id", ""),
                    params=dict(header.get("params", {})),
-                   arrays=dict(zip(names, planes)))
+                   arrays=dict(zip(names, planes)),
+                   slab=None if slab is None else int(slab),
+                   n_slabs=None if n_slabs is None else int(n_slabs))
 
     # -- convenience constructors -------------------------------------------
     @classmethod

@@ -1,0 +1,272 @@
+"""Conformance suite for the unified runtime API: every executor layer
+(SEMSpMM, ShardedSEMSpMM, ReplicaSet) satisfies the Executor protocol with
+bit-identical multiplies, and every submission layer (SharedScanScheduler,
+ServingFleet, ClusterFrontDoor) satisfies the Submitter protocol — specs
+in, tickets out, uniform deliver/drain/stats, idempotent close, and a
+uniform SubmitterClosed on submit-after-close."""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.formats import to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.distributed.shard_scan import ShardedSEMSpMM
+from repro.io.storage import TileStore
+from repro.net.frontdoor import ClusterFrontDoor
+from repro.net.host import HostServer
+from repro.runtime import (Executor, MultiplyRequest, ReplicaSet,
+                           ServingFleet, SessionSpec, SharedScanScheduler,
+                           Submitter, SubmitterClosed, Ticket)
+
+
+@pytest.fixture(scope="module")
+def api_store_path(small_valued, tmp_path_factory):
+    ct = to_chunked(small_valued, T=512, C=128)
+    path = str(tmp_path_factory.mktemp("api") / "g")
+    TileStore.write(path, ct)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Executor protocol
+# ---------------------------------------------------------------------------
+EXECUTORS = ["sem", "sharded", "replica"]
+
+
+def build_executor(kind, path):
+    cfg = SEMConfig(chunk_batch=64)
+    if kind == "sem":
+        return SEMSpMM(TileStore.open(path), cfg)
+    if kind == "sharded":
+        return ShardedSEMSpMM(TileStore.open(path), n_shards=2, config=cfg)
+    return ReplicaSet([TileStore.open(path), TileStore.open(path)],
+                      config=cfg)
+
+
+@pytest.fixture(params=EXECUTORS)
+def executor(request, api_store_path):
+    ex = build_executor(request.param, api_store_path)
+    yield ex
+    ex.close()
+
+
+def test_executor_protocol_surface(executor, small_valued):
+    assert isinstance(executor, Executor)
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((small_valued.n_cols, 1)).astype(np.float32)
+    y = np.asarray(executor.multiply(x))
+    assert y.shape == (small_valued.n_rows, 1)
+    # explicit cache=None (disable for this pass) is part of the surface
+    # and must not change the bits
+    np.testing.assert_array_equal(np.asarray(executor.multiply(x, cache=None)),
+                                  y)
+    assert executor.column_bytes() > 0
+    assert executor.io_stats.bytes_read > 0
+
+
+def test_executors_bit_identical(api_store_path, small_valued):
+    """One operand, three executor layers, one answer — to the bit."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((small_valued.n_cols, 2)).astype(np.float32)
+    outs = {}
+    for kind in EXECUTORS:
+        with build_executor(kind, api_store_path) as ex:
+            outs[kind] = np.asarray(ex.multiply(x))
+    for kind in EXECUTORS[1:]:
+        np.testing.assert_array_equal(outs[kind], outs["sem"])
+
+
+def test_executor_column_bytes_uniform(api_store_path):
+    """column_bytes is a property of the logical matrix (the §3.6 budget
+    figure), not of the executor layering above it."""
+    vals = set()
+    for kind in EXECUTORS:
+        with build_executor(kind, api_store_path) as ex:
+            vals.add(ex.column_bytes())
+    assert len(vals) == 1
+
+
+def test_executor_close_idempotent_and_context_managed(api_store_path):
+    for kind in EXECUTORS:
+        ex = build_executor(kind, api_store_path)
+        with ex as entered:
+            assert entered is ex
+        ex.close()                          # second close: still fine
+
+
+# ---------------------------------------------------------------------------
+# Ticket mechanics (no serving stack needed)
+# ---------------------------------------------------------------------------
+def test_ticket_wait_timeout_callbacks_and_error():
+    spec = SessionSpec.multiply(np.ones(4, np.float32), tenant_id="t")
+    t = Ticket(spec=spec)
+    assert t.tenant_id == "t" and not t.done
+    with pytest.raises(TimeoutError):
+        t.wait(timeout=0.01)
+    seen = []
+    t.add_done_callback(seen.append)
+    t.result = np.arange(3)
+    t._complete()
+    t._complete()                           # completion is one-shot
+    assert seen == [t] and t.done
+    t.add_done_callback(seen.append)        # late callback fires immediately
+    assert seen == [t, t]
+    np.testing.assert_array_equal(t.wait(timeout=1), np.arange(3))
+
+    bad = Ticket(spec=spec)
+    bad.error = ValueError("rejected")
+    bad._complete()
+    with pytest.raises(ValueError, match="rejected"):
+        bad.wait(timeout=1)
+
+
+# ---------------------------------------------------------------------------
+# Submitter protocol
+# ---------------------------------------------------------------------------
+SUBMITTERS = ["scheduler", "fleet", "frontdoor"]
+
+
+def make_submitter(kind, path):
+    """Build one submitter implementation; returns (submitter, cleanup)."""
+    if kind == "scheduler":
+        sched = SharedScanScheduler(
+            SEMSpMM(TileStore.open(path), SEMConfig(chunk_batch=64)),
+            use_cache=False)
+        return sched, sched.close
+    if kind == "fleet":
+        fleet = ServingFleet(ReplicaSet([TileStore.open(path)]), n_waves=1)
+        return fleet, fleet.close
+    host = HostServer(ServingFleet(ReplicaSet([TileStore.open(path)]),
+                                   n_waves=1))
+    port = host.start()
+    fd = ClusterFrontDoor(heartbeat_interval=0.1)
+    fd.add_host("127.0.0.1", port)
+
+    def cleanup():
+        try:
+            fd.close()
+        finally:
+            host.stop()
+    return fd, cleanup
+
+
+@pytest.fixture(params=SUBMITTERS)
+def submitter(request, api_store_path):
+    sub, cleanup = make_submitter(request.param, api_store_path)
+    yield sub
+    cleanup()
+
+
+def test_submitter_protocol_spec_in_ticket_out(submitter, api_store_path,
+                                               small_valued):
+    assert isinstance(submitter, Submitter)
+    rng = np.random.default_rng(11)
+    n = small_valued.n_cols
+    xs = [rng.standard_normal(n).astype(np.float32) for _ in range(3)]
+    tickets = [submitter.submit(SessionSpec.multiply(x, tenant_id=f"t{i}"))
+               for i, x in enumerate(xs)]
+    assert all(isinstance(t, Ticket) for t in tickets)
+    submitter.drain(timeout=120)
+    with SEMSpMM(TileStore.open(api_store_path),
+                 SEMConfig(chunk_batch=64)) as sem:
+        for i, (t, x) in enumerate(zip(tickets, xs)):
+            assert t.done and t.tenant_id == f"t{i}" and t.iterations == 1
+            np.testing.assert_array_equal(
+                t.result, np.asarray(sem.multiply(x[:, None]))[:, 0])
+
+
+def test_submitter_deliver_streams_completions(submitter, small_valued):
+    rng = np.random.default_rng(12)
+    n = small_valued.n_cols
+    ids = {f"d{i}" for i in range(3)}
+    for i in range(3):
+        submitter.submit(SessionSpec.multiply(
+            rng.standard_normal(n).astype(np.float32), tenant_id=f"d{i}"))
+    got = set()
+    while len(got) < 3:
+        t = submitter.deliver(timeout=60)
+        assert t is not None and t.done
+        got.add(t.tenant_id)
+    assert got == ids
+
+
+def test_submitter_stats_json_safe_with_common_gauges(submitter,
+                                                      small_valued):
+    submitter.submit(SessionSpec.multiply(
+        np.ones(small_valued.n_cols, np.float32), tenant_id="s"))
+    submitter.drain(timeout=120)
+    # the front door's gauges are heartbeat-fed, so the drained state may
+    # trail the drain by a beat
+    deadline = time.monotonic() + 10
+    while True:
+        stats = submitter.stats()
+        if (stats["backlog_cols"] == 0 and stats["pending_sessions"] == 0) \
+                or time.monotonic() > deadline:
+            break
+        time.sleep(0.05)
+    assert stats == json.loads(json.dumps(stats))
+    assert stats["backlog_cols"] == 0
+    assert stats["pending_sessions"] == 0
+    assert stats["io_stats"]["bytes_read"] >= 0
+
+
+def test_submitter_close_idempotent_then_submit_raises(api_store_path,
+                                                       small_valued):
+    spec = SessionSpec.multiply(np.ones(small_valued.n_cols, np.float32))
+    for kind in SUBMITTERS:
+        sub, cleanup = make_submitter(kind, api_store_path)
+        try:
+            sub.close()
+            sub.close()                     # idempotent
+            with pytest.raises(SubmitterClosed):
+                sub.submit(spec)
+        finally:
+            cleanup()
+
+
+def test_legacy_session_submit_shims_still_work(api_store_path,
+                                                small_valued):
+    """The deprecated live-Session submit form still serves (and still
+    returns the session itself, as old call sites expect)."""
+    x = np.ones(small_valued.n_cols, np.float32)
+    with SEMSpMM(TileStore.open(api_store_path),
+                 SEMConfig(chunk_batch=64)) as sem:
+        want = np.asarray(sem.multiply(x[:, None]))[:, 0]
+
+    sched = SharedScanScheduler(
+        SEMSpMM(TileStore.open(api_store_path), SEMConfig(chunk_batch=64)),
+        use_cache=False)
+    req = sched.submit(MultiplyRequest(x, tenant_id="legacy"))
+    assert isinstance(req, MultiplyRequest)
+    sched.run()
+    sched.close()
+    np.testing.assert_array_equal(req.result, want)
+
+    with ServingFleet(ReplicaSet([TileStore.open(api_store_path)]),
+                      n_waves=1) as fleet:
+        sess = fleet.submit(MultiplyRequest(x, tenant_id="legacy2"))
+        fleet.drain(timeout=60)
+    np.testing.assert_array_equal(sess.result, want)
+
+
+# ---------------------------------------------------------------------------
+# Partition-plan geometry (the slab boundaries every host must agree on)
+# ---------------------------------------------------------------------------
+def test_partition_row_bounds_cover_and_match_shards(api_store_path):
+    st = TileStore.open(api_store_path)
+    n_tile_rows = -(-st.header["n_rows"] // st.header["T"])
+    for k in (1, 2, 3, n_tile_rows + 5):    # over-asking clamps, never fails
+        bounds = st.partition_row_bounds(k)
+        assert 1 <= len(bounds) <= min(k, n_tile_rows)
+        assert bounds[0][0] == 0 and bounds[-1][1] == n_tile_rows
+        for (a0, a1), (b0, b1) in zip(bounds, bounds[1:]):
+            assert a1 == b0 and a0 < a1     # contiguous, non-empty
+        shards = st.partition_rows(k)
+        assert len(shards) == len(bounds)
+        assert sum(s.n_chunks for s in shards) == st.n_chunks
+    # identical across handles: the cluster plan relies on every host
+    # deriving the same split from its own copy
+    assert (TileStore.open(api_store_path).partition_row_bounds(3)
+            == st.partition_row_bounds(3))

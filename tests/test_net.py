@@ -58,12 +58,13 @@ def mixed_specs(small_graph, n_multiply=2):
 
 
 def lone_fleet_results(store_path, specs):
-    """Ground truth: the same specs served by one local ServingFleet."""
+    """Ground truth: the same specs served by one local ServingFleet,
+    through the unified spec-submission path (tickets out)."""
     with ServingFleet(ReplicaSet([TileStore.open(store_path)]),
                       n_waves=1) as fleet:
-        sessions = [fleet.submit(s.build()) for s in specs]
+        tickets = [fleet.submit(s) for s in specs]
         fleet.drain(timeout=120)
-    return [s.result for s in sessions]
+    return tickets
 
 
 # ---------------------------------------------------------------------------
@@ -325,7 +326,7 @@ def test_two_host_cluster_serves_mixed_batch_bit_identical(store_path,
         h1.stop()
         h2.stop()
     for got, exp in zip(results, want):
-        np.testing.assert_array_equal(got, exp)
+        np.testing.assert_array_equal(got, exp.result)
 
 
 def test_kill_host_mid_pass_failover_bit_identical(store_path, small_graph):
@@ -355,7 +356,7 @@ def test_kill_host_mid_pass_failover_bit_identical(store_path, small_graph):
         h1.stop()
         h2.stop()
     for got, exp in zip(results, want):
-        np.testing.assert_array_equal(got, exp)
+        np.testing.assert_array_equal(got, exp.result)
 
 
 def test_front_door_budget_arbitration(store_path, small_graph):
@@ -383,3 +384,178 @@ def test_front_door_budget_arbitration(store_path, small_graph):
             fd.shutdown_hosts()
     finally:
         h1.stop()
+
+
+# ---------------------------------------------------------------------------
+# Partitioned cross-host queries
+# ---------------------------------------------------------------------------
+def test_slab_scoped_spec_wire_roundtrip():
+    spec = SessionSpec.multiply(np.ones((8, 2), np.float32),
+                                tenant_id="t").with_slab(1, 4)
+    header, planes = spec.to_wire()
+    rheader, rplanes = decode_frame(encode_frame({"spec": header}, planes))
+    back = SessionSpec.from_wire(rheader["spec"], rplanes)
+    assert (back.slab, back.n_slabs) == (1, 4)
+    # plain specs stay plain: no slab keys leak into the wire header
+    plain_header, _ = SessionSpec.multiply(np.ones(4, np.float32)).to_wire()
+    assert "slab" not in plain_header and "n_slabs" not in plain_header
+
+
+def partitioned_specs(small_graph):
+    """Tenants for the partitioned path: a wide one-shot multiply plus two
+    iterative sessions (the front door must re-broadcast each iterate)."""
+    rng = np.random.default_rng(77)
+    n = small_graph.n_rows
+    return [
+        SessionSpec.multiply(rng.standard_normal((n, 4)).astype(np.float32),
+                             tenant_id="wide"),
+        SessionSpec.power_iteration(
+            rng.standard_normal(n).astype(np.float32), tol=0.0, max_iter=8,
+            tenant_id="ppow"),
+        SessionSpec.pagerank(n, dangling_vertices(small_graph), max_iter=10,
+                             tenant_id="ppr"),
+    ]
+
+
+def test_partitioned_query_bit_identical_to_single_host(store_path,
+                                                        small_graph):
+    """A partitioned query spans every live host — each scans only its
+    nnz-balanced tile-row slab — and the stitched result is bit-identical
+    to the lone-fleet answer, for one-shot and iterative tenants alike
+    (same bits *and* same iteration trajectory)."""
+    specs = partitioned_specs(small_graph)
+    want = lone_fleet_results(store_path, specs)
+
+    h1, h2 = make_host(store_path), make_host(store_path)
+    p1, p2 = h1.start(), h2.start()
+    try:
+        with ClusterFrontDoor(heartbeat_interval=0.1) as fd:
+            fd.add_host("127.0.0.1", p1)
+            fd.add_host("127.0.0.1", p2)
+            tickets = [fd.submit(s, partitioned=True) for s in specs]
+            results = fd.drain(tickets, timeout=120)
+            assert all(t.plan is not None and t.plan.n_slabs == 2
+                       for t in tickets)
+            assert fd.stats()["partitioned_inflight"] == 0
+            fd.shutdown_hosts()
+    finally:
+        h1.stop()
+        h2.stop()
+    # both hosts actually scanned slabs (work was split, not mirrored)
+    assert h1.slab_scans > 0 and h2.slab_scans > 0
+    for got, t, exp in zip(results, tickets, want):
+        np.testing.assert_array_equal(got, exp.result)
+        assert t.iterations == exp.iterations
+
+
+class _SlowStore(TileStore):
+    """TileStore whose raw reads dawdle, so a mid-query host kill lands
+    while slab scans are genuinely in flight."""
+
+    delay_per_batch = 0.03
+
+    def read_batch_raw(self, start, count):
+        time.sleep(self.delay_per_batch)
+        return super().read_batch_raw(start, count)
+
+
+def test_partitioned_failover_reassigns_lost_slab(store_path, small_graph):
+    """Killing a slab host mid-query evicts it and reassigns only the lost
+    slab to a survivor; the query completes bit-identically (deterministic
+    slab replay), and a concurrently-submitted whole-query tenant on the
+    dead host fails over too — no tenant loss."""
+    rng = np.random.default_rng(99)
+    n = small_graph.n_rows
+    specs = [
+        SessionSpec.pagerank(n, dangling_vertices(small_graph), max_iter=30,
+                             tenant_id="ppr"),
+        SessionSpec.multiply(rng.standard_normal(n).astype(np.float32),
+                             tenant_id="whole0"),
+        SessionSpec.multiply(rng.standard_normal(n).astype(np.float32),
+                             tenant_id="whole1"),
+    ]
+    want = lone_fleet_results(store_path, specs)
+
+    def slow_host():
+        st = _SlowStore(store_path, TileStore.open(store_path).header)
+        return HostServer(ServingFleet(ReplicaSet([st]), n_waves=1))
+
+    h1, h2 = slow_host(), slow_host()
+    p1, p2 = h1.start(), h2.start()
+    try:
+        with ClusterFrontDoor(heartbeat_interval=0.1, miss_limit=2) as fd:
+            fd.add_host("127.0.0.1", p1)
+            k2 = fd.add_host("127.0.0.1", p2)
+            part = fd.submit(specs[0], partitioned=True)
+            whole = [fd.submit(s) for s in specs[1:]]
+            # kill only once h2 has demonstrably scanned slabs for this
+            # query — the loss must land mid-flight, not before the first
+            # pass or after the last
+            deadline = time.monotonic() + 30
+            while h2.slab_scans < 2 and time.monotonic() < deadline:
+                time.sleep(0.005)
+            assert h2.slab_scans >= 2 and not part.done
+            h2._loop.call_soon_threadsafe(h2._shutdown.set)
+            results = fd.drain([part] + whole, timeout=120)
+            assert fd.evicted == [k2]
+            assert part.resubmits >= 1      # the lost slab was retried
+            assert part.plan.reassignments >= 1
+            assert all(t.host_key != k2 for t in whole if t.resubmits)
+            fd.shutdown_hosts()
+    finally:
+        h1.stop()
+        h2.stop()
+    for got, exp in zip(results, want):
+        np.testing.assert_array_equal(got, exp.result)
+
+
+# ---------------------------------------------------------------------------
+# Wire auth
+# ---------------------------------------------------------------------------
+def test_wire_auth_rejects_before_parsing_and_admits_matching_token():
+    async def scenario():
+        async def pong(op, header, planes):
+            return {"pong": True}, []
+        server = WireServer(pong, auth_token="sesame")
+        port = await server.start()
+        good = WireClient("127.0.0.1", port, auth_token="sesame", retries=0)
+        header, _ = await good.call("ping")
+        assert header["pong"]
+        outcomes = []
+        for token in (None, "wrong"):
+            bad = WireClient("127.0.0.1", port, auth_token=token,
+                             retries=0, deadline=2.0)
+            with pytest.raises(ConnectionError):
+                await bad.call("ping")
+            outcomes.append(True)
+            await bad.close()
+        rejected = server.rejected_connections
+        await good.close()
+        await server.close()
+        return outcomes, rejected
+
+    outcomes, rejected = asyncio.run(scenario())
+    assert outcomes == [True, True] and rejected == 2
+
+
+def test_cluster_auth_token_end_to_end(store_path, small_graph):
+    """A tokened host admits a tokened front door and serves normally; a
+    tokenless front door cannot even register the host."""
+    fleet = ServingFleet(ReplicaSet([TileStore.open(store_path)]), n_waves=1)
+    h = HostServer(fleet, auth_token="s3cret")
+    p = h.start()
+    try:
+        with ClusterFrontDoor(heartbeat_interval=0.1, auth_token="s3cret") \
+                as fd:
+            fd.add_host("127.0.0.1", p)
+            x = np.ones(small_graph.n_rows, np.float32)
+            t = fd.submit(SessionSpec.multiply(x, tenant_id="a"))
+            (res,) = fd.drain([t], timeout=60)
+            assert res is not None and res.shape == x.shape
+        with ClusterFrontDoor(heartbeat_interval=0.1, retries=0,
+                              deadline=2.0) as fd2:
+            with pytest.raises(ConnectionError):
+                fd2.add_host("127.0.0.1", p)
+        assert h._wire.rejected_connections >= 1
+    finally:
+        h.stop()

@@ -33,9 +33,23 @@ def summary(speedup=1.6, h2d=26.0, opt_shrink=0.35):
     }
 
 
-def cluster_summary(speedup=1.8, completed=8, resubmits=4, evicted=1,
-                    bit_identical=True):
+def partitioned_summary(speedup=1.8, resubmits=2, reassignments=1,
+                        evicted=1, bit_identical=True):
     return {
+        "passes": 12,
+        "hosts1_seconds": 3.0,
+        "hosts2_seconds": 3.0 / speedup,
+        "hosts2_speedup_vs_1": speedup,
+        "failover": {
+            "resubmits": resubmits, "reassignments": reassignments,
+            "evicted": evicted, "bit_identical": bit_identical,
+        },
+    }
+
+
+def cluster_summary(speedup=1.8, completed=8, resubmits=4, evicted=1,
+                    bit_identical=True, partitioned="default"):
+    s = {
         "tenants": 8,
         "hosts1_col_passes_per_s": 13.0,
         "hosts2_col_passes_per_s": 13.0 * speedup,
@@ -45,6 +59,11 @@ def cluster_summary(speedup=1.8, completed=8, resubmits=4, evicted=1,
             "evicted": evicted, "bit_identical": bit_identical,
         },
     }
+    if partitioned == "default":
+        partitioned = partitioned_summary()
+    if partitioned is not None:
+        s["partitioned"] = partitioned
+    return s
 
 
 def runtime_summary(mid=3, between=7, fleet2=1.9, cluster="default"):
@@ -229,6 +248,46 @@ def test_cluster_gate_requires_fresh_section_tolerates_old_baseline():
     # a pre-cluster baseline only enforces the absolute floors
     base = runtime_summary(cluster=None)
     del base["cluster"]
+    assert compare_cluster(runtime_summary(), base, tolerance=0.2) == []
+
+
+def test_partitioned_gate_trips_on_speedup_regression():
+    sick = runtime_summary(cluster=cluster_summary(
+        partitioned=partitioned_summary(speedup=1.8 * 0.75)))
+    problems = compare_cluster(sick, runtime_summary(), tolerance=0.2)
+    assert any("partitioned 2-host speedup regressed" in p for p in problems)
+
+
+def test_partitioned_gate_enforces_absolute_floor():
+    # a decayed baseline cannot ratchet the floor below 1.4x
+    sick = runtime_summary(cluster=cluster_summary(
+        partitioned=partitioned_summary(speedup=1.3)))
+    base = runtime_summary(cluster=cluster_summary(
+        partitioned=partitioned_summary(speedup=1.35)))
+    problems = compare_cluster(sick, base, tolerance=0.2)
+    assert any("acceptance floor" in p and "partitioned" in p
+               for p in problems)
+
+
+def test_partitioned_gate_trips_on_identity_or_inert_failover():
+    skewed = runtime_summary(cluster=cluster_summary(
+        partitioned=partitioned_summary(bit_identical=False)))
+    assert any("partitioned failover" in p for p in
+               compare_cluster(skewed, runtime_summary(), tolerance=0.2))
+    inert = runtime_summary(cluster=cluster_summary(
+        partitioned=partitioned_summary(resubmits=0, reassignments=0,
+                                        evicted=0)))
+    assert any("no slab failover" in p for p in
+               compare_cluster(inert, runtime_summary(), tolerance=0.2))
+
+
+def test_partitioned_gate_requires_fresh_section_tolerates_old_baseline():
+    # fresh without the partitioned section = the phases silently fell out
+    fresh = runtime_summary(cluster=cluster_summary(partitioned=None))
+    assert any("no 'partitioned' section" in p for p in
+               compare_cluster(fresh, runtime_summary(), tolerance=0.2))
+    # a pre-partitioned baseline only enforces the absolute floor
+    base = runtime_summary(cluster=cluster_summary(partitioned=None))
     assert compare_cluster(runtime_summary(), base, tolerance=0.2) == []
 
 
