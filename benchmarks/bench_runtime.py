@@ -29,6 +29,15 @@ query backlog of 4x one wave's capacity: fleet-of-2 must clear 1.3x the
 single wide wave (it measures ~2x — both spindles busy), and fleet-of-4
 shows the ceiling is the spindle count, not the wave count.
 
+The churn section is the serve-under-mutation claim: ~1% of the edge set
+arrives as delta-overlay inserts before every pass, and the median
+per-pass cost vs a frozen baseline — both arms streaming from the
+emulated-SSD spindle, the overlay riding in RAM — is the overlay's
+serving overhead (gated <= 15% by ``check_regression.py``); churn then
+stops, ``compact_ratio`` turns on, and serving continues until the
+background rebuild installs and the log drains — compaction must
+converge under load, at an unchanged version.
+
 ``REPRO_BENCH_QUICK=1`` (the CI regression gate, via ``benchmarks.run
 --quick``) shrinks the graph and the spindle throttle to a seconds-long
 run; ``benchmarks.run --json`` distills the trajectory numbers into
@@ -49,7 +58,7 @@ from repro.apps.pagerank import build_operator, pagerank_session
 from repro.core.formats import to_chunked
 from repro.core.sem import SEMConfig, SEMSpMM
 from repro.distributed.shard_scan import ShardedSEMSpMM
-from repro.io.storage import TileStore
+from repro.io.storage import TileStore, UpdateBatch
 from repro.runtime import ReplicaSet, ServingFleet, SharedScanScheduler
 from repro.sparse.generate import rmat
 
@@ -63,6 +72,8 @@ N_REQ = 8 if QUICK else 16
 PR_TENANTS, PR_ITERS = (4, 8) if QUICK else (8, 15)
 PASS_SECONDS = 0.08 if QUICK else 0.25
 FLEET_CAPACITY = 4
+CHURN_FRAC = 0.01                       # edges mutated per pass, as nnz frac
+CHURN_PASSES = 8 if QUICK else 6
 
 
 def _sem(path: str, budget: int = 1 << 30) -> SEMSpMM:
@@ -204,6 +215,105 @@ def _fleet_section(path: str, replica_path: str, n: int, rows) -> dict:
     return throughput
 
 
+def _churn_section(path: str, n: int, rows) -> None:
+    """Serve under churn: ~CHURN_FRAC of E edge inserts land before every
+    pass.  Both arms stream from the emulated SSD spindle (the paper's
+    semi-external setting — the same throttle every other serving section
+    measures against): the frozen arm serves the query stream on an
+    untouched store; the churn-overlay arm additionally pays the
+    delta-overlay work each pass, which rides in RAM and reads nothing
+    from the spindle.  The median per-pass overhead is the trajectory
+    number the CI gate holds at <= 15% (``check_regression.py``).  The
+    churn-compact arm then stops churning, enables ``compact_ratio``, and
+    keeps serving until the background rebuild installs and the log
+    drains to empty — compaction must converge *while serving* (the
+    rebuild contends for the same spindle), without changing the version
+    the passes report."""
+    cfg = SEMConfig(chunk_batch=CHUNK_BATCH)
+    rng = np.random.default_rng(29)
+    x = rng.standard_normal(n).astype(np.float32)
+
+    def timed_passes(sched, sem, churn_nnz):
+        """Median run_pass seconds over CHURN_PASSES one-shot queries,
+        with ``churn_nnz`` edge inserts applied before each pass."""
+        ts = []
+        for i in range(CHURN_PASSES):
+            if churn_nnz:
+                sem.apply_updates(UpdateBatch.insert(
+                    rng.integers(0, n, churn_nnz).astype(np.int64),
+                    rng.integers(0, n, churn_nnz).astype(np.int64)))
+            sched.query(x, tenant_id=f"c{i}")
+            t0 = time.perf_counter()
+            sched.run_pass()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    with _spindle(path, PASS_SECONDS) as st:
+        sem = SEMSpMM(st, cfg)
+        with SharedScanScheduler(sem, use_cache=False) as sched:
+            sched.query(x, tenant_id="warm")
+            sched.run_pass()            # pay the jit entry outside the clock
+            frozen_s = timed_passes(sched, sem, 0)
+
+    with _spindle(path, PASS_SECONDS) as st:
+        sem = SEMSpMM(st, cfg)
+        base_nnz = st.nnz()
+        churn_nnz = max(1, int(base_nnz * CHURN_FRAC))
+        with SharedScanScheduler(sem, use_cache=False) as sched:
+            # the warm pass carries a delta so the delta-path jit entries
+            # are paid outside the clock, same as the base step's
+            sem.apply_updates(UpdateBatch.insert(
+                rng.integers(0, n, churn_nnz).astype(np.int64),
+                rng.integers(0, n, churn_nnz).astype(np.int64)))
+            sched.query(x, tenant_id="warm")
+            sched.run_pass()
+            overlay_s = timed_passes(sched, sem, churn_nnz)
+            peak = max(r.delta_nnz for r in sched.reports)
+            version = sem.version
+
+            # convergence: churn stops, compaction turns on, serving keeps
+            # going — install lands at a pass boundary, the log drains
+            sched.compact_ratio = CHURN_FRAC / 2
+            deadline = time.monotonic() + (120 if QUICK else 300)
+            converged = False
+            drain_passes = 0
+            while time.monotonic() < deadline:
+                sched.query(x, tenant_id=f"d{drain_passes}")
+                sched.run_pass()
+                drain_passes += 1
+                h = st.handle
+                if (st.generation >= 1 and h.delta_nnz == 0
+                        and not h.compacting):
+                    converged = True
+                    break
+                time.sleep(0.01)
+            generation = st.generation
+            assert sched.reports[-1].version == version, "version drifted"
+
+    overhead = overlay_s / frozen_s - 1.0
+    rows.append(dict(workload="serve_under_churn", mode="frozen",
+                     passes=CHURN_PASSES, bytes_read=0, cache_hit_bytes=0,
+                     amortization=0.0, seconds_per_pass=frozen_s))
+    rows.append(dict(workload="serve_under_churn", mode="churn-overlay",
+                     passes=CHURN_PASSES, bytes_read=0, cache_hit_bytes=0,
+                     amortization=0.0, seconds_per_pass=overlay_s,
+                     churn_frac=CHURN_FRAC, overhead_frac=overhead,
+                     delta_nnz_peak=int(peak), version=version))
+    rows.append(dict(workload="serve_under_churn", mode="churn-compact",
+                     passes=drain_passes, bytes_read=0, cache_hit_bytes=0,
+                     amortization=0.0,
+                     compaction_converged=bool(converged),
+                     generation=int(generation)))
+    print(f"# serve-under-churn: frozen {frozen_s * 1e3:.1f} ms/pass, "
+          f"{CHURN_FRAC:.0%} churn {overlay_s * 1e3:.1f} ms/pass "
+          f"({overhead:+.1%}), delta peak {peak} nnz, compaction "
+          f"{'converged' if converged else 'DID NOT CONVERGE'} at "
+          f"generation {generation} in {drain_passes} serving passes")
+    # the claim the gate holds across PRs: compaction converges under
+    # serving; the <=15% overlay-overhead ceiling lives in the gate itself
+    assert converged, "compaction did not install + drain while serving"
+
+
 def main():
     adj = rmat(SCALE, 16, seed=3)
     p_op = build_operator(adj)
@@ -321,6 +431,9 @@ def main():
 
     # -- concurrent waves: fleet-of-N vs one wide wave -----------------------
     _fleet_section(path, replica_path, n, rows)
+
+    # -- serving under edge churn: overlay overhead + compaction -------------
+    _churn_section(path, n, rows)
 
     save("runtime_serving", rows)
     print_csv("runtime_serving", rows)

@@ -27,6 +27,10 @@ against the committed ``BENCH_runtime.json``:
   lost its head-start), or mid-pass stops beating between-pass outright;
 * the fleet's aggregate-throughput speedup over one wide wave drops — or
   falls below the 1.3x acceptance floor on 2 emulated spindles;
+* serving under mutation regresses: the delta-overlay per-pass overhead
+  at ~1% edge churn per pass exceeds the 15% ceiling, or background
+  compaction stopped converging (install + drained log) while serving
+  continued — both absolute floors on the fresh run's ``churn`` section;
 * (when the summaries carry a ``cluster`` section, written by the
   ``net_cluster`` bench) the 2-host/1-host cross-host speedup drops
   beyond tolerance or falls below the 1.5x acceptance floor, or the
@@ -48,6 +52,7 @@ import sys
 from typing import Dict, List
 
 FLEET_SPEEDUP_FLOOR = 1.3      # the acceptance bar on 2 emulated spindles
+CHURN_OVERHEAD_CEILING = 0.15  # overlay serving cost at ~1% churn per pass
 CLUSTER_SPEEDUP_FLOOR = 1.5    # 2 localhost hosts vs 1, disjoint spindles
 PARTITIONED_SPEEDUP_FLOOR = 1.4  # one wide query, slabs on 2 vs 1 spindles
 OPT_SHRINK_FLOOR = 0.25        # optimized stores must cut streamed+h2d bytes
@@ -145,6 +150,22 @@ def compare_runtime(fresh: Dict, baseline: Dict,
             f"fleet-of-2 speedup {s_f:.3f}x is below the "
             f"{FLEET_SPEEDUP_FLOOR}x acceptance floor on "
             f"{fl_f.get('spindles', 2)} emulated spindles")
+
+    ch_f = fresh.get("churn")
+    if ch_f is None:
+        problems.append(
+            "fresh runtime summary has no 'churn' section — the "
+            "serve-under-churn phase fell out of the runtime bench")
+    else:
+        if ch_f["overhead_frac"] > CHURN_OVERHEAD_CEILING:
+            problems.append(
+                f"delta-overlay serving overhead {ch_f['overhead_frac']:.1%} "
+                f"at {ch_f['churn_frac']:.0%} edge churn per pass exceeds "
+                f"the {CHURN_OVERHEAD_CEILING:.0%} ceiling")
+        if not ch_f.get("compaction_converged", False):
+            problems.append(
+                "background compaction did not converge (install + drained "
+                "log) while serving continued")
     return problems
 
 
@@ -254,6 +275,10 @@ def main(argv=None) -> int:
         fleet2 = fresh_rt["fleet"]["fleet2_speedup_vs_wide"]
         gates.append(f"mid-pass ttfr {mid} boundaries, "
                      f"fleet-2 {fleet2:.2f}x")
+        ch = fresh_rt.get("churn")
+        if ch:
+            gates.append(f"churn overhead {ch['overhead_frac']:+.1%}, "
+                         f"compaction converged")
         cl = fresh_rt.get("cluster")
         if cl:
             gates.append(

@@ -113,6 +113,19 @@ def write_runtime_json(rows, out_path=None, quick=False) -> str:
         "replica_scan_speedup":
             rep["sharded-1-spindle"] / rep["sharded-2-replicas"],
     }
+    churn = {r["mode"]: r for r in rows
+             if r["workload"] == "serve_under_churn"}
+    if churn:
+        overlay, compact = churn["churn-overlay"], churn["churn-compact"]
+        summary["churn"] = {
+            "churn_frac": overlay["churn_frac"],
+            "frozen_s_per_pass": churn["frozen"]["seconds_per_pass"],
+            "overlay_s_per_pass": overlay["seconds_per_pass"],
+            "overhead_frac": overlay["overhead_frac"],
+            "delta_nnz_peak": overlay["delta_nnz_peak"],
+            "compaction_converged": bool(compact["compaction_converged"]),
+            "generation": compact["generation"],
+        }
     path = out_path or os.path.join(REPO_ROOT, "BENCH_runtime.json")
     return _merge_mode_json(summary, path, quick)
 

@@ -22,6 +22,10 @@ class Semiring:
     mul: Callable
     add_segment: Callable  # (data, segment_ids, num_segments) -> reduced
     zero: float
+    # the cross-chunk combine as an ``.at[...]`` scatter op name: chunks of
+    # one tile row land in separate segment reductions, so the engine folds
+    # them into the accumulator with ``out.at[block].<scatter>(blk)``
+    scatter: str = "add"
 
     def is_plus_times(self) -> bool:
         return self.name == "plus_times"
@@ -47,12 +51,14 @@ def _make_segment_min(zero):
 
 # Each reducer inits at the ring's additive identity, so empty rows come out
 # as the identity in every execution path.
-PLUS_TIMES = Semiring("plus_times", lambda a, x: a * x, _segment_sum, 0.0)
+PLUS_TIMES = Semiring("plus_times", lambda a, x: a * x, _segment_sum, 0.0,
+                      scatter="add")
 OR_AND = Semiring("or_and", lambda a, x: jnp.logical_and(a != 0, x != 0)
-                  .astype(x.dtype), _make_segment_max(0.0), 0.0)
+                  .astype(x.dtype), _make_segment_max(0.0), 0.0,
+                  scatter="max")
 MIN_PLUS = Semiring("min_plus", lambda a, x: a + x,
-                    _make_segment_min(jnp.inf), jnp.inf)
+                    _make_segment_min(jnp.inf), jnp.inf, scatter="min")
 MAX_TIMES = Semiring("max_times", lambda a, x: a * x,
-                     _make_segment_max(-jnp.inf), -jnp.inf)
+                     _make_segment_max(-jnp.inf), -jnp.inf, scatter="max")
 
 SEMIRINGS = {s.name: s for s in (PLUS_TIMES, OR_AND, MIN_PLUS, MAX_TIMES)}

@@ -43,8 +43,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import threading
+
 from repro.core.sem import _CACHE_UNSET, SEMConfig, SEMSpMM
-from repro.io.storage import IOStats, TileStore, validate_replicas
+from repro.io.storage import (GraphHandle, IOStats, TileStore, UpdateBatch,
+                              validate_replicas)
 
 
 class _RecordingBoundary:
@@ -111,6 +114,18 @@ class ShardedSEMSpMM:
         n_shards = len(per_source[0])  # partition_rows may clamp
         self.shards = [per_source[i % len(sources)][i]
                        for i in range(n_shards)]
+        # The shard views hold layout state derived from the current base
+        # generation (chunk ranges, tags, offsets) — pin it so a compaction
+        # cannot install a new generation under them.  Pins are taken on
+        # every source's handle (lazily, if mutation starts after
+        # construction) and dropped in close().
+        self._sources = sources
+        self._mut_lock = threading.Lock()
+        self._pinned: List[GraphHandle] = []
+        for s in sources:
+            if s.handle is not None and s.handle not in self._pinned:
+                s.handle.pin_layout()
+                self._pinned.append(s.handle)
         self.execs: List[SEMSpMM] = [
             SEMSpMM(s, self.cfg,
                     cache=cache.shard(i) if hasattr(cache, "shard")
@@ -122,6 +137,7 @@ class ShardedSEMSpMM:
         self.padded_cols = self.execs[0].padded_cols
         self.mode = "sem"
         self.passes = 0
+        self.last_pass_version = 0
         self._pool = ThreadPoolExecutor(max_workers=len(self.execs),
                                         thread_name_prefix="shard-scan")
 
@@ -129,8 +145,48 @@ class ShardedSEMSpMM:
     def n_shards(self) -> int:
         return len(self.execs)
 
+    # -- mutation surface (the Mutable protocol) ----------------------------
+    @property
+    def version(self) -> int:
+        return self.store.version
+
+    @property
+    def delta_nnz(self) -> int:
+        dl = self.store.delta_log
+        return 0 if dl is None else dl.nnz
+
+    @property
+    def graph_handle(self) -> Optional[GraphHandle]:
+        return self.store.handle
+
+    def pin_layout(self) -> None:
+        """Pin every source handle's layout (idempotent): the shard views'
+        chunk ranges are derived from the current base generation, so a
+        compaction install under a live sharded engine would dangle them.
+        Called lazily — at construction, on first mutation, and by the
+        scheduler when a handle appears after this engine was built."""
+        with self._mut_lock:
+            for s in self._sources:
+                h = s.handle
+                if h is not None and h not in self._pinned:
+                    h.pin_layout()
+                    self._pinned.append(h)
+
+    def apply_updates(self, batch: UpdateBatch) -> int:
+        """Append an edge-update batch to the graph's delta log; every
+        shard's next pass snapshots it (the shard views delegate to the
+        root store's log, and each slices the snapshot to its own row
+        frame).  All replica sources share one handle — they are copies of
+        the same logical bytes, so one log serves them all."""
+        with self._mut_lock:
+            if self.store.handle is None:
+                GraphHandle(self._sources)
+        self.pin_layout()
+        return self.store.handle.apply_updates(batch)
+
     def multiply(self, x: np.ndarray, *, boundary_hook=None,
-                 cache=_CACHE_UNSET) -> np.ndarray:
+                 cache=_CACHE_UNSET,
+                 semiring: str = "plus_times", snapshot=None) -> np.ndarray:
         """A @ X as ``n_shards`` partial scans; the per-shard row blocks
         concatenate (in partition order) to the full result.
 
@@ -176,6 +232,17 @@ class ShardedSEMSpMM:
         x_dev = jnp.asarray(self.store.apply_col_perm(x_pad))
         self.execs[0].store.stats.add_h2d(x_dev.nbytes)
 
+        # One delta snapshot for the whole fan-out: shards stream
+        # concurrently, and without a shared snapshot an update landing
+        # mid-fan-out would leave row blocks at different versions inside
+        # one result.  A caller-supplied snapshot pins it further up (the
+        # scheduler shares one snapshot across a sliced wave's scans).
+        snap = snapshot
+        if snap is None:
+            dl = self.store.delta_log
+            snap = dl.snapshot() if dl is not None else None
+        self.last_pass_version = snap[0] if snap is not None else 0
+
         # Per-pass cache override, shard-partitioned like the attached one
         # (a sharded cache hands each shard its own pin budget).
         def shard_cache(i):
@@ -185,7 +252,8 @@ class ShardedSEMSpMM:
 
         if boundary_hook is None:
             blocks = list(self._pool.map(
-                lambda iex: iex[1].multiply(x_dev, cache=shard_cache(iex[0])),
+                lambda iex: iex[1].multiply(x_dev, cache=shard_cache(iex[0]),
+                                            semiring=semiring, snapshot=snap),
                 enumerate(self.execs)))
         else:
             writes: List[tuple] = []
@@ -195,7 +263,8 @@ class ShardedSEMSpMM:
 
             head = self.execs[0].multiply(x_dev,
                                           boundary_hook=recording_hook,
-                                          cache=shard_cache(0))
+                                          cache=shard_cache(0),
+                                          semiring=semiring, snapshot=snap)
             if writes:
                 x_host = np.array(x_pad)   # replay in write order
                 for c0, cols in writes:
@@ -206,7 +275,8 @@ class ShardedSEMSpMM:
                 x_dev = jnp.asarray(self.store.apply_col_perm(x_host))
                 self.execs[0].store.stats.add_h2d(x_dev.nbytes)
             blocks = [head] + list(self._pool.map(
-                lambda iex: iex[1].multiply(x_dev, cache=shard_cache(iex[0])),
+                lambda iex: iex[1].multiply(x_dev, cache=shard_cache(iex[0]),
+                                            semiring=semiring, snapshot=snap),
                 enumerate(self.execs[1:], start=1)))
         self.passes += 1
         return np.concatenate(blocks, axis=0)
@@ -229,6 +299,9 @@ class ShardedSEMSpMM:
         that never closed them leaked one mapping per shard per wave).
         Idempotent — safe from both an exception path and a normal exit."""
         self._pool.shutdown(wait=True)
+        for h in self._pinned:
+            h.unpin_layout()
+        self._pinned = []
         for s in self.shards:
             s.close()
 

@@ -175,6 +175,401 @@ class _ReaderFailure:
         self.exc = exc
 
 
+# ---------------------------------------------------------------------------
+# Mutable graphs: update batches, the delta log, and the graph handle
+# ---------------------------------------------------------------------------
+
+#: one delta entry: (row, col, value, version stamp).  Deletions ride as
+#: negated values so the binary base path stays binary; the per-entry
+#: version stamp makes post-compaction truncation exact (``drop_through``
+#: filters entries, not whole segments).
+_DELTA_DT = np.dtype([("r", np.int64), ("c", np.int64),
+                      ("v", np.float32), ("g", np.int64)])
+
+
+@dataclasses.dataclass
+class UpdateBatch:
+    """One batch of edge mutations in *user* coordinates (the matrix the
+    caller sees — any column relabel of an optimized store is applied by
+    the engine, never by the caller).  ``vals`` are signed: an insert
+    contributes ``+w``, a delete ``-w``, so a delete annihilates exactly
+    the inserted weight under plus-times and the base store is never
+    rewritten on the hot path."""
+
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+
+    @classmethod
+    def insert(cls, rows, cols, vals=None) -> "UpdateBatch":
+        rows = np.ascontiguousarray(np.asarray(rows, np.int64).ravel())
+        cols = np.ascontiguousarray(np.asarray(cols, np.int64).ravel())
+        vals = (np.ones(rows.shape[0], np.float32) if vals is None else
+                np.ascontiguousarray(np.asarray(vals, np.float32).ravel()))
+        if not (rows.shape == cols.shape == vals.shape):
+            raise ValueError(
+                f"update planes disagree: rows {rows.shape}, "
+                f"cols {cols.shape}, vals {vals.shape}")
+        return cls(rows, cols, vals)
+
+    @classmethod
+    def delete(cls, rows, cols, vals=None) -> "UpdateBatch":
+        """Delete edges carrying weight ``vals`` (default 1 — the binary
+        case).  The delete must name the weight being removed: the log is
+        additive, so removing edge ``(r, c, w)`` appends ``(r, c, -w)``."""
+        b = cls.insert(rows, cols, vals)
+        return cls(b.rows, b.cols, -b.vals)
+
+    @classmethod
+    def concat(cls, batches: "Sequence[UpdateBatch]") -> "UpdateBatch":
+        return cls(np.concatenate([b.rows for b in batches]),
+                   np.concatenate([b.cols for b in batches]),
+                   np.concatenate([b.vals for b in batches]))
+
+    def __len__(self) -> int:
+        return int(self.rows.shape[0])
+
+    # -- wire form (the ``update`` RPC) --------------------------------------
+    def to_wire(self) -> Tuple[dict, List[np.ndarray]]:
+        return {"n": len(self)}, [np.ascontiguousarray(self.rows),
+                                  np.ascontiguousarray(self.cols),
+                                  np.ascontiguousarray(self.vals)]
+
+    @classmethod
+    def from_wire(cls, header: dict, planes: List[np.ndarray]
+                  ) -> "UpdateBatch":
+        if len(planes) != 3:
+            raise ValueError(
+                f"update wire form carries 3 planes (rows, cols, vals), "
+                f"got {len(planes)}")
+        b = cls(np.asarray(planes[0], np.int64).ravel(),
+                np.asarray(planes[1], np.int64).ravel(),
+                np.asarray(planes[2], np.float32).ravel())
+        if not (b.rows.shape == b.cols.shape == b.vals.shape) \
+                or len(b) != int(header.get("n", len(b))):
+            raise ValueError("malformed update planes")
+        return b
+
+
+class DeltaLog:
+    """Log-structured edge-delta overlay over an immutable base store.
+
+    Appended :class:`UpdateBatch` segments accumulate in memory and spill
+    to one on-disk file (``spill_path``, reopened ``mmap_mode='r'``) once
+    their resident bytes pass ``memory_budget_bytes`` — the log never
+    forces the base's O(E) into host RAM.  Every append bumps the
+    monotonic ``version``; every entry is stamped with the version that
+    introduced it, so :meth:`drop_through` (compaction truncation) is
+    exact even when updates landed while the compactor ran.
+
+    :meth:`snapshot` is the read side: the consolidated, row-sorted,
+    duplicate-summed, zero-free COO view the engine scatters per pass —
+    cached per version, recomputed only after a mutation.  All methods are
+    thread-safe (serving waves snapshot while a front door appends)."""
+
+    def __init__(self, *, memory_budget_bytes: int = 64 << 20,
+                 spill_path: Optional[str] = None):
+        self.memory_budget_bytes = int(memory_budget_bytes)
+        self.spill_path = (None if spill_path is None else
+                           (spill_path if spill_path.endswith(".npy")
+                            else spill_path + ".npy"))
+        self.version = 0
+        self.spills = 0
+        self.has_deletes = False
+        self._segments: List[np.ndarray] = []
+        self._lock = threading.RLock()
+        self._snap: Optional[Tuple] = None
+
+    @property
+    def nbytes(self) -> int:
+        with self._lock:
+            return sum(int(s.nbytes) for s in self._segments)
+
+    @property
+    def nnz(self) -> int:
+        """Live (consolidated, non-cancelled) delta entries."""
+        return self.snapshot()[1].shape[0]
+
+    def append(self, batch: UpdateBatch) -> int:
+        """Append one update batch; returns the new version."""
+        with self._lock:
+            self.version += 1
+            seg = np.empty(len(batch), _DELTA_DT)
+            seg["r"], seg["c"] = batch.rows, batch.cols
+            seg["v"], seg["g"] = batch.vals, self.version
+            self._segments.append(seg)
+            if bool((batch.vals < 0).any()):
+                self.has_deletes = True
+            self._snap = None
+            if (self.spill_path is not None
+                    and self.nbytes > self.memory_budget_bytes):
+                self._spill()
+            return self.version
+
+    def _spill(self) -> None:
+        # one consolidated file, reloaded as a read-only map: the log's
+        # resident footprint drops to the page cache's discretion
+        merged = np.concatenate([np.asarray(s) for s in self._segments])
+        np.save(self.spill_path, merged)
+        self._segments = [np.load(self.spill_path, mmap_mode="r")]
+        self.spills += 1
+
+    def snapshot(self) -> Tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+        """``(version, rows, cols, vals)`` — consolidated user-space COO,
+        lexsorted by (row, col), duplicates summed, exact-zero (cancelled)
+        entries dropped.  The tuple is immutable and cached: a pass that
+        snapshots at its start stays internally consistent however many
+        appends land mid-pass."""
+        with self._lock:
+            if self._snap is not None:
+                return self._snap
+            total = sum(s.shape[0] for s in self._segments)
+            if total == 0:
+                self._snap = (self.version, np.zeros(0, np.int64),
+                              np.zeros(0, np.int64), np.zeros(0, np.float32))
+                return self._snap
+            a = np.concatenate([np.asarray(s) for s in self._segments])
+            r, c, v = (a["r"].astype(np.int64), a["c"].astype(np.int64),
+                       a["v"].astype(np.float32))
+            order = np.lexsort((c, r))
+            r, c, v = r[order], c[order], v[order]
+            new = np.ones(r.shape[0], bool)
+            new[1:] = (r[1:] != r[:-1]) | (c[1:] != c[:-1])
+            starts = np.flatnonzero(new)
+            v = np.add.reduceat(v, starts).astype(np.float32)
+            r, c = r[starts], c[starts]
+            keep = v != 0.0
+            self._snap = (self.version, np.ascontiguousarray(r[keep]),
+                          np.ascontiguousarray(c[keep]),
+                          np.ascontiguousarray(v[keep]))
+            return self._snap
+
+    def drop_through(self, version: int) -> None:
+        """Discard every entry introduced at or before ``version`` — they
+        are merged into the installed base generation.  Entries stamped
+        later survive verbatim (per-entry stamps, not per-segment)."""
+        with self._lock:
+            segs = [np.asarray(s)[np.asarray(s)["g"] > version]
+                    for s in self._segments]
+            self._segments = [s for s in segs if s.size]
+            self.has_deletes = any(bool((s["v"] < 0).any())
+                                   for s in self._segments)
+            self._snap = None
+
+
+class GraphHandle:
+    """A versioned mutable graph: one shared :class:`DeltaLog` over one or
+    more attached base :class:`TileStore` replicas.
+
+    The handle is the mutation surface's anchor (``apply_updates`` →
+    version) and the compaction arbiter: :meth:`compact_async` rebuilds
+    ``base ⊕ delta`` into a new base generation on a background thread
+    while serving continues against the old base, and :meth:`try_install`
+    atomically adopts the rebuilt store on every attached replica —
+    refused while any pass streams the old layout (``begin_pass`` /
+    ``end_pass`` bracket each engine pass) or while a layout consumer
+    holds a pin (shard views: :meth:`pin_layout`).  Installation then
+    truncates the log through the compacted version, so the overlay
+    converges to empty under a finite update stream.
+
+    Shard views created by :meth:`TileStore.partition_rows` delegate
+    ``delta_log`` / ``handle`` to their parent, so attaching the parent is
+    enough — slab scans and sharded engines see updates immediately."""
+
+    def __init__(self, stores, *, delta_memory_budget_bytes: int = 64 << 20,
+                 spill_path: Optional[str] = None):
+        if isinstance(stores, TileStore):
+            stores = [stores]
+        if not stores:
+            raise ValueError("a GraphHandle needs at least one base store")
+        self.delta = DeltaLog(memory_budget_bytes=delta_memory_budget_bytes,
+                              spill_path=spill_path)
+        self.stores: List[TileStore] = []
+        self._lock = threading.Lock()
+        self._active = 0
+        self._pins = 0
+        self._compactor: Optional[threading.Thread] = None
+        self._built: Optional[Tuple[int, str]] = None
+        self.compactions = 0
+        self.installs = 0
+        self.generation = 0
+        self.compact_error: Optional[BaseException] = None
+        for s in stores:
+            self.attach(s)
+
+    def attach(self, store: "TileStore") -> None:
+        if store.chunk_offset or store.tile_row_offset or store.row_offset:
+            raise ValueError(
+                "attach whole stores, not shard views (shards delegate "
+                "to their parent's handle)")
+        store.delta_log = self.delta
+        store.handle = self
+        self.stores.append(store)
+
+    # -- the mutation surface ------------------------------------------------
+    @property
+    def version(self) -> int:
+        return self.delta.version
+
+    @property
+    def delta_nnz(self) -> int:
+        return self.delta.nnz
+
+    @property
+    def compacting(self) -> bool:
+        """Whether a background rebuild is currently running."""
+        t = self._compactor
+        return t is not None and t.is_alive()
+
+    def apply_updates(self, batch: UpdateBatch) -> int:
+        """Append one update batch; returns the new monotonic version.
+        Coordinates are validated against the base shape here — an
+        out-of-range row or column would silently corrupt the engine's
+        device scatter, so it must fail loudly at the door."""
+        h = self.stores[0].header
+        if len(batch):
+            if int(batch.rows.min()) < 0 \
+                    or int(batch.rows.max()) >= h["n_rows"]:
+                raise ValueError(
+                    f"update rows out of range [0, {h['n_rows']})")
+            if int(batch.cols.min()) < 0 \
+                    or int(batch.cols.max()) >= h["n_cols"]:
+                raise ValueError(
+                    f"update cols out of range [0, {h['n_cols']})")
+        return self.delta.append(batch)
+
+    # -- pass / layout bracketing --------------------------------------------
+    def begin_pass(self) -> Tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+        """Mark a streaming pass in flight and return the delta snapshot it
+        must apply — installation waits for :meth:`end_pass`."""
+        with self._lock:
+            self._active += 1
+        return self.delta.snapshot()
+
+    def end_pass(self) -> None:
+        with self._lock:
+            self._active -= 1
+
+    def pin_layout(self) -> None:
+        """A consumer holds derived layout state (shard views' chunk
+        ranges, tags, offsets); installation is refused until unpinned."""
+        with self._lock:
+            self._pins += 1
+
+    def unpin_layout(self) -> None:
+        with self._lock:
+            self._pins -= 1
+
+    # -- compaction ----------------------------------------------------------
+    def compact_async(self) -> bool:
+        """Kick a background rebuild of ``base ⊕ delta`` (no-op if one is
+        already running, already built, or the log is empty).  Returns
+        whether a compactor was started."""
+        with self._lock:
+            if self._compactor is not None and self._compactor.is_alive():
+                return False
+            if self._built is not None or self.delta.nnz == 0:
+                return False
+            t = threading.Thread(target=self._compact_job, daemon=True,
+                                 name="graph-compactor")
+            self._compactor = t
+        t.start()
+        return True
+
+    def _compact_job(self) -> None:
+        try:
+            self.compact()
+        except BaseException as e:  # noqa: BLE001 — surfaced on install
+            self.compact_error = e
+
+    def compact(self, out_path: Optional[str] = None) -> Optional[str]:
+        """Synchronously rebuild the base ⊕ delta merge at the current
+        version into a new store file (default ``{base}.g{generation+1}``).
+        Streams one tile row at a time — O(tile row) host memory, like
+        :meth:`TileStore.optimize`.  The rebuilt store is *staged*, not
+        live: :meth:`try_install` adopts it between passes."""
+        snap = self.delta.snapshot()
+        if snap[1].size == 0:
+            return None
+        base = self.stores[0]
+        out_path = out_path or f"{base.path}.g{self.generation + 1}"
+        st = _merge_rebuild(base, snap, out_path)
+        st.close()
+        with self._lock:
+            self._built = (snap[0], out_path)
+        self.compactions += 1
+        return out_path
+
+    def try_install(self) -> bool:
+        """Adopt the staged rebuilt store on every attached replica and
+        truncate the log through the compacted version — only when no pass
+        is in flight and no layout pin is held (call between passes; the
+        scheduler does, at ``run_pass`` entry).  Returns whether the
+        install happened."""
+        if self.compact_error is not None:
+            err, self.compact_error = self.compact_error, None
+            raise RuntimeError("background compaction failed") from err
+        with self._lock:
+            if self._built is None or self._active or self._pins:
+                return False
+            ver, path = self._built
+            with open(path + ".json") as f:
+                header = json.load(f)
+            for s in self.stores:
+                s._adopt_generation(path, dict(header))
+            self.generation += 1
+            self.delta.drop_through(ver)
+            self._built = None
+            self.installs += 1
+            return True
+
+
+def _merge_rebuild(base: "TileStore", snap, out_path: str) -> "TileStore":
+    """Stream ``base ⊕ delta`` into a new optimized store: per tile row,
+    merge the base's decoded entries with the delta slice (delta columns
+    relabeled into the base's engine column space), sum duplicates, drop
+    exact zeros, and emit through the incremental writer.  Bit-identity
+    target: ``stream(base ⊕ delta) == stream(rebuilt)`` under exact
+    arithmetic (the accumulation grouping changes, the values do not)."""
+    _, drows, dcols, dvals = snap
+    h = base.header
+    T = h["T"]
+    binary = bool(h["binary"])
+    perm = base.col_perm()
+    if perm is not None:
+        rank = np.empty_like(perm)
+        rank[perm] = np.arange(perm.shape[0], dtype=perm.dtype)
+        dcols = rank[dcols].astype(np.int64)
+    writer = _OptimizedWriter(
+        out_path, n_rows=h["n_rows"], n_cols=h["n_cols"], T=T, C=h["C"],
+        binary=binary, pack=base.meta_ints == 6, col_perm=perm)
+    for trow, br, bc, bv in base.iter_tile_row_entries():
+        lo = int(np.searchsorted(drows, trow * T))
+        hi = int(np.searchsorted(drows, (trow + 1) * T))
+        if hi > lo:
+            r = np.concatenate([br, drows[lo:hi]])
+            c = np.concatenate([bc, dcols[lo:hi]])
+            v = np.concatenate([bv, dvals[lo:hi]])
+            order = np.lexsort((c, r))
+            r, c, v = r[order], c[order], v[order]
+            new = np.ones(r.shape[0], bool)
+            new[1:] = (r[1:] != r[:-1]) | (c[1:] != c[:-1])
+            starts = np.flatnonzero(new)
+            v = np.add.reduceat(v, starts).astype(np.float32)
+            r, c = r[starts], c[starts]
+            keep = v != 0.0
+            r, c, v = r[keep], c[keep], v[keep]
+            if binary and r.size and not bool((v == 1.0).all()):
+                raise ValueError(
+                    "compaction would leave a binary store non-binary: "
+                    "insert only absent edges / delete only present ones "
+                    "on binary graphs")
+        else:
+            r, c, v = br, bc, bv
+        writer.put_tile_row(trow, r, c, v)
+    return writer.finalize()
+
+
 class BufferPool:
     """Reusable read buffers (paper §3.5: avoid repeated large allocations;
     resize a previously allocated buffer if too small)."""
@@ -248,6 +643,17 @@ class TileStore:
         # one optimized store share pins (identical tag sequences), but a
         # raw pin is never served to a reader of the re-encoded store.
         self._enc_sig = (self.meta_ints, zlib.crc32(tags.tobytes()))
+        # Mutable-graph state: a frozen store carries none of it.  The
+        # delta log / handle are attached by a GraphHandle; shard views
+        # delegate to their parent (``_delta_src``) so an attach after the
+        # shards were cut still reaches them.  ``generation`` counts
+        # in-place base rewrites (compaction installs) — it rides cache
+        # keys next to the logical version because a rebuilt base can
+        # carry identical encoding tags over different payload bytes.
+        self._delta_log: Optional[DeltaLog] = None
+        self._handle: Optional["GraphHandle"] = None
+        self._delta_src: Optional["TileStore"] = None
+        self.generation = 0
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -361,33 +767,76 @@ class TileStore:
         """
         if self.chunk_offset:
             raise ValueError("optimize() works on whole stores, not shards")
-        from repro.core.formats import COO, to_chunked
-        from repro.sparse.graph import degree_order
         h = self.header
         T = h["T"]
         lanes = np.arange(h["C"])[None, :]
-        gr, gc, gv = [], [], []
-        for s, n in self.batch_plan(256):
-            m, r, c, v = self.read_batch(s, n)
-            valid = lanes < m[:, 3:4]
-            gr.append((m[:, 0:1].astype(np.int64) * T + r)[valid])
-            gc.append((m[:, 1:2].astype(np.int64) * T + c)[valid])
-            if not h["binary"]:
-                gv.append(v[valid])
-        rows = np.concatenate(gr) if gr else np.zeros(0, np.int64)
-        cols = np.concatenate(gc) if gc else np.zeros(0, np.int64)
-        vals = (None if h["binary"] else
-                np.concatenate(gv) if gv else np.zeros(0, np.float32))
-        perm = None
+        perm = rank = None
         if reorder:
-            perm = degree_order(cols, h["n_cols"])
+            # Pass 1: column degrees only — O(n_cols) host memory.  The
+            # accumulated bincount equals degree_order()'s bincount over
+            # the materialized COO, so the permutation is unchanged.
+            deg = np.zeros(h["n_cols"], np.int64)
+            for s, n in self.batch_plan(256):
+                m, r, c, v = self.read_batch(s, n)
+                gc = (m[:, 1:2].astype(np.int64) * T + c)[lanes < m[:, 3:4]]
+                deg += np.bincount(gc, minlength=h["n_cols"])
+            perm = np.argsort(-deg, kind="stable").astype(np.int64)
             rank = np.empty_like(perm)
             rank[perm] = np.arange(h["n_cols"])
-            cols = rank[cols]
-        ct = to_chunked(COO(h["n_rows"], h["n_cols"], rows, cols, vals),
-                        T=T, C=h["C"])
-        return type(self).write_optimized(out_path, ct, binary=h["binary"],
-                                          pack=pack, col_perm=perm)
+        # Pass 2: one tile row of entries in memory at a time, emitted
+        # through the incremental writer (which buffers a single chunk for
+        # the iso-demotion lookahead) — never the whole COO.
+        writer = _OptimizedWriter(
+            out_path, n_rows=h["n_rows"], n_cols=h["n_cols"], T=T,
+            C=h["C"], binary=h["binary"], pack=pack, col_perm=perm)
+        for trow, rows, cols, vals in self.iter_tile_row_entries():
+            if rank is not None:
+                cols = rank[cols]
+            writer.put_tile_row(trow, rows, cols, vals)
+        return writer.finalize(store_cls=type(self))
+
+    def iter_tile_row_entries(self, batch: int = 256
+                              ) -> Iterator[Tuple[int, np.ndarray,
+                                                  np.ndarray, np.ndarray]]:
+        """Stream this store one *tile row* at a time: yields
+        ``(tile_row, rows, cols, vals)`` for every tile row in order
+        (empty tile rows yield empty arrays), coordinates global in this
+        store's frame, vals f32 (synthesized ones for binary stores).
+        Host memory is O(one tile row + one read batch) — the foundation
+        of the streaming :meth:`optimize` and of compaction."""
+        h = self.header
+        T = h["T"]
+        ntr = -(-h["n_rows"] // T)
+        lanes = np.arange(h["C"])[None, :]
+        pend: dict = {}
+        cur = 0
+
+        def pop(t):
+            parts = pend.pop(t, None)
+            if not parts:
+                return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                        np.zeros(0, np.float32))
+            return tuple(np.concatenate([p[i] for p in parts])
+                         for i in range(3))
+
+        for s, n in self.batch_plan(batch):
+            m, r, c, v = self.read_batch(s, n)
+            # chunks ascend in tile row, so everything below this batch's
+            # first chunk's row is complete — flush it
+            first = int(m[0, 0])
+            while cur < first:
+                yield (cur, *pop(cur))
+                cur += 1
+            valid = lanes < m[:, 3:4]
+            gr = m[:, 0:1].astype(np.int64) * T + r
+            gc = m[:, 1:2].astype(np.int64) * T + c
+            for i in range(n):
+                vi = valid[i]
+                pend.setdefault(int(m[i, 0]), []).append(
+                    (gr[i][vi], gc[i][vi], v[i][vi]))
+        while cur < ntr:
+            yield (cur, *pop(cur))
+            cur += 1
 
     # -- operand permutation (optimized stores) ------------------------------
     def col_perm(self) -> Optional[np.ndarray]:
@@ -453,6 +902,82 @@ class TileStore:
         store's frame) — per-chunk records vary with the encoding tag."""
         g0 = self.chunk_offset + start
         return int(self._offsets[g0 + count] - self._offsets[g0])
+
+    # -- mutable-graph surface (delta overlay + generations) -----------------
+    @property
+    def delta_log(self) -> Optional[DeltaLog]:
+        """The attached delta overlay, or None for a frozen store.  Shard
+        views delegate to their parent so an attach after sharding still
+        reaches every view."""
+        if self._delta_src is not None:
+            return self._delta_src.delta_log
+        return self._delta_log
+
+    @delta_log.setter
+    def delta_log(self, dl: Optional[DeltaLog]) -> None:
+        self._delta_log = dl
+
+    @property
+    def handle(self) -> Optional["GraphHandle"]:
+        if self._delta_src is not None:
+            return self._delta_src.handle
+        return self._handle
+
+    @handle.setter
+    def handle(self, h: Optional["GraphHandle"]) -> None:
+        self._handle = h
+
+    @property
+    def version(self) -> int:
+        """The graph's logical version: 0 for a frozen store, else the
+        delta log's monotonic counter.  Host-identical across replicas
+        applying the same update sequence (unlike ``generation``, which
+        counts this store's local base rewrites)."""
+        dl = self.delta_log
+        return 0 if dl is None else dl.version
+
+    def nnz(self) -> int:
+        """Stored entries (base store only, not the delta overlay) — the
+        compaction trigger compares the overlay's size against this."""
+        if self.n_chunks == 0:
+            return 0
+        mm = self._memmap()
+        co = self.chunk_offset
+        off = self._offsets[co:co + self.n_chunks]
+        meta = mm[off[:, None] + np.arange(16)].view(np.int32)
+        return int(meta[:, 3].astype(np.int64).sum())
+
+    def _adopt_generation(self, path: str, header: dict) -> None:
+        """Swap this (whole) store onto a rebuilt backing file in place —
+        the compaction install.  Re-derives every layout-dependent field
+        exactly like ``__init__``; counters (``stats``) and the attached
+        delta log survive.  Shard views cannot adopt (their chunk ranges
+        index the old layout) — that is what ``GraphHandle.pin_layout``
+        guards."""
+        if self.chunk_offset or self.tile_row_offset or self.row_offset:
+            raise ValueError("only whole stores adopt a new generation")
+        old, new = self.header, header
+        for k in ("n_rows", "n_cols", "T", "C", "binary"):
+            if old[k] != new[k]:
+                raise ValueError(
+                    f"generation header mismatch on {k!r}: "
+                    f"{old[k]} -> {new[k]}")
+        self.close()
+        self.path = path
+        self.header = header
+        self.meta_ints = int(header.get("meta_ints", 4))
+        self._perm = None
+        enc = header.get("encodings")
+        tags = (np.zeros(header["n_chunks"], np.uint8) if enc is None
+                else np.asarray(enc, np.uint8))
+        sizes = np.array([self._rec_of(t) for t in range(4)],
+                         np.int64)[tags]
+        offsets = np.zeros(tags.shape[0] + 1, np.int64)
+        np.cumsum(sizes, out=offsets[1:])
+        self._tags = tags
+        self._offsets = offsets
+        self._enc_sig = (self.meta_ints, zlib.crc32(tags.tobytes()))
+        self.generation += 1
 
     def batch_plan(self, batch: int) -> List[Tuple[int, int]]:
         """Split this store's chunk range into ``(start, count)`` read
@@ -596,8 +1121,14 @@ class TileStore:
         # pin must never be served to a reader of the re-encoded store
         # sharing the cache (replicas share a signature, so true copies
         # still share pins).
+        # The graph's logical version and the store's physical generation
+        # both tag the key: a pin taken at version v must MISS (not serve
+        # corrupt rows) after an update touched its chunk, and a rebuilt
+        # base can carry identical tags over different payload bytes — the
+        # PR 7 encoding-signature lesson, one axis further.
         key = (self.chunk_offset + start, count, self.tile_row_offset,
-               "raw" if raw else "i32", self._enc_sig)
+               "raw" if raw else "i32", self._enc_sig,
+               self.generation, self.version)
         hit = cache.get(key)
         if hit is not None:
             # hit accounting is in on-disk bytes: the I/O this hit avoided
@@ -755,8 +1286,130 @@ class TileStore:
                             tile_row_offset=self.tile_row_offset + tr0,
                             row_offset=self.row_offset + tr0 * T,
                             tags=self._tags, offsets=self._offsets)
+            # shards delegate mutable-graph state to the root store, so a
+            # GraphHandle attached before OR after the cut reaches them
+            st._delta_src = self._delta_src if self._delta_src is not None \
+                else self
             shards.append(st)
         return shards
+
+
+class _OptimizedWriter:
+    """Incremental writer for the optimized chunk format: accepts one tile
+    row of (already column-relabeled) entries at a time and emits exactly
+    the bytes :meth:`TileStore.write_optimized` emits for the same matrix
+    (pinned by test) — per-chunk ``encode_chunk_planes``, the meta6
+    layout, and the iso-chunk U16→U24 demotion, which needs the *next*
+    chunk's tag and is therefore resolved through a one-chunk delay line:
+    each chunk is held back until its right neighbor's original tag is
+    known (finalize closes the line with right = 0, matching the one-shot
+    writer's edge padding).  Neighbor tags in the demotion test are the
+    pre-demotion ones, exactly like the vectorized form."""
+
+    def __init__(self, path: str, *, n_rows: int, n_cols: int, T: int,
+                 C: int, binary: bool, pack: bool = True,
+                 col_perm: Optional[np.ndarray] = None):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self.path = path
+        self.n_rows, self.n_cols, self.T, self.C = n_rows, n_cols, T, C
+        self.binary, self.pack = bool(binary), bool(pack)
+        self.col_perm = col_perm
+        self._f = open(path + ".bin", "wb")
+        self._tags: List[int] = []
+        self._pend: Optional[dict] = None
+        self._prev_orig = 0
+
+    def put_tile_row(self, trow: int, rows: np.ndarray, cols: np.ndarray,
+                     vals: Optional[np.ndarray]) -> None:
+        """Chunk one tile row's entries (global coordinates, any order;
+        duplicates kept in input order) and push them through the delay
+        line.  An empty tile row emits its mandatory zero chunk."""
+        T, C = self.T, self.C
+        if rows.shape[0] == 0:
+            meta = np.array([[trow, 0, 1, 0]], np.int32)
+            rl = np.zeros((1, C), np.int32)
+            cl = np.zeros((1, C), np.int32)
+            vv = np.zeros((1, C), np.float32)
+        else:
+            tcol = cols // T
+            order = np.lexsort((cols, rows, tcol))
+            rows, cols, tcol = rows[order], cols[order], tcol[order]
+            v = None if vals is None else vals[order]
+            tstarts = [0, *(np.flatnonzero(np.diff(tcol)) + 1).tolist(),
+                       rows.shape[0]]
+            metas, rls, cls_, vvs = [], [], [], []
+            for g0, g1 in zip(tstarts[:-1], tstarts[1:]):
+                tc = int(tcol[g0])
+                for ch0 in range(g0, g1, C):
+                    ch1 = min(ch0 + C, g1)
+                    nnz = ch1 - ch0
+                    rl1 = np.zeros(C, np.int32)
+                    cl1 = np.zeros(C, np.int32)
+                    vv1 = np.zeros(C, np.float32)
+                    rl1[:nnz] = rows[ch0:ch1] - trow * T
+                    cl1[:nnz] = cols[ch0:ch1] - tc * T
+                    if v is not None:
+                        vv1[:nnz] = v[ch0:ch1]
+                    metas.append([trow, tc, 0, nnz])
+                    rls.append(rl1)
+                    cls_.append(cl1)
+                    vvs.append(vv1)
+            metas[0][2] = 1
+            meta = np.asarray(metas, np.int32)
+            rl, cl, vv = np.stack(rls), np.stack(cls_), np.stack(vvs)
+        tags, bases, rows_hi, cols_lo = encode_chunk_planes(meta, rl, cl, T)
+        if not self.pack:
+            tags = np.zeros_like(tags)
+        meta6 = np.zeros((meta.shape[0], 6), np.int32)
+        meta6[:, :4] = meta
+        meta6[:, 4:6] = bases
+        for i in range(meta.shape[0]):
+            ch = dict(tag=int(tags[i]), meta6=meta6[i], rl=rl[i], cl=cl[i],
+                      rows_hi=rows_hi[i], cols_lo=cols_lo[i], vv=vv[i])
+            if self._pend is not None:
+                self._write(self._pend, right=ch["tag"])
+            self._pend = ch
+
+    def _write(self, ch: dict, right: int) -> None:
+        t, left = ch["tag"], self._prev_orig
+        self._prev_orig = ch["tag"]
+        if self.pack and (t == ENC_FLAT_U16
+                          and left != ENC_FLAT_U16 and right != ENC_FLAT_U16
+                          and (left == ENC_FLAT_U24 or right == ENC_FLAT_U24)):
+            t = ENC_FLAT_U24
+        f = self._f
+        f.write(ch["meta6"].tobytes())
+        if t & ENC_ROWS_U8:
+            f.write(ch["rows_hi"].astype(np.uint8).tobytes())
+        elif t:
+            f.write(ch["rows_hi"].tobytes())
+        else:
+            f.write(ch["rl"].astype(np.uint16).tobytes())
+        f.write(ch["cols_lo"].tobytes() if t & ENC_COLS_U8 else
+                ch["cl"].astype(np.uint16).tobytes())
+        if not self.binary:
+            f.write(ch["vv"].astype(np.float32).tobytes())
+        self._tags.append(int(t))
+
+    def finalize(self, store_cls=None) -> TileStore:
+        if self._pend is not None:
+            self._write(self._pend, right=0)
+            self._pend = None
+        self._f.close()
+        header = dict(
+            n_rows=self.n_rows, n_cols=self.n_cols, T=self.T, C=self.C,
+            n_chunks=len(self._tags), binary=self.binary,
+            record=TileStore._record_bytes(self.C, self.binary) + 8,
+            meta_ints=6, encodings=self._tags,
+            col_perm=self.col_perm is not None)
+        with open(self.path + ".json", "w") as f:
+            json.dump(header, f)
+        if self.col_perm is not None:
+            np.save(self.path + ".perm.npy",
+                    np.asarray(self.col_perm, np.int32))
+        st = (store_cls or TileStore)(self.path, header)
+        st.stats.add_write(st.nbytes)
+        return st
 
 
 def validate_replicas(stores: Sequence[TileStore]) -> None:

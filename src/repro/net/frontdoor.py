@@ -340,10 +340,24 @@ class ClusterFrontDoor:
                     np.asarray(session.x_columns(), np.float32))
                 if x.ndim == 1:
                     x = x[:, None]
-                blocks = await asyncio.gather(*(
-                    self._slab_scan(ticket, plan, slab, x, pass_no)
-                    for slab in range(plan.n_slabs)))
-                session.consume(np.concatenate(blocks, axis=0))
+                # version-consistency retry: each slab reply reports the
+                # graph version its scan served; a cluster update landing
+                # between slab scans would stitch rows from two graphs
+                # into one product, so the pass re-runs until every slab
+                # agrees (bounded — each retry sees a quiescent-er log)
+                for attempt in range(4):
+                    results = await asyncio.gather(*(
+                        self._slab_scan(ticket, plan, slab, x, pass_no)
+                        for slab in range(plan.n_slabs)))
+                    versions = {v for _, v in results}
+                    if len(versions) <= 1:
+                        break
+                else:
+                    raise ClusterError(
+                        f"partitioned tenant {ticket.tenant_id!r}: slab "
+                        f"versions never converged ({sorted(versions)})")
+                session.consume(np.concatenate([b for b, _ in results],
+                                               axis=0))
                 pass_no += 1
             ticket.iterations = session.iterations
             ticket.result = session.result
@@ -360,13 +374,16 @@ class ClusterFrontDoor:
     async def _slab_scan(self, ticket: ClusterTicket, plan: PartitionPlan,
                          slab: int, x: np.ndarray,
                          pass_no: int) -> np.ndarray:
-        """One slab's share of one pass, with slab-level failover: a
-        connection failure evicts the host (standard eviction path — its
-        *whole-query* tenants resubmit too) and retries the same slab on
-        the least-backlogged survivor.  A ``RemoteError`` is a rejection
-        (the host parsed the spec and said no) and is not retried."""
+        """One slab's share of one pass — returns ``(rows, version)``, the
+        graph version the slab's scan served riding along for the pass's
+        consistency check — with slab-level failover: a connection failure
+        evicts the host (standard eviction path — its *whole-query* tenants
+        resubmit too) and retries the same slab on the least-backlogged
+        survivor.  A ``RemoteError`` is a rejection (the host parsed the
+        spec and said no) and is not retried."""
+        ring = getattr(ticket.session, "semiring", "plus_times")
         spec = SessionSpec.multiply(
-            x, tenant_id=f"{ticket.tenant_id}/p{pass_no}"
+            x, tenant_id=f"{ticket.tenant_id}/p{pass_no}", semiring=ring
         ).with_slab(slab, plan.n_slabs)
         header, planes = spec.to_wire()
         while True:
@@ -375,7 +392,7 @@ class ClusterFrontDoor:
                 handle = plan.reassign(slab, self._live_hosts())
                 ticket.resubmits += 1
             try:
-                _, rplanes = await handle.client.call(
+                rheader, rplanes = await handle.client.call(
                     "slab", {"spec": header}, planes,
                     deadline=self.slab_deadline)
             except RemoteError:
@@ -386,7 +403,7 @@ class ClusterFrontDoor:
             if not rplanes:
                 raise ClusterError(
                     f"slab {slab} reply from {handle.key} carried no plane")
-            return rplanes[0]
+            return rplanes[0], int(rheader.get("version", 0))
 
     async def _submit(self, ticket: ClusterTicket) -> None:
         spec = ticket.spec
@@ -414,6 +431,45 @@ class ClusterFrontDoor:
             except Exception as e:  # noqa: BLE001 — connection-level loss
                 handle.inflight.pop(spec.tenant_id, None)
                 self._on_loss(handle, e)
+
+    # -- graph mutation ------------------------------------------------------
+    def apply_updates(self, batch) -> int:
+        """Fan one :class:`~repro.io.storage.UpdateBatch` out to every live
+        host and return the new cluster version.  Hosts apply updates in
+        submission order over the same RPC stream, so replicas that acked
+        the same sequence report the same version — routed queries then
+        serve one version wherever they land, and partitioned passes
+        version-check their slab replies.  A host that fails the RPC is
+        evicted (standard loss path: its in-flight tenants replay on
+        survivors); all hosts failing raises :class:`ClusterError`."""
+        if self._closed:
+            raise SubmitterClosed("front door is closed")
+        return self._call(self._apply_updates(batch))
+
+    async def _apply_updates(self, batch) -> int:
+        header, planes = batch.to_wire()
+        live = self._live_hosts()
+        if not live:
+            raise ClusterError(
+                f"no live hosts to apply updates to (evicted: "
+                f"{self.evicted})")
+
+        async def one(h: HostHandle) -> Optional[int]:
+            try:
+                rh, _ = await h.client.call("update", {"update": header},
+                                            planes)
+                return int(rh["version"])
+            except RemoteError:
+                raise          # the host parsed the batch and said no
+            except Exception as e:  # noqa: BLE001 — connection-level loss
+                self._on_loss(h, e)
+                return None
+
+        versions = [v for v in await asyncio.gather(*(one(h) for h in live))
+                    if v is not None]
+        if not versions:
+            raise ClusterError("every host failed while applying updates")
+        return max(versions)
 
     # -- budget arbitration --------------------------------------------------
     async def _push_budget(self) -> None:
@@ -469,9 +525,14 @@ class ClusterFrontDoor:
 
     def stats(self) -> dict:
         """Cluster gauges: live host count, summed last-beat backlog (plus
-        columns submitted since), in-flight tenants, and the merged
+        columns submitted since), in-flight tenants, per-host graph
+        versions with their spread (``version_skew`` > 0 means an update
+        fan-out is mid-flight or a host missed one), and the merged
         cluster-wide I/O counters."""
         live = self._live_hosts()
+        versions = {h.key: int(h.gauges.get("version", 0)) for h in live}
+        skew = (max(versions.values()) - min(versions.values())
+                if versions else 0)
         return {
             "hosts": len(live),
             "evicted": len(self.evicted),
@@ -481,6 +542,10 @@ class ClusterFrontDoor:
             "partitioned_inflight": sum(
                 1 for t in self.tickets
                 if t.plan is not None and not t.done),
+            "versions": versions,
+            "version_skew": skew,
+            "delta_nnz": sum(int(h.gauges.get("delta_nnz", 0))
+                             for h in live),
             "io_stats": self.cluster_io_stats().to_dict(),
         }
 

@@ -48,7 +48,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.io.storage import IOStats, TileStore
+from repro.io.storage import IOStats, TileStore, UpdateBatch
 from repro.net.wire import WireServer
 from repro.runtime.api import Ticket
 from repro.runtime.fleet import ServingFleet, WaveError
@@ -95,6 +95,7 @@ class HostServer:
         self.slab_scans = 0
         self._slabs: dict = {}          # (n_slabs, slab) -> ReplicaSet
         self._slab_lock = threading.Lock()
+        self._layout_pinned = False     # slab shard views pin the base
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> int:
@@ -134,6 +135,12 @@ class HostServer:
         if self._thread is not None:
             self._thread.join(timeout=10)
             self._thread = None
+        with self._slab_lock:
+            if self._layout_pinned:
+                h = self.fleet.replicas.store.handle
+                if h is not None:
+                    h.unpin_layout()
+                self._layout_pinned = False
         self.fleet.close()
         with self._slab_lock:
             slabs, self._slabs = list(self._slabs.values()), {}
@@ -174,14 +181,27 @@ class HostServer:
                 ex = ReplicaSet([sh[key[1]] for sh in shards],
                                 config=self.fleet.replicas.cfg)
                 self._slabs[key] = ex
+            self._pin_slabs_locked()
             return ex
 
-    def _slab_multiply(self, spec: SessionSpec) -> np.ndarray:
+    def _pin_slabs_locked(self) -> None:
+        """Slab shard views hold chunk ranges derived from the current base
+        generation; while any slab executor is alive, hold a layout pin on
+        the graph handle so a compaction install cannot pull the base out
+        from under them.  Caller holds ``_slab_lock``."""
+        h = self.fleet.replicas.store.handle
+        if h is not None and self._slabs and not self._layout_pinned:
+            h.pin_layout()
+            self._layout_pinned = True
+
+    def _slab_multiply(self, spec: SessionSpec) -> Tuple[np.ndarray, int]:
         ex = self._slab_executor(spec.n_slabs, spec.slab)
         x = spec.arrays["x"]
         if x.ndim == 1:
             x = x[:, None]
-        return ex.multiply(x)
+        ring = str(spec.params.get("semiring", "plus_times"))
+        y = ex.multiply(x, semiring=ring)
+        return y, ex.last_pass_version
 
     # -- RPC dispatch --------------------------------------------------------
     async def _handle(self, op: str, header: dict,
@@ -228,11 +248,11 @@ class HostServer:
                     f"advance at the front door)")
             # off-loop: a slab scan takes real I/O time and must not stall
             # this connection's heartbeats
-            y = await asyncio.get_event_loop().run_in_executor(
+            y, ver = await asyncio.get_event_loop().run_in_executor(
                 None, self._slab_multiply, spec)
             self.slab_scans += 1
             return ({"tenant_id": spec.tenant_id, "slab": int(spec.slab),
-                     "rows": int(y.shape[0])},
+                     "rows": int(y.shape[0]), "version": int(ver)},
                     [np.ascontiguousarray(y)])
         if op == "drain":
             timeout = header.get("timeout")
@@ -245,6 +265,14 @@ class HostServer:
                 return {"failed_sessions": e.session_ids,
                         "error": repr(e.error)}, []
             return {"failed_sessions": []}, []
+        if op == "update":
+            batch = UpdateBatch.from_wire(header["update"], planes)
+            # off-loop: appending may spill the log to disk
+            ver = await asyncio.get_event_loop().run_in_executor(
+                None, self.fleet.apply_updates, batch)
+            with self._slab_lock:
+                self._pin_slabs_locked()
+            return {"version": int(ver)}, []
         if op == "budget":
             budget = int(header["memory_budget_bytes"])
             # one shared SEMConfig behind every executor: the write

@@ -404,7 +404,9 @@ class Heartbeater:
     ``miss_limit`` consecutive failures.
 
     ``on_beat(header)`` receives every successful ping reply — the carrier
-    for the peer's serialized gauges (IOStats, backlog, pass-time EWMA).
+    for the peer's serialized gauges (IOStats, backlog, pass-time EWMA,
+    and the versioned-graph pair ``version`` / ``delta_nnz`` the front
+    door folds into ``version_skew``).
     ``on_loss(exc)`` fires once, after which the task exits; the owner
     decides what eviction means.  Heartbeat pings use a single attempt
     (``retries=0`` semantics) — the miss counter IS the retry policy, and

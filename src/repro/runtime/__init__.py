@@ -12,7 +12,7 @@ traffic outgrows one wave, a ServingFleet (fleet) runs N elastic waves
 concurrently over one ReplicaSet with a least-backlog front-door
 dispatcher and cross-wave arbitration of the column + hot-chunk budgets.
 """
-from repro.runtime.api import (CACHE_UNSET, Executor, Submitter,
+from repro.runtime.api import (CACHE_UNSET, Executor, Mutable, Submitter,
                                SubmitterClosed, Ticket)
 from repro.runtime.batcher import Batcher, Wave, WaveEntry
 from repro.runtime.cache import (CacheStats, HotChunkCache,
@@ -24,15 +24,16 @@ from repro.runtime.scheduler import (MidPassState, PassReport,
 from repro.runtime.session import (SESSION_KINDS, BFSSession,
                                    LabelPropagationSession, MultiplyRequest,
                                    PageRankSession, PowerIterationSession,
-                                   Session, SessionSpec)
+                                   Session, SessionSpec, SSSPSession)
 
 __all__ = [
-    "CACHE_UNSET", "Executor", "Submitter", "SubmitterClosed", "Ticket",
+    "CACHE_UNSET", "Executor", "Mutable", "Submitter", "SubmitterClosed",
+    "Ticket",
     "Batcher", "Wave", "WaveEntry", "CacheStats", "HotChunkCache",
     "PartitionedHotChunkCache", "FleetWave", "ServingFleet", "WaveError",
     "ReplicaRouter", "ReplicaSet", "ReplicaState",
     "MidPassState", "PassReport", "SharedScanScheduler",
     "SESSION_KINDS", "BFSSession", "LabelPropagationSession",
     "MultiplyRequest", "PageRankSession", "PowerIterationSession",
-    "Session", "SessionSpec",
+    "Session", "SessionSpec", "SSSPSession",
 ]

@@ -36,6 +36,7 @@ CACHE_UNSET = _CACHE_UNSET
 __all__ = [
     "CACHE_UNSET",
     "Executor",
+    "Mutable",
     "Submitter",
     "SubmitterClosed",
     "Ticket",
@@ -72,6 +73,27 @@ class Executor(Protocol):
     def __enter__(self): ...
 
     def __exit__(self, *exc): ...
+
+
+@runtime_checkable
+class Mutable(Protocol):
+    """The mutation surface of a versioned graph.
+
+    Implementations: ``SEMSpMM``, ``ShardedSEMSpMM``, ``ReplicaSet``,
+    ``ServingFleet`` (engine-local), and ``ClusterFrontDoor`` (fan-out to
+    every host).  ``apply_updates`` appends one
+    :class:`~repro.io.storage.UpdateBatch` of edge inserts/deletes to the
+    graph's log-structured delta overlay and returns the new monotonic
+    version; in-flight passes keep the snapshot they started with, so the
+    flip is only observable at a pass boundary.  ``version`` is 0 for a
+    frozen (never-mutated) graph and host-identical for replicas that
+    applied the same update sequence.
+    """
+
+    def apply_updates(self, batch) -> int: ...
+
+    @property
+    def version(self) -> int: ...
 
 
 @runtime_checkable

@@ -25,14 +25,19 @@ import dataclasses
 import threading
 from typing import Dict, Optional, Tuple
 
-# (global_start_chunk, n_chunks, tile_row_offset, format_tag, enc_sig) of
-# a read batch — built in TileStore._fetch.  tile_row_offset is
-# load-bearing: a pinned batch's meta is rebased to the reading shard's
-# frame, so views with different offsets must never share an entry.
-# enc_sig (the store's meta width + a digest of its per-chunk encoding
-# tags) is equally load-bearing: a raw store's uint16 pin must never be
-# served to a reader of the delta-packed re-encoding of the same matrix —
-# replicas share a signature, so true copies still share pins.
+# (global_start_chunk, n_chunks, tile_row_offset, format_tag, enc_sig,
+# generation, version) of a read batch — built in TileStore._fetch.
+# tile_row_offset is load-bearing: a pinned batch's meta is rebased to the
+# reading shard's frame, so views with different offsets must never share an
+# entry.  enc_sig (the store's meta width + a digest of its per-chunk
+# encoding tags) is equally load-bearing: a raw store's uint16 pin must
+# never be served to a reader of the delta-packed re-encoding of the same
+# matrix — replicas share a signature, so true copies still share pins.
+# generation and version carry the mutable-graph story (PR 7's enc_sig
+# lesson replayed): a compaction install rewrites chunk bytes under the
+# same path (generation), and the base-aligned read batches a future base
+# rewrite will produce differ per logical version — a pin taken at version
+# v must MISS after an update touches its chunk, never serve stale rows.
 Key = Tuple
 
 

@@ -119,6 +119,14 @@ class _WaveExecutor:
         return self._rs.store
 
     @property
+    def version(self) -> int:
+        return self._rs.version
+
+    @property
+    def delta_nnz(self) -> int:
+        return self._rs.delta_nnz
+
+    @property
     def n_batches(self) -> int:
         return self._rs.n_batches
 
@@ -155,10 +163,12 @@ class _WaveExecutor:
         return self._fleet._wave_leftover(self.wave_id, cols_in_use)
 
     # -- the routed scan ----------------------------------------------------
-    def multiply(self, x: np.ndarray, *, boundary_hook=None) -> np.ndarray:
+    def multiply(self, x: np.ndarray, *, boundary_hook=None,
+                 semiring: str = "plus_times", snapshot=None) -> np.ndarray:
         cache = (self._cache_slice if self._cache_slice is not None
                  else _CACHE_UNSET)
-        y = self._rs.multiply(x, boundary_hook=boundary_hook, cache=cache)
+        y = self._rs.multiply(x, boundary_hook=boundary_hook, cache=cache,
+                              semiring=semiring, snapshot=snapshot)
         self.passes += 1    # only this wave's thread multiplies through here
         return y
 
@@ -169,13 +179,14 @@ class FleetWave:
 
     def __init__(self, fleet: "ServingFleet", wave_id: int, cache_slice,
                  *, use_cache: bool, elastic: bool, capacity: Optional[int],
-                 reserve_cols: int):
+                 reserve_cols: int, compact_ratio: Optional[float] = None):
         self.fleet = fleet
         self.wave_id = wave_id
         self.executor = _WaveExecutor(fleet, wave_id, cache_slice)
         self.scheduler = SharedScanScheduler(
             self.executor, use_cache=use_cache, elastic=elastic,
-            capacity=capacity, reserve_cols=reserve_cols)
+            capacity=capacity, reserve_cols=reserve_cols,
+            compact_ratio=compact_ratio)
         self.ewma_pass_s = 0.0
         self.passes_served = 0
         self.in_pass = False
@@ -186,9 +197,13 @@ class FleetWave:
 
     # -- dispatcher-facing ---------------------------------------------------
     def live_columns(self) -> int:
-        """Active + queued columns (the backlog the dispatcher scores)."""
-        active = sum(s.width for s in list(self.scheduler.active))
-        return active + self.scheduler.batcher.pending_columns()
+        """Active + queued columns (the backlog the dispatcher scores),
+        ring-wave tenants included."""
+        sched = self.scheduler
+        active = sum(s.width for s in list(sched.active))
+        ring = (sum(s.width for s in list(sched._ring_active))
+                + sum(s.width for s in list(sched._ring_queue)))
+        return active + ring + sched.batcher.pending_columns()
 
     def backlog_estimate(self):
         """(estimated seconds of queued work, live columns): columns times
@@ -213,8 +228,10 @@ class FleetWave:
         active set (including mid-pass partials) plus the queued backlog.
         Meaningful once the wave thread has stopped (error or close) — the
         front door resubmits exactly these on failover."""
-        active = [s for s in list(self.scheduler.active) if not s.done]
-        return active + self.scheduler.batcher.pending_sessions()
+        sched = self.scheduler
+        owed = [s for s in (list(sched.active) + list(sched._ring_active)
+                            + list(sched._ring_queue)) if not s.done]
+        return owed + sched.batcher.pending_sessions()
 
     # -- the serving thread --------------------------------------------------
     def _serve_loop(self) -> None:
@@ -277,7 +294,8 @@ class ServingFleet:
 
     def __init__(self, replicas, n_waves: int = 2, *, use_cache: bool = True,
                  elastic: bool = True, capacity: Optional[int] = None,
-                 reserve_cols: int = 4, ewma: float = 0.3):
+                 reserve_cols: int = 4, ewma: float = 0.3,
+                 compact_ratio: Optional[float] = None):
         if n_waves < 1:
             raise ValueError("a fleet needs at least one wave")
         self.replicas = replicas
@@ -293,7 +311,7 @@ class ServingFleet:
             FleetWave(self, i,
                       self.cache.shard(i) if self.cache is not None else None,
                       use_cache=use_cache, elastic=elastic, capacity=capacity,
-                      reserve_cols=reserve_cols)
+                      reserve_cols=reserve_cols, compact_ratio=compact_ratio)
             for i in range(n_waves)]
         for w in self.waves:
             w.thread.start()
@@ -351,6 +369,23 @@ class ServingFleet:
     def query(self, x: np.ndarray, tenant_id: str = "") -> MultiplyRequest:
         """Convenience: enqueue a one-shot A @ x request."""
         return self.submit(MultiplyRequest(x, tenant_id=tenant_id))
+
+    # -- mutation surface (the Mutable protocol) ------------------------------
+    @property
+    def version(self) -> int:
+        return getattr(self.replicas, "version", 0)
+
+    @property
+    def delta_nnz(self) -> int:
+        return getattr(self.replicas, "delta_nnz", 0)
+
+    def apply_updates(self, batch) -> int:
+        """Append an edge-update batch to the shared replica set's delta
+        log.  Waves mid-pass keep the snapshot they started with; the new
+        version is visible to every wave's next pass."""
+        if self._closed:
+            raise SubmitterClosed("fleet is closed")
+        return self.replicas.apply_updates(batch)
 
     # -- lifecycle -----------------------------------------------------------
     def _raise_wave_errors(self) -> None:
@@ -429,5 +464,7 @@ class ServingFleet:
             "pending_sessions": pending,
             "ewma_pass_s": ewma,
             "scan_passes": self.total_scan_passes(),
+            "version": self.version,
+            "delta_nnz": self.delta_nnz,
             "io_stats": self.io_stats.to_dict(),
         }

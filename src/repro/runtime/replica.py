@@ -35,7 +35,8 @@ from typing import List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.sem import _CACHE_UNSET, SEMConfig, SEMSpMM
-from repro.io.storage import IOStats, TileStore, validate_replicas
+from repro.io.storage import (GraphHandle, IOStats, TileStore, UpdateBatch,
+                              validate_replicas)
 
 
 @dataclasses.dataclass
@@ -134,6 +135,35 @@ class ReplicaSet:
         h = stores[0].header
         self.n_rows, self.n_cols, self.T = h["n_rows"], h["n_cols"], h["T"]
         self.mode = "sem"
+        self._mut_lock = threading.Lock()
+
+    # -- mutation surface (the Mutable protocol) ----------------------------
+    @property
+    def version(self) -> int:
+        return self.store.version
+
+    @property
+    def delta_nnz(self) -> int:
+        dl = self.store.delta_log
+        return 0 if dl is None else dl.nnz
+
+    @property
+    def graph_handle(self) -> Optional[GraphHandle]:
+        return self.store.handle
+
+    @property
+    def last_pass_version(self) -> int:
+        return max(ex.last_pass_version for ex in self.execs)
+
+    def apply_updates(self, batch: UpdateBatch) -> int:
+        """Append an edge-update batch to ONE shared delta log spanning
+        every replica (the copies hold the same logical bytes, so one
+        overlay serves them all — routing and failover stay version-exact
+        because whichever replica a pass lands on sees the same log)."""
+        with self._mut_lock:
+            if self.store.handle is None:
+                GraphHandle([ex.store for ex in self.execs])
+        return self.store.handle.apply_updates(batch)
 
     # -- executor surface (scheduler-facing) ---------------------------------
     @property
@@ -199,19 +229,23 @@ class ReplicaSet:
 
     # -- the routed scan -----------------------------------------------------
     def multiply(self, x: np.ndarray, *, boundary_hook=None,
-                 cache=_CACHE_UNSET) -> np.ndarray:
+                 cache=_CACHE_UNSET, semiring: str = "plus_times",
+                 snapshot=None) -> np.ndarray:
         """A @ X on the best-ranked healthy replica, falling back in rank
         order on replica failure.  Bit-identical across replicas (same
         bytes, same engine, same jit entries).  ``cache`` rides through to
         the chosen replica's pass (the fleet's per-wave budget slice);
-        unset, each replica uses its own attached cache."""
+        unset, each replica uses its own attached cache.  ``snapshot``
+        pins the delta version for the pass — a failover retry then serves
+        exactly the version the first attempt started with."""
         last_exc: Optional[BaseException] = None
         for rid in self.router.ranked():
             ex = self.execs[rid]
             self.router.begin(rid)
             t0 = time.perf_counter()
             try:
-                y = ex.multiply(x, boundary_hook=boundary_hook, cache=cache)
+                y = ex.multiply(x, boundary_hook=boundary_hook, cache=cache,
+                                semiring=semiring, snapshot=snapshot)
             except OSError as e:
                 self.router.fail(rid, e)
                 last_exc = e

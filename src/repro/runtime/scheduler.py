@@ -87,6 +87,9 @@ class PassReport:
     capacity: int = 0           # elastic: the fixed packed width
     admitted_midpass: int = 0   # elastic: tenants that joined inside the pass
     completed_midpass: int = 0  # elastic: stitched deliveries inside the pass
+    version: int = 0            # graph version this pass served (0 = frozen)
+    delta_nnz: int = 0          # overlay entries the pass's snapshot carried
+    semiring: str = "plus_times"  # the ring the wave was scanned under
 
 
 @dataclasses.dataclass
@@ -128,7 +131,7 @@ class SharedScanScheduler:
     def __init__(self, sem: SEMSpMM, *, use_cache: bool = True,
                  sharded: int = 0, elastic: bool = False,
                  capacity: Optional[int] = None, reserve_cols: int = 4,
-                 boundary_probe=None):
+                 boundary_probe=None, compact_ratio: Optional[float] = None):
         self.sem = sem
         self.batcher = Batcher(sem.n_cols)
         self.active: List[Session] = []
@@ -141,6 +144,25 @@ class SharedScanScheduler:
         self._midpass: List[MidPassState] = []
         self._slots: Dict[Session, Tuple[int, int]] = {}
         self._row_first_chunk: Optional[np.ndarray] = None
+        # -- versioned-graph serving state ---------------------------------
+        # Background compaction: when the delta overlay grows past
+        # ``compact_ratio`` × base nnz, kick GraphHandle.compact_async at a
+        # pass boundary and adopt the rebuilt base (try_install) at the next
+        # run_pass entry — the only instant no pass is streaming.  None
+        # disables the trigger (updates still serve through the overlay).
+        self.compact_ratio = compact_ratio
+        self._base_nnz: Optional[int] = None     # cached per generation
+        self._last_generation = getattr(sem.store, "generation", 0) \
+            if hasattr(sem, "store") else 0
+        self._last_pass_version = 0   # version the previous pass served
+        self._pass_snapshot = None    # delta snapshot of the pass in flight
+        # Ring-homogeneous waves: tenants whose sessions need a non-plus-
+        # times semiring (SSSP: min-plus) cannot share the plus-times wave's
+        # accumulator, so they queue separately and are served in their own
+        # mini-waves, alternating with the main wave when both have work.
+        self._ring_queue: List[Session] = []
+        self._ring_active: List[Session] = []
+        self._ring_turn = False
         want_shards = sharded if (sharded and sharded >= 2
                                   and sem.mode == "sem") else 0
         self.cache = None
@@ -203,6 +225,9 @@ class SharedScanScheduler:
     def _submit_session(self, session: Session) -> Session:
         session.t_submit = time.monotonic()
         session.submit_clock = self.boundary_clock
+        if session.semiring != "plus_times":
+            self._ring_queue.append(session)
+            return session
         return self.batcher.submit(session)
 
     def query(self, x: np.ndarray, tenant_id: str = "") -> MultiplyRequest:
@@ -211,20 +236,59 @@ class SharedScanScheduler:
 
     @property
     def idle(self) -> bool:
-        return not self.active and self.batcher.pending == 0
+        return (not self.active and self.batcher.pending == 0
+                and not self._ring_active and not self._ring_queue)
 
     # -- the serving loop ----------------------------------------------------
     def run_pass(self) -> Optional[PassReport]:
         """Admit, pack, scan once, scatter, retire.  Returns None when there
         is no work."""
+        self._pass_boundary_maintenance()
         demand = (sum(s.width for s in self.active)
                   + self.batcher.pending_columns())
-        if demand == 0:
+        ring_work = bool(self._ring_active or self._ring_queue)
+        if demand == 0 and not ring_work:
             return None
+        if ring_work and (demand == 0 or self._ring_turn):
+            # round-robin between the plus-times wave and ring mini-waves
+            # when both have work; neither class can starve the other
+            self._ring_turn = False
+            self.pass_no += 1
+            return self._run_pass_ring()
+        self._ring_turn = ring_work
         self.pass_no += 1
         if self.elastic and not self._oversized_head_alone():
             return self._run_pass_elastic(demand)
         return self._run_pass_classic(demand)
+
+    def _pass_boundary_maintenance(self) -> None:
+        """Between-pass versioned-graph upkeep: adopt a finished background
+        compaction (this is the only instant no pass streams the old
+        layout), invalidate generation-derived row/chunk maps, and kick a
+        new compaction when the overlay has outgrown ``compact_ratio``."""
+        store = getattr(self.sem, "store", None)
+        handle = store.handle if store is not None else None
+        if handle is None:
+            return
+        if self.sharded is not None:
+            # a live sharded engine's shard views are derived from the
+            # current base layout; keep them pinned (installs refused) —
+            # compaction under a sharded scheduler needs a quiesce/rebuild
+            self.sharded.pin_layout()
+            return
+        # an install by THIS scheduler or by a sibling wave's (fleet) both
+        # stale every chunk-layout derivation; carried mid-pass states
+        # survive (tr_start is a tile-row index, layout-independent, and
+        # the rebuilt base ⊕ truncated log is bit-identical at the version)
+        if handle.try_install() or store.generation != self._last_generation:
+            self._row_first_chunk = None
+            self._base_nnz = None
+        self._last_generation = store.generation
+        if self.compact_ratio is not None and handle.delta_nnz > 0:
+            if self._base_nnz is None:
+                self._base_nnz = max(1, store.nnz())
+            if handle.delta_nnz >= self.compact_ratio * self._base_nnz:
+                handle.compact_async()
 
     def _oversized_head_alone(self) -> bool:
         """An idle elastic wave facing a tenant wider than any capacity falls
@@ -234,6 +298,20 @@ class SharedScanScheduler:
         cap = self.capacity or self.sem.columns_that_fit(
             self.batcher.peek().width)
         return self.batcher.peek().width > cap
+
+    def _take_snapshot(self):
+        """Snapshot the delta overlay once per scheduler pass: every scan of
+        the pass (vertical slices, shard fan-outs, replica failover retries)
+        serves exactly this version, and the report records it."""
+        store = getattr(self.sem, "store", None)
+        dl = store.delta_log if store is not None else None
+        self._pass_snapshot = dl.snapshot() if dl is not None else None
+        return self._pass_snapshot
+
+    def _stamp_version(self, report: PassReport, snap) -> None:
+        if snap is not None:
+            report.version = int(snap[0])
+            report.delta_nnz = int(snap[1].shape[0])
 
     def _run_pass_classic(self, demand: int) -> Optional[PassReport]:
         col_budget = self.sem.columns_that_fit(demand)
@@ -245,6 +323,7 @@ class SharedScanScheduler:
         # Leftover budget -> hot-chunk cache (shrink before the scan so the
         # cache never overdraws memory the wave's columns need).
         report = PassReport(wave_cols=wave.width, tenants=len(wave.entries))
+        self._stamp_version(report, self._take_snapshot())
         if self.cache is not None:
             leftover = self.sem.leftover_budget(wave.width)
             self.cache.set_budget(leftover)
@@ -264,6 +343,66 @@ class SharedScanScheduler:
         self._finish_report(report, r0, h0, p0)
         return report
 
+    def _run_pass_ring(self) -> Optional[PassReport]:
+        """One ring-homogeneous mini-wave: sessions sharing a non-plus-times
+        semiring (SSSP's min-plus) pack into one X and ride one scan under
+        that ring.  Classic-style — no elastic hooks: a tenant cannot enter
+        mid-pass a wave whose accumulator is filled with a foreign ring's
+        zero (min-plus starts at +inf, not 0)."""
+        ring = (self._ring_active or self._ring_queue)[0].semiring
+        # admit same-ring tenants FIFO while the §3.6 budget holds; a lone
+        # oversized tenant is admitted alone and vertically sliced (§3.3)
+        width = sum(s.width for s in self._ring_active)
+        i = 0
+        while i < len(self._ring_queue):
+            head = self._ring_queue[i]
+            if head.semiring != ring:
+                i += 1
+                continue
+            want = width + head.width
+            if width and self.sem.columns_that_fit(want) < want:
+                break
+            self._ring_active.append(self._ring_queue.pop(i))
+            width += head.width
+        if not self._ring_active:
+            return None
+        col_budget = self.sem.columns_that_fit(width)
+
+        blocks, offs, off = [], [], 0
+        for s in self._ring_active:
+            c = s.x_columns()
+            blocks.append(np.asarray(c[:, None] if c.ndim == 1 else c,
+                                     np.float32))
+            offs.append(off)
+            off += s.width
+        x = blocks[0] if len(blocks) == 1 else np.concatenate(blocks, axis=1)
+
+        report = PassReport(wave_cols=width, tenants=len(self._ring_active),
+                            semiring=ring)
+        snap = self._take_snapshot()
+        self._stamp_version(report, snap)
+        if self.cache is not None:
+            leftover = self.sem.leftover_budget(min(width, col_budget))
+            self.cache.set_budget(leftover)
+            report.cache_budget = leftover
+
+        r0, h0, p0 = self._counters()
+        op = self.sharded if self.sharded is not None else self.sem
+        if width <= col_budget:
+            y = op.multiply(x, semiring=ring, snapshot=snap)
+        else:
+            y = np.concatenate(
+                [op.multiply(x[:, c0:c0 + col_budget], semiring=ring,
+                             snapshot=snap)
+                 for c0 in range(0, width, col_budget)], axis=1)
+        for s, c0 in zip(list(self._ring_active), offs):
+            self._deliver(s, y[:, c0:c0 + s.width])
+        still = [s for s in self._ring_active if not s.done]
+        report.retired = len(self._ring_active) - len(still)
+        self._ring_active = still
+        self._finish_report(report, r0, h0, p0)
+        return report
+
     def _counters(self):
         """(bytes_read, cache_hit_bytes, passes) of whichever executor the
         scans run on — shard-aggregated when the pass fans out."""
@@ -276,6 +415,8 @@ class SharedScanScheduler:
         report.scan_passes = p1 - p0
         report.bytes_read = r1 - r0
         report.cache_hit_bytes = h1 - h0
+        self._last_pass_version = report.version
+        self._pass_snapshot = None
         self.reports.append(report)
 
     def _deliver(self, session: Session, y: np.ndarray) -> None:
@@ -301,10 +442,11 @@ class SharedScanScheduler:
         ("chunk-batch boundaries seen, all passes") across sliced scans."""
         op = self.sharded if self.sharded is not None else self.sem
         hook = self._probe_hook if self._probe is not None else None
+        snap = self._pass_snapshot
 
         def mult(x: np.ndarray) -> np.ndarray:
-            return op.multiply(x, boundary_hook=hook) if hook \
-                else op.multiply(x)
+            return op.multiply(x, boundary_hook=hook, snapshot=snap) if hook \
+                else op.multiply(x, snapshot=snap)
 
         if wave.width <= col_budget:
             return mult(wave.x)
@@ -359,11 +501,17 @@ class SharedScanScheduler:
         """Point-in-time serving gauges (the Submitter-protocol slice of the
         per-pass :class:`PassReport` accounting)."""
         op = self.sharded if self.sharded is not None else self.sem
+        ring_cols = (sum(s.width for s in self._ring_active)
+                     + sum(s.width for s in self._ring_queue))
         return {
             "backlog_cols": (sum(s.width for s in self.active)
-                             + self.batcher.pending_columns()),
-            "pending_sessions": len(self.active) + self.batcher.pending,
+                             + self.batcher.pending_columns() + ring_cols),
+            "pending_sessions": (len(self.active) + self.batcher.pending
+                                 + len(self._ring_active)
+                                 + len(self._ring_queue)),
             "scan_passes": self.total_scan_passes(),
+            "version": getattr(op, "version", 0),
+            "delta_nnz": getattr(op, "delta_nnz", 0),
             "io_stats": op.io_stats.to_dict(),
         }
 
@@ -446,6 +594,21 @@ class SharedScanScheduler:
 
         report = PassReport(wave_cols=sum(w for _, w in self._slots.values()),
                             tenants=len(self.active), capacity=cap)
+        snap = self._take_snapshot()
+        self._stamp_version(report, snap)
+        # Version flip under a carried partial pass: the suffix was computed
+        # at the old version, and stitching it onto a new-version prefix
+        # would mix graphs inside one delivered product.  Demote the carried
+        # state to a whole-pass delivery — its operand is already packed, so
+        # this pass serves it A_new @ x end to end (the flip is observable
+        # only at this pass boundary, never inside a stitched result).
+        if report.version != self._last_pass_version:
+            for st in self._midpass:
+                if st.admitted_pass < self.pass_no:
+                    st.admitted_pass = self.pass_no
+                    st.tr_start = 0
+                    st.admit_cs = 0
+                    st.suffix = None
         if self.cache is not None:
             # the packed X physically holds `cap` columns all pass
             leftover = self.sem.leftover_budget(cap)
@@ -455,7 +618,8 @@ class SharedScanScheduler:
         r0, h0, p0 = self._counters()
         self._pass_report = report
         op = self.sharded if self.sharded is not None else self.sem
-        y = op.multiply(x, boundary_hook=self._elastic_hook)
+        y = op.multiply(x, boundary_hook=self._elastic_hook,
+                        snapshot=snap)
         self._pass_end(y, report)
         self._finish_report(report, r0, h0, p0)
         return report

@@ -33,6 +33,13 @@ import numpy as np
 class Session:
     """Base tenant: contribute columns, consume the product, maybe finish."""
 
+    # The ring the shared pass must apply for this tenant's columns.  Almost
+    # every session rides plus-times (BFS included — its or-and collapses to
+    # a threshold in ``consume``); a session that genuinely needs another
+    # ring (SSSP: min-plus) overrides this, and the scheduler serves it in a
+    # ring-homogeneous wave — rings can't share one accumulator.
+    semiring: str = "plus_times"
+
     def __init__(self, tenant_id: str = ""):
         self.tenant_id = tenant_id
         self.iterations = 0
@@ -250,11 +257,58 @@ class BFSSession(Session):
             self.done = True
 
 
+class SSSPSession(Session):
+    """Single- (or multi-) source shortest paths served through the shared
+    scan: one Bellman-Ford relaxation wave per pass, over the min-plus
+    semiring (:data:`repro.core.semiring.MIN_PLUS`).
+
+    Unlike BFS, min-plus does NOT collapse to a plus-times threshold — the
+    engine itself must relax (``y_i = min_j (A_ij + dist_j)``), so this is
+    the first session kind that exercises the executor's ``semiring=``
+    parameter end to end: the scheduler groups min-plus tenants into their
+    own ring-homogeneous wave.  Edge weights are path lengths (the operator
+    convention matches BFS: vertex ``v`` is relaxed from ``u`` via
+    ``A[v, u]``); a binary store serves unit weights, making SSSP on it a
+    weighted restatement of BFS — the oracle test pins exactly that.
+    Converges when a relaxation wave changes no distance (Bellman-Ford
+    terminates after at most n-1 productive waves on negative-cycle-free
+    weights).  ``result`` is the float32 distance vector, ``inf`` for
+    unreachable vertices.
+    """
+
+    semiring = "min_plus"
+
+    def __init__(self, sources: np.ndarray, n: int, *,
+                 max_iters: Optional[int] = None, tenant_id: str = ""):
+        super().__init__(tenant_id)
+        self.n = n
+        self.sources = np.atleast_1d(np.asarray(sources, np.int64))
+        self.max_iters = n if max_iters is None else max_iters
+        self.dist = np.full(n, np.inf, np.float32)
+        self.dist[self.sources] = 0.0
+
+    def x_columns(self) -> np.ndarray:
+        return self.dist[:, None]
+
+    def consume(self, y: np.ndarray) -> None:
+        new = np.minimum(self.dist, y[:, 0])
+        self.iterations += 1
+        settled = bool(np.array_equal(new, self.dist))
+        self.dist = new.astype(np.float32)
+        if settled or self.iterations >= self.max_iters:
+            self.result = self.dist
+            self.done = True
+
+
 # ---------------------------------------------------------------------------
 # Portable session specs (the cross-host tier's unit of work)
 # ---------------------------------------------------------------------------
 def _build_multiply(spec: "SessionSpec") -> Session:
-    return MultiplyRequest(spec.arrays["x"], tenant_id=spec.tenant_id)
+    req = MultiplyRequest(spec.arrays["x"], tenant_id=spec.tenant_id)
+    ring = spec.params.get("semiring")
+    if ring:
+        req.semiring = str(ring)   # instance override of the class attr
+    return req
 
 
 def _build_power_iteration(spec: "SessionSpec") -> Session:
@@ -288,12 +342,21 @@ def _build_bfs(spec: "SessionSpec") -> Session:
                       tenant_id=spec.tenant_id)
 
 
+def _build_sssp(spec: "SessionSpec") -> Session:
+    p = spec.params
+    max_iters = p.get("max_iters")
+    return SSSPSession(spec.arrays["sources"], int(p["n"]),
+                       max_iters=None if max_iters is None else int(max_iters),
+                       tenant_id=spec.tenant_id)
+
+
 SESSION_KINDS: Dict[str, Callable[["SessionSpec"], Session]] = {
     "multiply": _build_multiply,
     "power_iteration": _build_power_iteration,
     "pagerank": _build_pagerank,
     "labelprop": _build_labelprop,
     "bfs": _build_bfs,
+    "sssp": _build_sssp,
 }
 
 
@@ -364,8 +427,10 @@ class SessionSpec:
 
     # -- convenience constructors -------------------------------------------
     @classmethod
-    def multiply(cls, x: np.ndarray, tenant_id: str = "") -> "SessionSpec":
-        return cls("multiply", tenant_id, {}, {"x": np.asarray(x)})
+    def multiply(cls, x: np.ndarray, tenant_id: str = "",
+                 semiring: str = "plus_times") -> "SessionSpec":
+        params = {} if semiring == "plus_times" else {"semiring": semiring}
+        return cls("multiply", tenant_id, params, {"x": np.asarray(x)})
 
     @classmethod
     def power_iteration(cls, x0: np.ndarray, *, tol: float = 1e-6,
@@ -388,4 +453,11 @@ class SessionSpec:
             max_depth: Optional[int] = None, tenant_id: str = ""
             ) -> "SessionSpec":
         return cls("bfs", tenant_id, {"n": n, "max_depth": max_depth},
+                   {"sources": np.atleast_1d(np.asarray(sources, np.int64))})
+
+    @classmethod
+    def sssp(cls, sources: np.ndarray, n: int, *,
+             max_iters: Optional[int] = None, tenant_id: str = ""
+             ) -> "SessionSpec":
+        return cls("sssp", tenant_id, {"n": n, "max_iters": max_iters},
                    {"sources": np.atleast_1d(np.asarray(sources, np.int64))})

@@ -16,7 +16,8 @@ from repro.distributed.shard_scan import ShardedSEMSpMM
 from repro.io.storage import TileStore
 from repro.net.frontdoor import ClusterFrontDoor
 from repro.net.host import HostServer
-from repro.runtime import (Executor, MultiplyRequest, ReplicaSet,
+from repro.io.storage import UpdateBatch
+from repro.runtime import (Executor, MultiplyRequest, Mutable, ReplicaSet,
                            ServingFleet, SessionSpec, SharedScanScheduler,
                            Submitter, SubmitterClosed, Ticket)
 
@@ -86,6 +87,16 @@ def test_executor_column_bytes_uniform(api_store_path):
         with build_executor(kind, api_store_path) as ex:
             vals.add(ex.column_bytes())
     assert len(vals) == 1
+
+
+def test_executor_mutable_protocol(executor):
+    """Every executor layer is also a Mutable: frozen graphs report
+    version 0, and one applied batch bumps every view to version 1."""
+    assert isinstance(executor, Mutable)
+    assert executor.version == 0
+    assert executor.apply_updates(
+        UpdateBatch.insert(np.array([0]), np.array([0]))) == 1
+    assert executor.version == 1
 
 
 def test_executor_close_idempotent_and_context_managed(api_store_path):

@@ -1,0 +1,474 @@
+"""Versioned mutable graphs: the log-structured delta overlay end to end.
+
+The contract under test is the versioned-graph tentpole: a graph is a base
+store ⊕ delta overlay behind one monotonic version counter, and every
+layer — engine, caches, scheduler, fleet, cluster — serves ``base ⊕
+delta`` bit-identically to a store rebuilt at the same version (under the
+repo's exact-arithmetic caveat: integer-valued entries and operands, the
+same pin as ``optimize(reorder=True)``).  Version flips are observable
+only at pass boundaries; stale cache pins must MISS, never serve old
+rows; background compaction converges the log to empty without changing
+a single served bit.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.formats import to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.distributed.shard_scan import ShardedSEMSpMM
+from repro.io.storage import DeltaLog, GraphHandle, TileStore, UpdateBatch
+from repro.net.frontdoor import ClusterFrontDoor
+from repro.net.host import HostServer
+from repro.runtime import (HotChunkCache, MultiplyRequest, Mutable,
+                           PartitionedHotChunkCache, ReplicaSet,
+                           ServingFleet, SharedScanScheduler, SSSPSession)
+from repro.runtime.session import SessionSpec
+from repro.sparse.generate import rmat
+
+
+# ---------------------------------------------------------------------------
+# fixtures — a valued store (integer weights: exact arithmetic, and deletes
+# need not name existing edges, which a binary store's compaction enforces)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def chunked():
+    g = rmat(10, 8, seed=9)
+    vals = np.random.default_rng(2).integers(1, 5, g.nnz).astype(np.float32)
+    return to_chunked(g.with_values(vals), T=256, C=64)
+
+
+@pytest.fixture(scope="module")
+def store_path(chunked, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("mut") / "g")
+    TileStore.write(path, chunked)
+    return path
+
+
+def int_operand(n, k=3, seed=5):
+    """Integer-valued f32 operand: keeps every sum exact, so bit-identity
+    assertions compare arithmetic, not accumulation-order rounding."""
+    r = np.random.default_rng(seed)
+    return np.round(r.standard_normal((n, k)) * 4).astype(np.float32)
+
+
+def coords(n, count, seed, unique=False):
+    r = np.random.default_rng(seed)
+    rows = r.integers(0, n, count).astype(np.int64)
+    cols = r.integers(0, n, count).astype(np.int64)
+    if unique:
+        keep = np.unique(rows * n + cols, return_index=True)[1]
+        rows, cols = rows[keep], cols[keep]
+    return rows, cols
+
+
+# ---------------------------------------------------------------------------
+# DeltaLog / GraphHandle semantics
+# ---------------------------------------------------------------------------
+def test_delta_log_versions_consolidation_and_deletes():
+    dl = DeltaLog()
+    assert dl.version == 0 and dl.nnz == 0
+    v1 = dl.append(UpdateBatch.insert(np.array([1, 2]), np.array([3, 4])))
+    v2 = dl.append(UpdateBatch.delete(np.array([1]), np.array([3])))
+    assert (v1, v2) == (1, 2) and dl.version == 2
+    ver, rows, cols, vals = dl.snapshot()
+    assert ver == 2
+    # insert(1,3) and delete(1,3) cancel in the consolidated snapshot
+    assert rows.size == 1 and (rows[0], cols[0]) == (2, 4)
+    assert vals[0] == 1.0 and dl.has_deletes
+
+
+def test_graph_handle_validates_update_coordinates(store_path):
+    st = TileStore.open(store_path)
+    h = GraphHandle([st])
+    with pytest.raises(ValueError, match="rows out of range"):
+        h.apply_updates(UpdateBatch.insert(
+            np.array([st.header["n_rows"]]), np.array([0])))
+    with pytest.raises(ValueError, match="cols out of range"):
+        h.apply_updates(UpdateBatch.insert(np.array([0]), np.array([-1])))
+    assert h.version == 0  # rejected batches don't consume versions
+    st.close()
+
+
+def test_install_refused_while_pass_or_pin_active(store_path):
+    st = TileStore.open(store_path)
+    h = GraphHandle([st])
+    h.apply_updates(UpdateBatch.insert(*coords(st.header["n_rows"], 20, 3)))
+    assert h.compact() is not None
+    h.pin_layout()
+    assert not h.try_install()
+    h.unpin_layout()
+    snap = h.begin_pass()
+    assert not h.try_install()
+    h.end_pass()
+    assert h.try_install()
+    assert st.generation == 1 and h.delta_nnz == 0
+    assert h.version == snap[0]  # install preserves the logical version
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# engine: base ⊕ delta == rebuilt, bitwise, across backends
+# ---------------------------------------------------------------------------
+ENGINE_CFGS = [
+    ("serial", SEMConfig(chunk_batch=16, overlap=False, use_async=False)),
+    ("overlap", SEMConfig(chunk_batch=16, overlap=True)),
+    ("pallas", SEMConfig(chunk_batch=16, use_pallas=True)),
+]
+
+
+@pytest.mark.parametrize("label,cfg", ENGINE_CFGS,
+                         ids=[l for l, _ in ENGINE_CFGS])
+def test_engine_overlay_matches_rebuilt_bitwise(store_path, tmp_path,
+                                                label, cfg):
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    h = GraphHandle([st])
+    h.apply_updates(UpdateBatch.insert(*coords(n, 150, 21)))
+    h.apply_updates(UpdateBatch.delete(*coords(n, 30, 22)))
+    x = int_operand(n)
+
+    sem = SEMSpMM(st, cfg)
+    y_overlay = sem.multiply(x)
+    assert sem.last_pass_version == 2
+
+    h.compact(str(tmp_path / f"rebuilt-{label}"))
+    assert h.try_install()
+    assert st.generation == 1 and h.delta_nnz == 0
+    y_rebuilt = SEMSpMM(st, cfg).multiply(x)
+    assert np.array_equal(y_overlay, y_rebuilt)
+    st.close()
+
+
+def test_sharded_engine_overlay_and_pin_gating(store_path):
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    x = int_operand(n)
+    sh = ShardedSEMSpMM(st, n_shards=2, config=SEMConfig(chunk_batch=16))
+    ver = sh.apply_updates(UpdateBatch.insert(*coords(n, 100, 31)))
+    assert ver == 1 and isinstance(sh, Mutable)
+    ys = sh.multiply(x)
+
+    ref_store = TileStore.open(store_path)
+    ref_store._delta_src = st  # share the overlay
+    y_ref = SEMSpMM(ref_store, SEMConfig(chunk_batch=16)).multiply(x)
+    assert np.array_equal(ys, y_ref)
+
+    # shard views pin the base layout: installs are refused while live
+    h = st.handle
+    assert h.compact() is not None
+    assert not h.try_install()
+    sh.close()
+    assert h.try_install() and st.generation == 1
+    ref_store.close()
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# caches: a pin taken at version v must MISS (not corrupt) after an update
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make_cache", [
+    lambda: HotChunkCache(1 << 30),
+    lambda: PartitionedHotChunkCache(2, 1 << 30).shard(0),
+], ids=["hot", "partitioned-slice"])
+def test_cache_keys_are_version_tagged(store_path, make_cache):
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    sem = SEMSpMM(st, SEMConfig(chunk_batch=16), cache=make_cache())
+    x = int_operand(n)
+
+    y0 = sem.multiply(x)            # cold pass populates the pins
+    h0 = st.stats.cache_hit_bytes
+    y0b = sem.multiply(x)           # warm pass at the same version: hits
+    assert st.stats.cache_hit_bytes > h0
+    assert np.array_equal(y0, y0b)
+
+    sem.apply_updates(UpdateBatch.insert(*coords(n, 80, 41)))
+    h1 = st.stats.cache_hit_bytes
+    y1 = sem.multiply(x)            # every old pin must miss now
+    assert st.stats.cache_hit_bytes == h1
+    assert not np.array_equal(y1, y0)
+
+    ref = TileStore.open(store_path)
+    ref._delta_src = st
+    y_ref = SEMSpMM(ref, SEMConfig(chunk_batch=16)).multiply(x)
+    assert np.array_equal(y1, y_ref)  # and the served rows are correct
+    ref.close()
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: version flips only at pass boundaries; elastic demotion
+# ---------------------------------------------------------------------------
+def test_pass_report_version_flips_only_at_boundary(store_path):
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    sem = SEMSpMM(st, SEMConfig(chunk_batch=16))
+    sched = SharedScanScheduler(sem)
+    x = int_operand(n, k=1)
+
+    sched.submit(MultiplyRequest(x, tenant_id="a"))
+    r0 = sched.run_pass()
+    assert r0.version == 0 and r0.delta_nnz == 0
+
+    sem.apply_updates(UpdateBatch.insert(*coords(n, 50, 51)))
+    sched.submit(MultiplyRequest(x, tenant_id="b"))
+    r1 = sched.run_pass()
+    assert r1.version == 1 and r1.delta_nnz > 0
+    versions = [r.version for r in sched.reports]
+    assert versions == sorted(versions)
+    gauges = sched.stats()
+    assert gauges["version"] == 1 and gauges["delta_nnz"] > 0
+    st.close()
+
+
+def test_elastic_midpass_tenant_spanning_update_is_demoted(store_path):
+    """A tenant admitted mid-pass whose stitch would span a version flip is
+    demoted to a whole-pass delivery: its result is A_new @ x, bit-equal
+    to a fresh engine at the new version — never a mixed-version stitch."""
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    sem = SEMSpMM(st, SEMConfig(chunk_batch=2))
+    mid = st.n_chunks // 2
+    late = MultiplyRequest(int_operand(n, k=1, seed=8), tenant_id="late")
+    state = {"in": False}
+
+    def probe(sched, b):
+        if not state["in"] and sched.pass_no == 1 and b.chunk_start > mid:
+            sched.submit(late)
+            state["in"] = True
+
+    sched = SharedScanScheduler(sem, elastic=True, boundary_probe=probe)
+    sched.submit(MultiplyRequest(int_operand(n, k=1, seed=9),
+                                 tenant_id="t0"))
+    r1 = sched.run_pass()
+    assert r1.admitted_midpass == 1 and not late.done
+
+    sem.apply_updates(UpdateBatch.insert(*coords(n, 60, 61)))
+    r2 = sched.run_pass()
+    assert r2.version == 1 and late.done
+
+    ref = TileStore.open(store_path)
+    ref._delta_src = st
+    y_ref = SEMSpMM(ref, SEMConfig(chunk_batch=2)).multiply(
+        late.x_columns())
+    assert np.array_equal(late.result, y_ref)
+    ref.close()
+    st.close()
+
+
+def test_scheduler_compaction_converges_and_preserves_bits(store_path):
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    sem = SEMSpMM(st, SEMConfig(chunk_batch=16))
+    sched = SharedScanScheduler(sem, compact_ratio=0.01)
+    x = int_operand(n, k=1)
+    base_nnz = st.nnz()
+
+    for i in range(4):
+        sem.apply_updates(UpdateBatch.insert(
+            *coords(n, max(1, base_nnz // 100), 70 + i)))
+        sched.submit(MultiplyRequest(x, tenant_id=f"q{i}"))
+        sched.run_pass()
+    assert sched.reports[-1].version == 4
+    assert not sched.active  # one-shot requests retire within their pass
+
+    deadline = time.monotonic() + 60
+    while time.monotonic() < deadline:
+        probe = MultiplyRequest(x, tenant_id="probe")
+        sched.submit(probe)
+        sched.run_pass()
+        h = st.handle
+        if st.generation >= 1 and h.delta_nnz == 0 and not h.compacting:
+            break
+        time.sleep(0.02)
+    assert st.generation >= 1, "compaction never installed"
+    assert st.handle.delta_nnz == 0, "log did not drain"
+
+    # a post-install pass serves the same bits the overlay served
+    post = MultiplyRequest(x, tenant_id="post")
+    sched.submit(post)
+    rep = sched.run_pass()
+    assert rep.version == 4 and rep.delta_nnz == 0
+    assert np.array_equal(post.result, probe.result)
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# SSSP: min-plus ring sessions, oracle-tested like BFS
+# ---------------------------------------------------------------------------
+def sssp_oracle(store, sources, extra=None):
+    """Host Bellman-Ford over the store's adjacency: stored entry (i, j)
+    relaxes dist[i] against dist[j] + w(i, j)."""
+    n = store.header["n_rows"]
+    er, ec, ev = [], [], []
+    for _, rr, cc, vv in store.iter_tile_row_entries():
+        er.append(rr), ec.append(cc), ev.append(vv)
+    if extra is not None:
+        er.append(extra[0]), ec.append(extra[1]), ev.append(extra[2])
+    er, ec = np.concatenate(er), np.concatenate(ec)
+    ev = np.concatenate(ev).astype(np.float64)
+    dist = np.full(n, np.inf, np.float64)
+    dist[np.asarray(sources)] = 0.0
+    for _ in range(n):
+        new = dist.copy()
+        np.minimum.at(new, er, dist[ec] + ev)
+        if np.array_equal(new, dist):
+            return new
+        dist = new
+    return dist
+
+
+def test_sssp_session_matches_bellman_ford(store_path):
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    sched = SharedScanScheduler(SEMSpMM(st, SEMConfig(chunk_batch=16)))
+    sess = SSSPSession(np.array([0, 3]), n)
+    assert sess.semiring == "min_plus"
+    sched.submit(sess)
+    sched.drain(timeout=300)
+    assert sess.done
+    ref = sssp_oracle(st, [0, 3])
+    assert np.allclose(np.asarray(sess.result, np.float64), ref, atol=1e-4)
+    ring_reports = [r for r in sched.reports if r.semiring == "min_plus"]
+    assert ring_reports and all(r.tenants >= 1 for r in ring_reports)
+    st.close()
+
+
+def test_sssp_over_delta_overlay_and_wire_roundtrip(store_path):
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    sem = SEMSpMM(st, SEMConfig(chunk_batch=16))
+    ir, ic = coords(n, 80, 91, unique=True)  # the log sums duplicates;
+    iv = np.full(ir.size, 0.5, np.float32)   # min-plus oracles must not
+    sem.apply_updates(UpdateBatch.insert(ir, ic, iv))
+
+    spec = SessionSpec.sssp(np.array([1]), n, tenant_id="w")
+    rebuilt = SessionSpec.from_wire(*spec.to_wire())
+    assert rebuilt.build().semiring == "min_plus"
+
+    sched = SharedScanScheduler(sem)
+    tk = sched.submit(rebuilt)
+    sched.drain(timeout=300)
+    ref = sssp_oracle(st, [1], extra=(ir, ic, iv))
+    assert np.allclose(np.asarray(tk.wait(1), np.float64), ref, atol=1e-4)
+    st.close()
+
+
+def test_sssp_rejects_deletions_in_overlay(store_path):
+    """Negated values only cancel under plus-times; a min-plus pass over a
+    log holding deletions must fail loudly, not serve wrong distances."""
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    sem = SEMSpMM(st, SEMConfig(chunk_batch=16))
+    sem.apply_updates(UpdateBatch.delete(np.array([0]), np.array([1]),
+                                         np.array([1.0], np.float32)))
+    with pytest.raises(ValueError, match="delet"):
+        sem.multiply(int_operand(n, k=1), semiring="min_plus")
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# Mutable protocol + mixed plus-times/ring waves
+# ---------------------------------------------------------------------------
+def test_mutable_protocol_conformance(store_path):
+    st = TileStore.open(store_path)
+    sem = SEMSpMM(st, SEMConfig(chunk_batch=16))
+    rs = ReplicaSet([TileStore.open(store_path)])
+    fleet = ServingFleet(ReplicaSet([TileStore.open(store_path)]), n_waves=1)
+    try:
+        for impl in (sem, rs, fleet):
+            assert isinstance(impl, Mutable)
+            assert impl.version == 0
+    finally:
+        fleet.close()
+        rs.close()
+        st.close()
+
+
+def test_mixed_ring_and_plus_waves_share_scheduler(store_path):
+    st = TileStore.open(store_path)
+    n = st.header["n_rows"]
+    sched = SharedScanScheduler(SEMSpMM(st, SEMConfig(chunk_batch=16)))
+    mul = MultiplyRequest(int_operand(n, k=2), tenant_id="mul")
+    sssp = SSSPSession(np.array([2]), n)
+    sched.submit(mul)
+    sched.submit(sssp)
+    sched.drain(timeout=300)
+    assert mul.done and sssp.done
+    assert {r.semiring for r in sched.reports} == {"plus_times", "min_plus"}
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# fleet + cluster: updates fan out, versions agree, bits agree
+# ---------------------------------------------------------------------------
+def test_fleet_serves_under_churn_with_compaction(store_path):
+    rs = ReplicaSet([TileStore.open(store_path)])
+    n = rs.n_rows
+    x = int_operand(n, k=1, seed=12)
+    with ServingFleet(rs, n_waves=2, compact_ratio=0.02) as fleet:
+        base_nnz = rs.store.nnz()
+        for i in range(5):
+            fleet.apply_updates(UpdateBatch.insert(
+                *coords(n, max(1, base_nnz // 50), 100 + i)))
+            fleet.submit(SessionSpec.multiply(x, tenant_id=f"c{i}"))
+        fleet.drain(timeout=120)
+        y_overlay = fleet.submit(SessionSpec.multiply(
+            x, tenant_id="last")).wait(timeout=60)
+
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            fleet.submit(SessionSpec.multiply(x, tenant_id="p")).wait(60)
+            h = rs.store.handle
+            if rs.store.generation >= 1 and h.delta_nnz == 0 \
+                    and not h.compacting:
+                break
+            time.sleep(0.02)
+        assert rs.store.generation >= 1
+        y_post = fleet.submit(SessionSpec.multiply(
+            x, tenant_id="post")).wait(timeout=60)
+        assert np.array_equal(y_overlay, y_post)
+        gauges = fleet.stats()
+        assert gauges["version"] == 5 and gauges["delta_nnz"] == 0
+
+
+def test_cluster_update_fanout_routed_and_partitioned(chunked, tmp_path):
+    paths = [str(tmp_path / f"copy{i}") for i in range(2)]
+    for p in paths:
+        TileStore.write(p, chunked)
+    n = chunked.n_rows
+
+    hosts = [HostServer(ServingFleet(ReplicaSet([TileStore.open(p)]),
+                                     n_waves=1)) for p in paths]
+    door = ClusterFrontDoor(heartbeat_interval=0.1)
+    try:
+        for h in hosts:
+            door.add_host("127.0.0.1", h.start())
+        x = int_operand(n, k=2, seed=14)
+        y_pre = door.submit(SessionSpec.multiply(
+            x, tenant_id="pre")).wait(timeout=60)
+
+        ver = door.apply_updates(UpdateBatch.insert(*coords(n, 120, 15)))
+        assert ver == 1
+
+        routed = [door.submit(SessionSpec.multiply(
+            x, tenant_id=f"r{i}")).wait(timeout=60) for i in range(4)]
+        for y in routed[1:]:  # both hosts serve identical post-update bits
+            assert np.array_equal(y, routed[0])
+        assert not np.array_equal(y_pre, routed[0])
+
+        part = door.submit(SessionSpec.multiply(x, tenant_id="p"),
+                           partitioned=True).wait(timeout=120)
+        assert np.array_equal(part, routed[0])
+
+        time.sleep(0.5)  # let a heartbeat carry the new gauges
+        stats = door.stats()
+        assert stats["version_skew"] == 0
+        assert set(stats["versions"].values()) == {1}
+        assert stats["delta_nnz"] > 0
+    finally:
+        door.close()
+        for h in hosts:
+            h.stop()

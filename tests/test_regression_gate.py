@@ -66,8 +66,21 @@ def cluster_summary(speedup=1.8, completed=8, resubmits=4, evicted=1,
     return s
 
 
-def runtime_summary(mid=3, between=7, fleet2=1.9, cluster="default"):
+def churn_summary(overhead=0.04, converged=True):
     return {
+        "churn_frac": 0.01,
+        "frozen_s_per_pass": 0.05,
+        "overlay_s_per_pass": 0.05 * (1 + overhead),
+        "overhead_frac": overhead,
+        "delta_nnz_peak": 5200,
+        "compaction_converged": converged,
+        "generation": 1,
+    }
+
+
+def runtime_summary(mid=3, between=7, fleet2=1.9, cluster="default",
+                    churn="default"):
+    s = {
         "boundaries_to_first_result": {"mid-pass": mid,
                                        "between-pass": between},
         "seconds_to_first_result": {"mid-pass": 0.19, "between-pass": 0.41},
@@ -82,6 +95,11 @@ def runtime_summary(mid=3, between=7, fleet2=1.9, cluster="default"):
         "replica_scan_speedup": 1.8,
         "cluster": cluster_summary() if cluster == "default" else cluster,
     }
+    if churn == "default":
+        churn = churn_summary()
+    if churn is not None:
+        s["churn"] = churn
+    return s
 
 
 def test_gate_passes_within_tolerance():
@@ -205,6 +223,23 @@ def test_main_gates_runtime_alongside_engine(tmp_path):
 
     # without --runtime the engine-only contract is unchanged
     assert main([str(eng), str(eng), "--mode", "quick"]) == 0
+
+
+def test_churn_gate_enforces_overhead_ceiling_and_convergence():
+    # the ceiling is absolute: a decayed baseline cannot ratchet past 15%
+    hot = runtime_summary(churn=churn_summary(overhead=0.22))
+    base = runtime_summary(churn=churn_summary(overhead=0.25))
+    assert any("exceeds" in p and "ceiling" in p for p in
+               compare_runtime(hot, base, tolerance=0.2))
+    stuck = runtime_summary(churn=churn_summary(converged=False))
+    assert any("compaction did not converge" in p for p in
+               compare_runtime(stuck, runtime_summary(), tolerance=0.2))
+
+
+def test_churn_gate_requires_fresh_section():
+    fresh = runtime_summary(churn=None)
+    assert any("no 'churn' section" in p for p in
+               compare_runtime(fresh, runtime_summary(), tolerance=0.2))
 
 
 def test_cluster_gate_passes_within_tolerance():
