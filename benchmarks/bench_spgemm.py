@@ -1,0 +1,140 @@
+"""Semi-external SpGEMM bench: budget-vs-spill on a power-law A·A.
+
+The workload the SpGEMM tentpole exists for: a power-law (R-MAT) graph
+squared — multi-hop neighborhood expansion — whose product nnz is ~20x
+the input nnz, with the partial-accumulator budget forced *below* the
+product's footprint so the spill/merge machinery is on the measured path.
+
+Three runs over the same store, all asserted bit-identical (binary input
+⇒ exact arithmetic):
+
+* **reference** — effectively unbounded budget: no spills; its peak
+  partial bytes define how hard the next run is squeezed;
+* **budgeted** — budget = peak/3 (never below 64 KiB): must spill at
+  least once, must never hold more than the budget, must reproduce the
+  reference product bit for bit — this is the timed run, and the row the
+  CI gate (``check_regression.py`` ``compare_spgemm``) tracks;
+* **optimized-A** — the same budgeted run over the column-relabeled,
+  delta-compressed store: the encoding must not leak into the product.
+
+The oracle is dense ``A @ A`` when the graph is small enough, and the
+repo's own SpMM kernel otherwise: ``spmm_chunked(A, B[:, block])``
+column blocks — SpGEMM checked against the paper's §3 kernel, not
+against itself.
+
+Quick mode (``REPRO_BENCH_QUICK=1``): scale-10 graph, seconds-long — the
+CI gate's sizes.  Full mode: scale-12.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import print_csv, quick_mode, save
+from repro.core.formats import to_chunked
+from repro.core.spgemm import materialize_dense, spgemm
+from repro.core.spmm import spmm_chunked
+from repro.io.storage import TileStore
+from repro.sparse.generate import rmat
+
+MIN_BUDGET = 1 << 16
+
+
+def _oracle_identical(ct, graph, product_dense) -> bool:
+    """Dense oracle on small graphs, spmm_chunked column blocks above."""
+    n = graph.n_rows
+    if n <= 2048:
+        dense = graph.to_dense(np.float64)
+        return np.array_equal(product_dense, (dense @ dense).astype(
+            np.float32))
+    bdense = graph.to_dense(np.float32)
+    for lo in range(0, n, 1024):
+        block = spmm_chunked(ct, bdense[:, lo:lo + 1024])
+        if not np.array_equal(product_dense[:, lo:lo + 1024], block):
+            return False
+    return True
+
+
+def bench() -> List[Dict]:
+    quick = quick_mode()
+    scale = 10 if quick else 12
+    T, C = (256, 64) if quick else (512, 128)
+    g = rmat(scale, 8, seed=31)
+    ct = to_chunked(g, T=T, C=C)
+    tmp = tempfile.mkdtemp(prefix="bench-spgemm-")
+    rows: List[Dict] = []
+    try:
+        path = os.path.join(tmp, "a")
+        TileStore.write(path, ct)
+        a = TileStore.open(path)
+
+        # reference: ample budget -> no spills, and the honest peak
+        ref, ref_stats = spgemm(a, None, os.path.join(tmp, "ref"),
+                                partial_budget_bytes=1 << 30)
+        ref_dense = materialize_dense(ref)
+        ref.close()
+        assert ref_stats.spill_cycles == 0
+        oracle_ok = _oracle_identical(ct, g, ref_dense)
+        assert oracle_ok, "reference product disagrees with the oracle"
+
+        # budgeted: squeezed to a third of the real footprint -> must spill,
+        # must stay under budget, must not change a bit.  The timed run.
+        budget = max(MIN_BUDGET, ref_stats.peak_partial_bytes // 3)
+        t0 = time.perf_counter()
+        prod, stats = spgemm(a, None, os.path.join(tmp, "p"),
+                             partial_budget_bytes=budget)
+        seconds = time.perf_counter() - t0
+        bit_identical = np.array_equal(materialize_dense(prod), ref_dense)
+        prod.close()
+        assert stats.spill_cycles >= 1, "budget squeeze forced no spill"
+        assert stats.peak_partial_bytes <= budget, \
+            f"accumulator held {stats.peak_partial_bytes} > budget {budget}"
+        assert bit_identical, "budgeted product is not bit-identical"
+
+        # optimized-A: the encoding must not leak into the product
+        ao = a.optimize(os.path.join(tmp, "a-opt"))
+        prod_o, stats_o = spgemm(ao, None, os.path.join(tmp, "p-opt"),
+                                 partial_budget_bytes=budget)
+        opt_identical = np.array_equal(materialize_dense(prod_o), ref_dense)
+        prod_o.close()
+        ao.close()
+        a.close()
+        assert opt_identical, "optimized-A product is not bit-identical"
+        assert stats_o.spill_cycles >= 1
+
+        rows.append({
+            "n": g.n_rows,
+            "nnz_a": g.nnz,
+            "product_nnz": stats.product_nnz,
+            "expansion_ratio": stats.product_nnz / g.nnz,
+            "partial_budget_bytes": int(budget),
+            "ref_peak_partial_bytes": ref_stats.peak_partial_bytes,
+            "peak_partial_bytes": stats.peak_partial_bytes,
+            "spill_cycles": stats.spill_cycles,
+            "merge_rounds": stats.merge_rounds,
+            "spilled_mb": stats.spilled_bytes / 2**20,
+            "seconds": seconds,
+            "products_per_s": stats.expanded_products / seconds,
+            "bit_identical": bool(bit_identical and oracle_ok
+                                  and opt_identical),
+            "quick": quick,
+        })
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+def main() -> List[Dict]:
+    rows = bench()
+    save("spgemm", rows)
+    print_csv("spgemm", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,13 @@ Compares a fresh ``benchmarks.run --json`` summary against the committed
   fewer h2d MB wherever packed planes reach the device (every engine but
   the host-decoded ``serial`` ablation).  A fresh summary with no ``-opt``
   rows fails outright — the compression path fell out of the bench.
+* (``spgemm`` section, written by the spgemm bench into the same engine
+  summary) the out-of-core SpGEMM correctness invariants break — product
+  no longer bit-identical to the oracle, the budget squeeze forced no
+  spill/merge cycle, or the accumulator held more than its declared
+  budget (all absolute, on the fresh run) — or its throughput drops
+  beyond tolerance versus the committed trajectory.  A fresh summary
+  with no ``spgemm`` section fails outright.
 
 With ``--runtime``, a fresh serving-runtime summary is additionally diffed
 against the committed ``BENCH_runtime.json``:
@@ -117,6 +124,41 @@ def compare(fresh: Dict, baseline: Dict, tolerance: float) -> List[str]:
                     f"for {raw_k[0]}/{raw_k[1]} "
                     f"({raw_e[metric]:.3f} -> {opt_e[metric]:.3f} MB; "
                     f"floor {OPT_SHRINK_FLOOR:.0%})")
+    return problems
+
+
+def compare_spgemm(fresh: Dict, baseline: Dict,
+                   tolerance: float) -> List[str]:
+    """SpGEMM regression messages (empty == gate passes).  Correctness
+    invariants (bit-identity, forced spill, budget ceiling) are absolute
+    on the fresh run; throughput is baseline-relative.  A baseline without
+    a ``spgemm`` section predates the bench, so only the absolute checks
+    apply."""
+    sg = fresh.get("spgemm")
+    if sg is None:
+        return ["fresh engine summary has no 'spgemm' section — run the "
+                "spgemm bench into the same --json-out"]
+    problems: List[str] = []
+    if not sg.get("bit_identical", False):
+        problems.append("spgemm product is no longer bit-identical to the "
+                        "oracle (raw / optimized-A / budgeted runs)")
+    if sg.get("spill_cycles", 0) < 1:
+        problems.append(
+            f"spgemm budget squeeze forced no spill/merge cycle "
+            f"(spill_cycles={sg.get('spill_cycles')}) — the out-of-core "
+            f"path fell off the measured run")
+    if sg["peak_partial_bytes"] > sg["partial_budget_bytes"]:
+        problems.append(
+            f"spgemm accumulator held {sg['peak_partial_bytes']} bytes, "
+            f"over its declared {sg['partial_budget_bytes']}-byte budget")
+    sg_b = baseline.get("spgemm")
+    if sg_b is not None and sg_b.get("products_per_s"):
+        thr_f, thr_b = sg["products_per_s"], sg_b["products_per_s"]
+        if thr_f < thr_b * (1.0 - tolerance):
+            problems.append(
+                f"spgemm throughput regressed: {thr_f:.3g} partial "
+                f"products/s vs baseline {thr_b:.3g} "
+                f"(floor {thr_b * (1 - tolerance):.3g})")
     return problems
 
 
@@ -261,11 +303,18 @@ def main(argv=None) -> int:
     fresh = _load_mode(args.fresh, args.mode)
     baseline = _load_mode(args.baseline, args.mode)
     problems = compare(fresh, baseline, args.tolerance)
+    problems += compare_spgemm(fresh, baseline, args.tolerance)
     gates = [f"overlap speedup {fresh['overlap_speedup_emulated']:.2f}x, "
              f"{len(fresh['engines'])} engine rows"]
     if fresh.get("opt_store_shrink_pct") is not None:
         gates.append(f"opt store {fresh['opt_store_shrink_pct']:.0f}% "
                      f"smaller")
+    sg = fresh.get("spgemm")
+    if sg:
+        gates.append(
+            f"spgemm {sg['spill_cycles']} spills under "
+            f"{sg['partial_budget_bytes'] // 1024} KiB budget, "
+            f"bit-identical")
     if args.runtime is not None:
         fresh_rt = _load_mode(args.runtime, args.mode)
         base_rt = _load_mode(args.runtime_baseline, args.mode)

@@ -44,6 +44,9 @@ BENCHES = [
     ("runtime_serving", "benchmarks.bench_runtime"),
     ("net_cluster", "benchmarks.bench_net"),
     ("engine", "benchmarks.bench_engine"),
+    # after "engine": write_engine_json replaces its mode block wholesale,
+    # while write_spgemm_json merges into it — this order keeps both
+    ("spgemm", "benchmarks.bench_spgemm"),
 ]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -185,6 +188,30 @@ def write_net_json(rows, out_path=None, quick=False) -> str:
     return path
 
 
+def write_spgemm_json(rows, out_path=None, quick=False) -> str:
+    """Distill the SpGEMM budget-vs-spill bench into the ``spgemm`` section
+    of BENCH_engine.json's mode block — merged *into* the block (the engine
+    bench writes the rest of it, possibly in the same run via a shared
+    ``--json-out``), never clobbering it."""
+    r = rows[0]
+    summary = {k: r[k] for k in (
+        "n", "nnz_a", "product_nnz", "partial_budget_bytes",
+        "peak_partial_bytes", "spill_cycles", "merge_rounds",
+        "products_per_s", "bit_identical")}
+    path = out_path or os.path.join(REPO_ROOT, "BENCH_engine.json")
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+        if "full" not in merged and "quick" not in merged:
+            merged = {"full": merged}
+    block = merged.setdefault("quick" if quick else "full", {})
+    block["spgemm"] = summary
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1)
+    return path
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -217,6 +244,9 @@ def main(argv=None) -> int:
                 print(f"[bench] wrote {out}")
             if args.json and name == "net_cluster" and rows:
                 out = write_net_json(rows, args.json_out, args.quick)
+                print(f"[bench] wrote {out}")
+            if args.json and name == "spgemm" and rows:
+                out = write_spgemm_json(rows, args.json_out, args.quick)
                 print(f"[bench] wrote {out}")
             print(f"[bench] {name}: ok ({time.time() - t0:.1f}s)\n")
         except Exception as e:  # noqa: BLE001

@@ -225,6 +225,10 @@ class SharedScanScheduler:
     def _submit_session(self, session: Session) -> Session:
         session.t_submit = time.monotonic()
         session.submit_clock = self.boundary_clock
+        if getattr(session, "needs_store", False):
+            # store-consuming tenants (SpGEMM) get the executor's serving
+            # store at submit time — specs stay portable across hosts
+            session.bind_store(getattr(self.sem, "store", None))
         if session.semiring != "plus_times":
             self._ring_queue.append(session)
             return session

@@ -300,6 +300,108 @@ class SSSPSession(Session):
             self.done = True
 
 
+class SpGEMMSession(Session):
+    """Semi-external SpGEMM as a long-running tenant: the serving store is
+    A, the product streams to a tenant-owned output ``TileStore`` path.
+
+    This is the one session kind whose work is *not* a function of the
+    shared wave product — SpGEMM consumes the store itself, not ``A @ X``.
+    It still rides the wave for scheduling: it contributes one zero column
+    (so admission, elasticity, retirement, failover and the wire protocol
+    all apply unchanged) and advances ``tile_rows_per_pass`` output tile
+    rows of the underlying :class:`repro.core.spgemm.SpGEMMJob` per shared
+    pass, so a giant product trickles out across passes instead of
+    stalling the wave.  ``needs_store`` makes the scheduler hand it the
+    executor's store at submit time (``bind_store``) — the spec stays
+    portable, and a failover replay on a survivor host rewrites the same
+    product bits to the same tenant-owned path (the job is deterministic).
+
+    ``result`` is the stats summary (int64: n_rows, n_cols, product_nnz,
+    spill_cycles, peak_partial_bytes, budget, tile_rows) for product mode,
+    or the per-vertex float64 triangle counts for ``mode="triangle"`` —
+    both plain ndarrays, so retirement streams over the wire unchanged.
+    """
+
+    needs_store = True
+
+    def __init__(self, out_path: Optional[str] = None,
+                 b_path: Optional[str] = None, *, mode: str = "product",
+                 budget_bytes: int = 64 << 20, tile_rows_per_pass: int = 8,
+                 chunk_batch: int = 64, b_cache_bytes: int = 0,
+                 optimize_out: bool = False, tenant_id: str = ""):
+        super().__init__(tenant_id)
+        if mode == "product" and not out_path:
+            raise ValueError("spgemm session needs a tenant-owned out_path")
+        self.out_path = out_path
+        self.b_path = b_path
+        self.mode = mode
+        self.budget_bytes = int(budget_bytes)
+        self.tile_rows_per_pass = int(tile_rows_per_pass)
+        self.chunk_batch = int(chunk_batch)
+        self.b_cache_bytes = int(b_cache_bytes)
+        self.optimize_out = bool(optimize_out)
+        self.stats = None
+        self._store = None
+        self._b_store = None   # opened here iff b_path was given
+        self._job = None
+        self._steps = None
+
+    def bind_store(self, store) -> None:
+        """Scheduler hook: receive the executor's serving store (A)."""
+        self._store = store
+
+    def x_columns(self) -> np.ndarray:
+        if self._store is None:
+            raise RuntimeError("spgemm session was not bound to a store — "
+                               "submit it through a store-backed scheduler")
+        return np.zeros((self._store.header["n_cols"], 1), np.float32)
+
+    def _start(self) -> None:
+        from repro.core.spgemm import SpGEMMJob
+        from repro.io.storage import TileStore
+        from repro.runtime.cache import HotChunkCache
+        if self._store is None:
+            raise RuntimeError("spgemm session was not bound to a store")
+        b = None
+        if self.b_path:
+            self._b_store = b = TileStore.open(self.b_path)
+        cache = (HotChunkCache(self.b_cache_bytes)
+                 if self.b_cache_bytes > 0 else None)
+        # use_async=False: no prefetch thread parked across pass boundaries
+        self._job = SpGEMMJob(
+            self._store, b, self.out_path, mode=self.mode,
+            partial_budget_bytes=self.budget_bytes,
+            chunk_batch=self.chunk_batch, cache=cache,
+            optimize_out=self.optimize_out, use_async=False)
+        self._steps = self._job.tile_rows()
+
+    def consume(self, y: np.ndarray) -> None:
+        # y is the wave product of our zero column — cadence, not data
+        if self._steps is None:
+            self._start()
+        self.iterations += 1
+        advanced = 0
+        try:
+            while True:
+                next(self._steps)
+                advanced += 1
+                if 0 < self.tile_rows_per_pass <= advanced:
+                    return
+        except StopIteration:
+            self._finish()
+
+    def _finish(self) -> None:
+        job = self._job
+        self.stats = job.stats
+        self.result = (job.tri if self.mode == "triangle"
+                       else job.stats.summary_array())
+        job.close()
+        if self._b_store is not None:
+            self._b_store.close()
+            self._b_store = None
+        self.done = True
+
+
 # ---------------------------------------------------------------------------
 # Portable session specs (the cross-host tier's unit of work)
 # ---------------------------------------------------------------------------
@@ -350,6 +452,27 @@ def _build_sssp(spec: "SessionSpec") -> Session:
                        tenant_id=spec.tenant_id)
 
 
+def _spgemm_kwargs(spec: "SessionSpec") -> dict:
+    p = spec.params
+    return dict(budget_bytes=int(p.get("budget_bytes", 64 << 20)),
+                tile_rows_per_pass=int(p.get("tile_rows_per_pass", 8)),
+                chunk_batch=int(p.get("chunk_batch", 64)),
+                b_cache_bytes=int(p.get("b_cache_bytes", 0)),
+                tenant_id=spec.tenant_id)
+
+
+def _build_spgemm(spec: "SessionSpec") -> Session:
+    p = spec.params
+    return SpGEMMSession(out_path=str(p["out"]), b_path=p.get("b"),
+                         mode="product",
+                         optimize_out=bool(p.get("optimize_out", False)),
+                         **_spgemm_kwargs(spec))
+
+
+def _build_triangle_count(spec: "SessionSpec") -> Session:
+    return SpGEMMSession(mode="triangle", **_spgemm_kwargs(spec))
+
+
 SESSION_KINDS: Dict[str, Callable[["SessionSpec"], Session]] = {
     "multiply": _build_multiply,
     "power_iteration": _build_power_iteration,
@@ -357,6 +480,8 @@ SESSION_KINDS: Dict[str, Callable[["SessionSpec"], Session]] = {
     "labelprop": _build_labelprop,
     "bfs": _build_bfs,
     "sssp": _build_sssp,
+    "spgemm": _build_spgemm,
+    "triangle_count": _build_triangle_count,
 }
 
 
@@ -461,3 +586,33 @@ class SessionSpec:
              ) -> "SessionSpec":
         return cls("sssp", tenant_id, {"n": n, "max_iters": max_iters},
                    {"sources": np.atleast_1d(np.asarray(sources, np.int64))})
+
+    @classmethod
+    def spgemm(cls, out: str, b: Optional[str] = None, *,
+               budget_bytes: int = 64 << 20, tile_rows_per_pass: int = 8,
+               chunk_batch: int = 64, b_cache_bytes: int = 0,
+               optimize_out: bool = False, tenant_id: str = ""
+               ) -> "SessionSpec":
+        """Semi-external ``A @ B`` into the tenant-owned store at ``out``.
+        ``b`` is a store *path* on the serving host (``None`` → B = the
+        serving store itself, i.e. A·A); no ndarray planes travel — the
+        matrices already live host-side, which is the whole point."""
+        return cls("spgemm", tenant_id,
+                   {"out": out, "b": b, "budget_bytes": budget_bytes,
+                    "tile_rows_per_pass": tile_rows_per_pass,
+                    "chunk_batch": chunk_batch,
+                    "b_cache_bytes": b_cache_bytes,
+                    "optimize_out": optimize_out}, {})
+
+    @classmethod
+    def triangle_count(cls, *, budget_bytes: int = 64 << 20,
+                       tile_rows_per_pass: int = 8, chunk_batch: int = 64,
+                       b_cache_bytes: int = 0, tenant_id: str = ""
+                       ) -> "SessionSpec":
+        """Per-vertex triangle counts of the (symmetric) serving store:
+        the masked A·A reduction — retires with the float64 count vector."""
+        return cls("triangle_count", tenant_id,
+                   {"budget_bytes": budget_bytes,
+                    "tile_rows_per_pass": tile_rows_per_pass,
+                    "chunk_batch": chunk_batch,
+                    "b_cache_bytes": b_cache_bytes}, {})

@@ -223,6 +223,32 @@ def test_submitter_stats_json_safe_with_common_gauges(submitter,
     assert stats["io_stats"]["bytes_read"] >= 0
 
 
+def test_submitter_serves_spgemm_sessions(submitter, api_store_path,
+                                          tmp_path):
+    """The spgemm kind flows through every Submitter unchanged: the ticket
+    carries the tenant-owned output-store path in its spec, retirement
+    returns the stats summary, and the product written at the out path is
+    bit-identical to a direct SpGEMMJob run over the same store (the job
+    is a deterministic function of (store bytes, budget))."""
+    from repro.core.spgemm import materialize_dense, spgemm
+
+    out = str(tmp_path / "tenant-product")
+    ticket = submitter.submit(SessionSpec.spgemm(
+        out, budget_bytes=1 << 20, tenant_id="g0"))
+    assert ticket.spec.params["out"] == out
+    submitter.drain(timeout=120)
+    assert ticket.done and ticket.error is None
+    summary = np.asarray(ticket.result)
+    with TileStore.open(api_store_path) as a:
+        direct, stats = spgemm(a, None, str(tmp_path / "direct"),
+                               partial_budget_bytes=1 << 20)
+    assert int(summary[2]) == stats.product_nnz
+    with TileStore.open(out) as got:
+        np.testing.assert_array_equal(materialize_dense(got),
+                                      materialize_dense(direct))
+    direct.close()
+
+
 def test_submitter_close_idempotent_then_submit_raises(api_store_path,
                                                        small_valued):
     spec = SessionSpec.multiply(np.ones(small_valued.n_cols, np.float32))

@@ -241,6 +241,28 @@ def test_session_spec_wire_roundtrip():
     assert session.tenant_id == "t1" and session.width == 1
 
 
+def test_spgemm_spec_wire_roundtrip(tmp_path):
+    """A spgemm spec ships no ndarray planes — the matrices live host-side;
+    only the kind, the tenant-owned out path and the budget knobs travel."""
+    out = str(tmp_path / "prod")
+    spec = SessionSpec.spgemm(out, b="/data/b-store", budget_bytes=1 << 20,
+                              tile_rows_per_pass=4, tenant_id="g1")
+    header, planes = spec.to_wire()
+    assert planes == []
+    buf = encode_frame({"spec": header}, planes)
+    rheader, rplanes = decode_frame(buf)
+    back = SessionSpec.from_wire(rheader["spec"], rplanes)
+    assert back.kind == "spgemm" and back.tenant_id == "g1"
+    assert back.params["out"] == out and back.params["b"] == "/data/b-store"
+    assert back.params["budget_bytes"] == 1 << 20
+    session = back.build()
+    assert session.out_path == out and not session.done
+    theader, tplanes = SessionSpec.triangle_count(tenant_id="g2").to_wire()
+    rh, rp = decode_frame(encode_frame({"spec": theader}, tplanes))
+    tri = SessionSpec.from_wire(rh["spec"], rp)
+    assert tri.kind == "triangle_count" and tri.build().mode == "triangle"
+
+
 def test_session_spec_rejects_unknown_kind_and_plane_mismatch():
     with pytest.raises(ValueError, match="unknown session kind"):
         SessionSpec("exec_arbitrary_code").build()

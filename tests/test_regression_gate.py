@@ -8,10 +8,21 @@ import pytest
 
 sys.path.insert(0, ".")  # benchmarks/ is a repo-root package, like the CI job
 from benchmarks.check_regression import (compare, compare_cluster,  # noqa: E402
-                                         compare_runtime, main)
+                                         compare_runtime, compare_spgemm,
+                                         main)
 
 
-def summary(speedup=1.6, h2d=26.0, opt_shrink=0.35):
+def spgemm_summary(bit_identical=True, spill_cycles=2, peak=500_000,
+                   budget=573_000, products_per_s=4.5e6):
+    return {
+        "n": 1024, "nnz_a": 6618, "product_nnz": 135_577,
+        "partial_budget_bytes": budget, "peak_partial_bytes": peak,
+        "spill_cycles": spill_cycles, "merge_rounds": 6,
+        "products_per_s": products_per_s, "bit_identical": bit_identical,
+    }
+
+
+def summary(speedup=1.6, h2d=26.0, opt_shrink=0.35, spgemm="default"):
     # every raw engine row ships with its optimized-store twin, shrunk by
     # ``opt_shrink`` on both byte metrics (the gate's 25% floor is absolute)
     rows = []
@@ -24,13 +35,18 @@ def summary(speedup=1.6, h2d=26.0, opt_shrink=0.35):
             rows.append(dict(rows[-1], engine=e + "-opt",
                              mb_streamed_per_pass=21.6 * (1 - opt_shrink),
                              h2d_mb_per_pass=h2d * (1 - opt_shrink)))
-    return {
+    s = {
         "p": 8,
         "engines": rows,
         "overlap_speedup_emulated": speedup,
         "h2d_index_saving_mb": 11.0,
         "opt_store_shrink_pct": 40.0,
     }
+    if spgemm == "default":
+        spgemm = spgemm_summary()
+    if spgemm is not None:
+        s["spgemm"] = spgemm
+    return s
 
 
 def partitioned_summary(speedup=1.8, resubmits=2, reassignments=1,
@@ -167,6 +183,59 @@ def test_main_exit_codes_and_mode_matching(tmp_path):
     lonely.write_text(json.dumps({"full": summary()}))
     with pytest.raises(SystemExit, match="quick"):
         main([str(fresh_path), str(lonely), "--mode", "quick"])
+
+
+def test_spgemm_gate_passes_within_tolerance():
+    base = summary()
+    ok = summary(spgemm=spgemm_summary(products_per_s=4.5e6 * 0.85))
+    assert compare_spgemm(ok, base, tolerance=0.2) == []
+
+
+def test_spgemm_gate_requires_fresh_section_tolerates_old_baseline():
+    # fresh without a spgemm section = the bench silently didn't run
+    assert any("no 'spgemm' section" in p for p in
+               compare_spgemm(summary(spgemm=None), summary(), tolerance=0.2))
+    # a pre-spgemm baseline only enforces the absolute checks
+    assert compare_spgemm(summary(), summary(spgemm=None), tolerance=0.2) == []
+
+
+def test_spgemm_gate_trips_on_broken_bit_identity():
+    sick = summary(spgemm=spgemm_summary(bit_identical=False))
+    assert any("bit-identical" in p for p in
+               compare_spgemm(sick, summary(), tolerance=0.2))
+
+
+def test_spgemm_gate_trips_when_no_spill_is_forced():
+    # absolute: a baseline that also stopped spilling cannot excuse it
+    inert = summary(spgemm=spgemm_summary(spill_cycles=0))
+    assert any("no spill/merge cycle" in p for p in
+               compare_spgemm(inert, inert, tolerance=0.2))
+
+
+def test_spgemm_gate_trips_when_budget_is_breached():
+    fat = summary(spgemm=spgemm_summary(peak=600_000, budget=573_000))
+    assert any("over its declared" in p for p in
+               compare_spgemm(fat, summary(), tolerance=0.2))
+
+
+def test_spgemm_gate_trips_on_throughput_regression():
+    slow = summary(spgemm=spgemm_summary(products_per_s=4.5e6 * 0.75))
+    problems = compare_spgemm(slow, summary(), tolerance=0.2)
+    assert len(problems) == 1 and "throughput regressed" in problems[0]
+
+
+def test_main_gates_spgemm_alongside_engine(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"quick": summary()}))
+    # a spgemm-only breakage must fail the combined engine gate
+    sick = tmp_path / "sick.json"
+    sick.write_text(json.dumps(
+        {"quick": summary(spgemm=spgemm_summary(bit_identical=False))}))
+    assert main([str(sick), str(base), "--mode", "quick"]) == 1
+    # and a missing section fails outright
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps({"quick": summary(spgemm=None)}))
+    assert main([str(bare), str(base), "--mode", "quick"]) == 1
 
 
 def test_runtime_gate_passes_within_tolerance():

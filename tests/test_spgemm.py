@@ -1,0 +1,301 @@
+"""Semi-external SpGEMM: the out-of-core sparse × sparse tentpole.
+
+The contract under test: the product of two ``TileStore``s is bit-identical
+to the dense oracle ``A @ B`` (exact arithmetic — integer-valued float32)
+across every storage encoding the stack serves — raw stores, optimized
+(column-relabeled, delta-compressed) stores, stores under a live delta
+overlay — and regardless of the partial-accumulator budget: when a tile
+row's partial exceeds its budget slice, the accumulator must spill sorted
+runs and heap-merge them back without changing a single output bit, with
+the peak bytes *held* never exceeding the declared budget.  The serving
+tier's `spgemm` / `triangle_count` session kinds must flow through the
+scheduler unchanged, each tenant owning its output store path.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.formats import COO, to_chunked
+from repro.core.sem import SEMConfig, SEMSpMM
+from repro.core.spgemm import (SpGEMMJob, materialize_dense, spgemm,
+                               triangle_count)
+from repro.core.spmm import spmm_chunked
+from repro.io.storage import GraphHandle, TileStore, UpdateBatch
+from repro.runtime import SharedScanScheduler
+from repro.runtime.session import SessionSpec, SpGEMMSession
+from repro.sparse.generate import rmat
+
+
+# ---------------------------------------------------------------------------
+# fixtures — integer-valued inputs keep every sum exact (the repo's standing
+# bit-identity contract; see tests/test_mutable.py)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def graph():
+    """~1k vertices, power-law, binary."""
+    return rmat(10, 8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def a_path(graph, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("spgemm") / "a")
+    TileStore.write(path, to_chunked(graph, T=256, C=64))
+    return path
+
+
+@pytest.fixture(scope="module")
+def dense_a(graph):
+    return graph.to_dense(np.float64)
+
+
+@pytest.fixture(scope="module")
+def aa_oracle(dense_a):
+    return (dense_a @ dense_a).astype(np.float32)
+
+
+def int_coo(n_rows, n_cols, nnz, seed):
+    r = np.random.default_rng(seed)
+    rows = r.integers(0, n_rows, nnz).astype(np.int64)
+    cols = r.integers(0, n_cols, nnz).astype(np.int64)
+    m = COO(n_rows, n_cols, rows, cols, None).dedup()
+    vals = r.integers(1, 6, m.nnz).astype(np.float32)
+    return m.with_values(vals)
+
+
+# ---------------------------------------------------------------------------
+# oracle identity, rectangular A @ B
+# ---------------------------------------------------------------------------
+def test_spgemm_matches_dense_oracle_rectangular(tmp_path):
+    a = int_coo(300, 200, 2500, seed=1)
+    b = int_coo(200, 150, 2000, seed=2)
+    pa, pb = str(tmp_path / "a"), str(tmp_path / "b")
+    TileStore.write(pa, to_chunked(a, T=64, C=32))
+    TileStore.write(pb, to_chunked(b, T=64, C=32))
+    with TileStore.open(pa) as sa, TileStore.open(pb) as sb:
+        prod, stats = spgemm(sa, sb, str(tmp_path / "p"))
+    oracle = (a.to_dense(np.float64) @ b.to_dense(np.float64)).astype(
+        np.float32)
+    assert np.array_equal(materialize_dense(prod), oracle)
+    assert stats.product_nnz == int(np.count_nonzero(oracle))
+    assert stats.spill_cycles == 0          # ample default budget
+    assert prod.header["n_rows"] == 300 and prod.header["n_cols"] == 150
+    prod.close()
+
+
+def test_budget_forces_spill_and_stays_bit_identical(a_path, aa_oracle,
+                                                     tmp_path):
+    with TileStore.open(a_path) as a:
+        _, ref = spgemm(a, None, str(tmp_path / "ref"),
+                        partial_budget_bytes=1 << 30)
+        assert ref.spill_cycles == 0
+        # product partials exceed the budget -> ≥ 1 spill/merge cycle, and
+        # the accumulator never holds more than the declared budget
+        budget = max(1 << 16, ref.peak_partial_bytes // 3)
+        prod, stats = spgemm(a, None, str(tmp_path / "p"),
+                             partial_budget_bytes=budget)
+    assert ref.peak_partial_bytes > budget   # the squeeze is real
+    assert stats.spill_cycles >= 1
+    assert stats.merge_rounds >= 1
+    assert stats.peak_partial_bytes <= budget
+    assert np.array_equal(materialize_dense(prod), aa_oracle)
+    prod.close()
+
+
+def test_optimized_stores_and_optimized_output(a_path, aa_oracle, tmp_path):
+    with TileStore.open(a_path) as a:
+        ao = a.optimize(str(tmp_path / "a-opt"))
+    # optimized A (relabeled columns must be mapped back to B-row space),
+    # and an optimize()d product — both bit-identical to the raw product
+    prod, _ = spgemm(ao, None, str(tmp_path / "p"),
+                     partial_budget_bytes=1 << 18)
+    assert np.array_equal(materialize_dense(prod), aa_oracle)
+    prod.close()
+    prod2, _ = spgemm(ao, None, str(tmp_path / "p2"),
+                      partial_budget_bytes=1 << 18, optimize_out=True)
+    assert prod2.header["meta_ints"] == 6    # really the optimized store
+    assert np.array_equal(materialize_dense(prod2), aa_oracle)
+    prod2.close()
+    ao.close()
+
+
+def test_delta_overlay_folds_into_both_operands(a_path, dense_a, tmp_path):
+    a = TileStore.open(a_path)
+    b = TileStore.open(a_path)    # same bytes, independent overlay
+    ha, hb = GraphHandle([a]), GraphHandle([b])
+    n = a.header["n_rows"]
+    r = np.random.default_rng(17)
+    ir = r.integers(0, n, 50).astype(np.int64)
+    ic = r.integers(0, n, 50).astype(np.int64)
+    ha.apply_updates(UpdateBatch.insert(ir, ic))
+    jr = r.integers(0, n, 30).astype(np.int64)
+    jc = r.integers(0, n, 30).astype(np.int64)
+    hb.apply_updates(UpdateBatch.insert(jr, jc, 2.0 * np.ones(30, np.float32)))
+    base = np.flatnonzero(dense_a.ravel())[:25]
+    hb.apply_updates(UpdateBatch.delete(base // n, base % n))
+    Ad = dense_a.copy()
+    np.add.at(Ad, (ir, ic), 1.0)
+    Bd = dense_a.copy()
+    np.add.at(Bd, (jr, jc), 2.0)
+    np.add.at(Bd, (base // n, base % n), -1.0)
+    prod, stats = spgemm(a, b, str(tmp_path / "p"),
+                         partial_budget_bytes=1 << 18)
+    assert stats.spill_cycles >= 1
+    assert np.array_equal(materialize_dense(prod), (Ad @ Bd).astype(np.float32))
+    prod.close()
+    a.close()
+    b.close()
+
+
+def test_medium_oracle_via_spmm_chunked_columns(small_graph, tmp_path):
+    """On the medium fixture the oracle is the repo's own SpMM kernel:
+    A @ (materialized B column block) == the product's column block."""
+    path = str(tmp_path / "a")
+    ct = to_chunked(small_graph, T=512, C=128)
+    TileStore.write(path, ct)
+    with TileStore.open(path) as a:
+        prod, stats = spgemm(a, None, str(tmp_path / "p"),
+                             partial_budget_bytes=1 << 20)
+    assert stats.spill_cycles >= 1
+    dense = materialize_dense(prod)
+    n = small_graph.n_rows
+    bdense = small_graph.to_dense(np.float32)
+    for lo in range(0, n, 1024):
+        cols = bdense[:, lo:lo + 1024]
+        assert np.array_equal(dense[:, lo:lo + 1024], spmm_chunked(ct, cols))
+    prod.close()
+
+
+# ---------------------------------------------------------------------------
+# triangle counting (masked A·A reduction, no product store)
+# ---------------------------------------------------------------------------
+def test_triangle_count_matches_masked_oracle(graph, tmp_path):
+    r = np.concatenate([graph.rows, graph.cols])
+    c = np.concatenate([graph.cols, graph.rows])
+    keep = r != c
+    sym = COO(graph.n_rows, graph.n_cols, r[keep], c[keep], None).dedup()
+    path = str(tmp_path / "sym")
+    TileStore.write(path, to_chunked(sym, T=256, C=64))
+    S = sym.to_dense(np.float64)
+    oracle = ((S @ S) * S).sum(axis=1) / 2.0
+    with TileStore.open(path) as st:
+        tri, stats = triangle_count(st, partial_budget_bytes=1 << 18)
+    assert stats.spill_cycles >= 1
+    assert np.array_equal(tri, oracle)
+    # each triangle is counted once per corner
+    assert float(tri.sum()) % 3.0 == 0.0
+
+
+# ---------------------------------------------------------------------------
+# input validation
+# ---------------------------------------------------------------------------
+def test_rejects_shard_views_and_dim_mismatch(a_path, tmp_path):
+    with TileStore.open(a_path) as a:
+        shard = a.partition_rows(2)[1]
+        with pytest.raises(ValueError, match="shard view"):
+            SpGEMMJob(shard, None, str(tmp_path / "p"))
+        small = int_coo(64, 64, 100, seed=4)
+        pb = str(tmp_path / "b")
+        TileStore.write(pb, to_chunked(small, T=32, C=16))
+        with TileStore.open(pb) as b:
+            with pytest.raises(ValueError, match="dimension mismatch"):
+                SpGEMMJob(a, b, str(tmp_path / "p"))
+    with TileStore.open(a_path) as a:
+        with pytest.raises(ValueError, match="out_path"):
+            SpGEMMJob(a, None, None)
+        with pytest.raises(ValueError, match="unknown spgemm mode"):
+            SpGEMMJob(a, None, None, mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# the serving tier: spgemm / triangle_count session kinds
+# ---------------------------------------------------------------------------
+def test_spgemm_session_through_scheduler(a_path, aa_oracle, tmp_path):
+    out = str(tmp_path / "tenant-product")
+    with SharedScanScheduler(
+            SEMSpMM(TileStore.open(a_path), SEMConfig(chunk_batch=64))
+            ) as sched:
+        ticket = sched.submit(SessionSpec.spgemm(
+            out, budget_bytes=1 << 18, tile_rows_per_pass=2,
+            tenant_id="spgemm-0"))
+        passes = 0
+        while not sched.idle:
+            assert sched.run_pass() is not None
+            passes += 1
+        assert ticket.done and ticket.error is None
+        # trickled: 4 tile rows at 2/pass needs > 1 pass
+        assert passes > 1 and ticket.iterations == passes
+        # summary: n_rows, n_cols, product_nnz, spills, peak, budget, trows
+        summary = ticket.result
+        assert summary.dtype == np.int64
+        assert summary[2] == int(np.count_nonzero(aa_oracle))
+        assert summary[3] >= 1                      # forced spill
+        assert summary[4] <= summary[5]             # peak ≤ budget
+    with TileStore.open(out) as prod:
+        assert np.array_equal(materialize_dense(prod), aa_oracle)
+
+
+def test_spgemm_session_with_explicit_b_store(a_path, tmp_path):
+    """B given as a host-side store *path* in the spec params."""
+    b = int_coo(1024, 320, 4000, seed=9)
+    pb = str(tmp_path / "b")
+    TileStore.write(pb, to_chunked(b, T=256, C=64))
+    out = str(tmp_path / "p")
+    with SharedScanScheduler(
+            SEMSpMM(TileStore.open(a_path), SEMConfig(chunk_batch=64))
+            ) as sched:
+        ticket = sched.submit(SessionSpec.spgemm(out, b=pb,
+                                                 tile_rows_per_pass=0))
+        while not sched.idle:
+            sched.run_pass()
+        assert ticket.done and ticket.iterations == 1   # 0 = all in one pass
+    with TileStore.open(a_path) as a, TileStore.open(out) as prod:
+        oracle = (materialize_dense(a).astype(np.float64)
+                  @ b.to_dense(np.float64)).astype(np.float32)
+        assert np.array_equal(materialize_dense(prod), oracle)
+
+
+def test_triangle_session_and_unbound_error(a_path, graph, tmp_path):
+    sess = SpGEMMSession(out_path=str(tmp_path / "x"))
+    with pytest.raises(RuntimeError, match="not bound"):
+        sess.x_columns()
+    r = np.concatenate([graph.rows, graph.cols])
+    c = np.concatenate([graph.cols, graph.rows])
+    keep = r != c
+    sym = COO(graph.n_rows, graph.n_cols, r[keep], c[keep], None).dedup()
+    path = str(tmp_path / "sym")
+    TileStore.write(path, to_chunked(sym, T=256, C=64))
+    S = sym.to_dense(np.float64)
+    oracle = ((S @ S) * S).sum(axis=1) / 2.0
+    with SharedScanScheduler(
+            SEMSpMM(TileStore.open(path), SEMConfig(chunk_batch=64))
+            ) as sched:
+        ticket = sched.submit(SessionSpec.triangle_count(
+            budget_bytes=1 << 18, tenant_id="tri-0"))
+        while not sched.idle:
+            sched.run_pass()
+        assert ticket.done
+        assert np.array_equal(ticket.result, oracle)
+
+
+def test_spgemm_rides_alongside_spmm_tenants(a_path, dense_a, tmp_path):
+    """A SpGEMM tenant shares the wave with ordinary multiply tenants —
+    neither disturbs the other's results."""
+    out = str(tmp_path / "p")
+    x = np.round(np.random.default_rng(5).standard_normal(
+        (dense_a.shape[0], 2)) * 3).astype(np.float32)
+    with SharedScanScheduler(
+            SEMSpMM(TileStore.open(a_path), SEMConfig(chunk_batch=64))
+            ) as sched:
+        tg = sched.submit(SessionSpec.spgemm(out, budget_bytes=1 << 18,
+                                             tile_rows_per_pass=1))
+        tm = sched.submit(SessionSpec.multiply(x))
+        while not sched.idle:
+            sched.run_pass()
+        assert tg.done and tm.done
+    with TileStore.open(out) as prod:
+        assert np.array_equal(
+            materialize_dense(prod),
+            (dense_a @ dense_a).astype(np.float32))
+    oracle_y = (dense_a @ x.astype(np.float64)).astype(np.float32)
+    assert np.array_equal(tm.result, oracle_y)
